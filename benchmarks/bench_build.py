@@ -1,0 +1,67 @@
+"""Paper Figs. 9-13: index-construction time.
+
+  * Fig 9/10: build time + stage breakdown vs #workers, per mode
+    (serial ~ ADS+, paris, paris+). The paper's claim: ParIS+ fully hides
+    tree-construction CPU time behind ingest I/O at >=6 workers; here the
+    analogue is overlap_efficiency -> 1 and construct_time -> ~0 at the
+    epoch boundary (ParIS+ presorts during ingest).
+  * Fig 11: double-buffer (chunk) size sweep.
+  * Fig 12/13: dataset-size scaling per mode.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, dataset
+from repro.core import PipelineBuilder, SeriesSource
+
+
+def _build(raw, mode, workers=4, chunk=8192, mem_limit=None):
+    src = SeriesSource.from_array(raw, chunk_series=chunk)
+    b = PipelineBuilder(mode=mode, n_workers=workers,
+                        mem_limit_series=mem_limit)
+    _, stats = b.build(src)
+    return stats
+
+
+def run(quick: bool = False):
+    rows = []
+    n = 30_000 if quick else 200_000
+    raw = dataset(n, 256)
+
+    # Fig 9/10: workers sweep x mode (stage breakdown in `derived`)
+    for mode in ("serial", "paris", "paris+"):
+        for workers in ([2] if quick else [1, 2, 4, 6]):
+            if mode == "serial" and workers > 1:
+                continue
+            stats = _build(raw, mode, workers=workers,
+                           mem_limit=n // 3)
+            derived = (
+                f"read={stats.read_time:.3f}s "
+                f"convert={stats.convert_time:.3f}s "
+                f"construct={stats.construct_time:.3f}s "
+                f"flush={stats.flush_time:.3f}s "
+                f"overlap={stats.overlap_efficiency:.2f} "
+                f"series_per_s={n / stats.total_time:.0f}")
+            rows.append((f"fig9_build_{mode}_w{workers}",
+                         stats.total_time * 1e6, derived))
+
+    # Fig 11: double-buffer size sweep (ParIS+)
+    for chunk in ([4096] if quick else [1024, 4096, 16384, 65536]):
+        stats = _build(raw, "paris+", workers=4, chunk=chunk)
+        rows.append((f"fig11_buffer_{chunk}", stats.total_time * 1e6,
+                     f"series_per_s={n / stats.total_time:.0f}"))
+
+    # Fig 12: dataset size sweep
+    for size in ([10_000, 30_000] if quick else [50_000, 100_000, 200_000]):
+        raw_s = dataset(size, 256)
+        for mode in ("serial", "paris+"):
+            stats = _build(raw_s, mode, workers=4)
+            rows.append((f"fig12_size_{size}_{mode}",
+                         stats.total_time * 1e6,
+                         f"series_per_s={size / stats.total_time:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

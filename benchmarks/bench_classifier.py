@@ -1,0 +1,33 @@
+"""Paper Fig. 18: time for a k-NN classifier to classify one object,
+using the index (ParIS+) vs the serial scan baseline."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import dataset, queries, timeit
+from repro.core import build_index
+from repro.core.classifier import KnnClassifier
+
+
+def run(quick: bool = False):
+    rows = []
+    n = 20_000 if quick else 100_000
+    raw = dataset(n, 256)
+    labels = np.random.default_rng(0).integers(0, 10, n)
+    index = build_index(jnp.asarray(raw))
+    clf = KnnClassifier(index, labels, k=1)
+    q = queries(1, seed=3)[0]
+    us_idx = timeit(lambda: clf.predict(q), repeats=3, warmup=1)
+    us_brute = timeit(lambda: clf.predict_brute(q), repeats=3, warmup=1)
+    agree = clf.predict(q) == clf.predict_brute(q)
+    rows.append(("fig18_classifier_paris+", us_idx, f"agree={agree}"))
+    rows.append(("fig18_classifier_brute", us_brute,
+                 f"speedup={us_brute / us_idx:.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: timing, dataset cache, CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import numpy as np
+
+Row = Tuple[str, float, str]  # (name, us_per_call, derived)
+
+
+def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds (blocks on jax outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) * 1e6
+
+
+_DATASETS = {}
+
+
+def dataset(n: int, length: int = 256, seed: int = 0) -> np.ndarray:
+    key = (n, length, seed)
+    if key not in _DATASETS:
+        from repro.core import random_walk
+        _DATASETS[key] = random_walk(n, length, seed)
+    return _DATASETS[key]
+
+
+def queries(k: int, length: int = 256, seed: int = 99):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal(length).cumsum(), jnp.float32)
+            for _ in range(k)]
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")

@@ -1,0 +1,68 @@
+"""Render the dry-run artifacts into the EXPERIMENTS.md roofline tables."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HW_NOTE = ("v5e/chip: 197 TF/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI")
+
+
+def load(outdir: str = "experiments/dryrun"):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def table(outdir: str = "experiments/dryrun", mesh: str = "single") -> str:
+    rows = []
+    header = ("| arch | shape | compute s | memory s | collective s | "
+              "dominant | peak GiB/dev | HLO GFLOP/dev | MODEL/HLO flops | "
+              "note |")
+    sep = "|" + "---|" * 10
+    rows.append(header)
+    rows.append(sep)
+    for r in load(outdir):
+        if r.get("mesh") != mesh:
+            continue
+        arch, shape = r["arch"], r["shape"]
+        if r["status"] == "skipped":
+            rows.append(f"| {arch} | {shape} | — | — | — | — | — | — | — | "
+                        f"skipped: {r['reason']} |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {arch} | {shape} | — | — | — | — | — | — | — | "
+                        f"ERROR: {r['error'][:60]} |")
+            continue
+        ro = r["roofline"]
+        ratio = r.get("model_flops_ratio")
+        rows.append(
+            f"| {arch} | {shape} | {ro['compute_s']:.4f} | "
+            f"{ro['memory_s']:.4f} | {ro['collective_s']:.4f} | "
+            f"{ro['dominant'].replace('_s','')} | "
+            f"{fmt_bytes(r['memory']['peak_estimate_bytes'])} | "
+            f"{ro['flops'] / 1e9:.0f} | "
+            f"{'' if ratio is None else f'{ratio:.2f}'} | |")
+    return "\n".join(rows)
+
+
+def run(quick: bool = False):
+    recs = load()
+    ok = sum(1 for r in recs if r.get("status") == "ok")
+    skipped = sum(1 for r in recs if r.get("status") == "skipped")
+    err = sum(1 for r in recs if r.get("status") == "error")
+    return [("dryrun_cells", 0.0,
+             f"ok={ok} skipped={skipped} error={err}")]
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    print(table(mesh=mesh))

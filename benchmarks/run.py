@@ -1,0 +1,49 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see each module's docstring
+for the paper mapping). ``--quick`` shrinks datasets for CI-speed runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small datasets (fast smoke run)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (e.g. query,build)")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_build, bench_classifier, bench_lower_bound,
+                            bench_pruning, bench_query, roofline_table)
+    from benchmarks.common import emit
+
+    benches = {
+        "lower_bound": bench_lower_bound.run,  # paper Table 1
+        "build": bench_build.run,  # paper Figs 9-13
+        "query": bench_query.run,  # paper Figs 14-17/19
+        "pruning": bench_pruning.run,  # paper Fig 20
+        "classifier": bench_classifier.run,  # paper Fig 18
+        "roofline": roofline_table.run,  # TPU dry-run summary
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            emit(fn(quick=args.quick))
+        except Exception as e:  # keep the harness going
+            print(f"{name}_FAILED,0.0,{type(e).__name__}: {e}",
+                  file=sys.stdout)
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

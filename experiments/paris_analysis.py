@@ -1,0 +1,86 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Per-round roofline for the paris/search cell.
+
+The exact-search candidate loop is data-dependent (early exit), so XLA
+cannot annotate a trip count and the whole-program roofline counts the body
+once. This script separates:
+
+  * the LBC phase (main computation): one vectorized lower-bound pass +
+    local sort — paid once per query;
+  * the RDC round body: gather round_size raw series + batched ED + BSF
+    all-reduce — paid `rounds` times, where rounds is workload-dependent;
+    the CPU benchmarks measure the pruning fraction on the paper's
+    random-walk workload (~1-4% of N read => rounds ~= frac * N_local /
+    round_size).
+
+Outputs the per-query roofline model as a function of the measured pruning
+fraction for the baseline and each variant.
+"""
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import roofline as R  # noqa: E402
+from repro.launch import specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def analyze_paris(round_size=None, batch_queries=0, label="baseline",
+                  select="sort"):
+    mesh = make_production_mesh()
+    cell = specs.build_paris_cell("search", mesh, round_size=round_size,
+                                  batch_queries=batch_queries, select=select)
+    comp = specs.lower_cell(cell, mesh).compile()
+    text = comp.as_text()
+    comps = R.parse_hlo(text)
+    full = R.analyze(text, mesh.size)
+    # isolate the unknown-trip while body: per-round terms
+    body_terms = dict(flops=0.0, hbm=0.0, coll=0.0, coll_count=0)
+    for name in full.unknown_trip_bodies:
+        body = comps.get(name)
+        if body is None or "region" not in name:
+            continue
+        for ins in body.instrs:
+            if ins.op in ("dot", "convolution"):
+                out = 1
+                for _, sh in R._parse_shapes(ins.result_type):
+                    for d in sh:
+                        out *= d
+                body_terms["flops"] += 2.0 * out  # contraction folded in out
+            if ins.op in R._COLLECTIVES:
+                b = sum(R._bytes_of(body.shapes.get(o, ""))
+                        for o in R._operands(ins))
+                n = R._group_size(ins, mesh.size)
+                body_terms["coll"] += 2.0 * (n - 1) / n * b
+                body_terms["coll_count"] += 1
+            if ins.op not in R._SKIP_BYTES_OPS and ins.op != "while":
+                body_terms["hbm"] += R._op_hbm_bytes(ins, body, comps)
+    q = max(batch_queries, 1)
+    n_local = cell.meta["num_series"] // mesh.size
+    rs = round_size or 4096
+    print(f"--- {label} (round={rs}, Q={q}) n_local={n_local}")
+    print(f"  LBC (once/query): hbm={full.hbm_bytes / q / 1e6:.2f} MB"
+          f" -> {full.hbm_bytes / q / R.HBM_BW * 1e6:.1f} us")
+    print(f"  per round: hbm={body_terms['hbm'] / q / 1e6:.3f} MB"
+          f" coll={body_terms['coll'] / q / 1e3:.1f} KB"
+          f" coll_ops={body_terms['coll_count']}")
+    for frac in (0.01, 0.04):
+        rounds = max(frac * n_local / rs, 1.0)
+        total_s = (full.hbm_bytes / q / R.HBM_BW
+                   + rounds * (body_terms["hbm"] / q / R.HBM_BW
+                               + body_terms["coll"] / q / R.ICI_BW)
+                   # collective latency: ~1us/hop per op per round
+                   + rounds * body_terms["coll_count"] / q * 1e-6 * 10)
+        print(f"  @pruning-read {frac:.0%}: rounds={rounds:.1f} "
+              f"per-query roofline ~{total_s * 1e6:.0f} us "
+              f"({1.0 / total_s:.0f} qps/pod)")
+    return full, body_terms
+
+
+if __name__ == "__main__":
+    analyze_paris(label="baseline")
+    analyze_paris(round_size=16384, label="opt1_round16k")
+    analyze_paris(batch_queries=16, label="opt2_batch16")
+    analyze_paris(batch_queries=16, select="topk", label="opt3_batch16_topk")

@@ -1,0 +1,27 @@
+"""The paper's own workload: ParIS+ index over a 100M x 256 random-walk
+dataset (the paper's default synthetic benchmark scaled to the pod), with
+w=16 segments and 256-symbol cardinality. Used by the dry-run to lower the
+distributed search/build steps on the production mesh."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ParisConfig:
+    name: str = "paris"
+    family: str = "index"
+    num_series: int = 100_000_000  # 100M series (paper's 100GB dataset)
+    series_length: int = 256
+    segments: int = 16
+    cardinality: int = 256
+    queries_per_batch: int = 1
+    round_size: int = 4096
+    leaf_cap: int = 256
+
+
+CONFIG = ParisConfig()
+
+
+def smoke_config() -> ParisConfig:
+    return ParisConfig(name="paris-smoke", num_series=4096, series_length=64,
+                       segments=8, round_size=256, leaf_cap=32)

@@ -1,0 +1,21 @@
+"""ParIS+ core: iSAX math, the flat CSR index, search, build, distribution."""
+
+from repro.core.index import ParISIndex, build_index, assemble_index
+from repro.core.search import (
+    SearchConfig,
+    SearchResult,
+    approx_search,
+    brute_force,
+    exact_knn,
+    exact_search,
+    nb_exact_search,
+)
+from repro.core.build_pipeline import BuildStats, PipelineBuilder
+from repro.core.datagen import SeriesSource, random_walk
+
+__all__ = [
+    "ParISIndex", "build_index", "assemble_index",
+    "SearchConfig", "SearchResult", "approx_search", "brute_force",
+    "exact_knn", "exact_search", "nb_exact_search",
+    "BuildStats", "PipelineBuilder", "SeriesSource", "random_walk",
+]

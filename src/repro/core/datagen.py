@@ -1,0 +1,82 @@
+"""Dataset generation/loading for the paper's experiments.
+
+The paper's synthetic benchmark is a Gaussian random walk ("has been shown to
+model real-world financial data" — used in [11,42,46,50,53]); real datasets
+(Seismic, SALD) are not redistributable, so benchmarks accept any float32
+(N, n) memmap/array through :class:`SeriesSource`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Iterator, Optional
+
+import numpy as np
+
+
+def random_walk(
+    num_series: int, length: int = 256, seed: int = 0, chunk: int = 65536
+) -> np.ndarray:
+    """Paper's generator: steps ~ N(0,1), cumulatively summed per series."""
+    rng = np.random.default_rng(seed)
+    out = np.empty((num_series, length), np.float32)
+    for s in range(0, num_series, chunk):
+        e = min(s + chunk, num_series)
+        out[s:e] = rng.standard_normal((e - s, length), np.float32).cumsum(axis=1)
+    return out
+
+
+def write_dataset(path: str, num_series: int, length: int = 256, seed: int = 0,
+                  chunk: int = 65536) -> None:
+    """Stream a random-walk dataset to a raw float32 file (the 'disk file')."""
+    rng = np.random.default_rng(seed)
+    with open(path, "wb") as f:
+        for s in range(0, num_series, chunk):
+            e = min(s + chunk, num_series)
+            f.write(
+                rng.standard_normal((e - s, length), np.float32)
+                .cumsum(axis=1).astype(np.float32).tobytes()
+            )
+
+
+@dataclasses.dataclass
+class SeriesSource:
+    """Chunked reader over the raw data file (what the Coordinator reads).
+
+    ``read(i)`` returns (chunk ndarray, start offset); chunks are fixed-size
+    except the last. Backed by an in-memory array or a np.memmap.
+    """
+
+    data: np.ndarray  # (N, n) float32, file order
+    chunk_series: int = 8192
+
+    @classmethod
+    def from_array(cls, arr, chunk_series: int = 8192) -> "SeriesSource":
+        return cls(np.asarray(arr, np.float32), chunk_series)
+
+    @classmethod
+    def from_file(cls, path: str, length: int = 256,
+                  chunk_series: int = 8192) -> "SeriesSource":
+        n_bytes = os.path.getsize(path)
+        num = n_bytes // (4 * length)
+        mm = np.memmap(path, np.float32, "r", shape=(num, length))
+        return cls(mm, chunk_series)
+
+    @property
+    def num_series(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def length(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def num_chunks(self) -> int:
+        return -(-self.num_series // self.chunk_series)
+
+    def read(self, i: int):
+        s = i * self.chunk_series
+        e = min(s + self.chunk_series, self.num_series)
+        # np.array(...) forces the actual "disk read" (memmap page-in + copy).
+        return np.array(self.data[s:e]), s

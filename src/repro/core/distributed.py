@@ -1,0 +1,350 @@
+"""Mesh-distributed ParIS+ search and build (shard_map over the pod mesh).
+
+Paper -> pod mapping (DESIGN.md §2):
+
+  * 24 cores -> up to 512 devices; the SAX array, the (index-ordered) raw
+    data, and the position map are sharded along N over every mesh axis — each
+    device plays the role of one LBC+RDC worker pair over its partition.
+  * the shared BSF (one atomically-updated float) -> a per-round
+    ``all-reduce(min)`` over the mesh: each round every device distances one
+    tile of its own sorted candidate list, then the BSF is globally agreed
+    before the next round. Round size trades collective latency against
+    pruning freshness — the TPU analogue of the paper's atomic-update
+    frequency (hillclimbed in EXPERIMENTS.md §Perf).
+  * nb-ParIS+ (local BSFs, Fig. 8) -> ``shared_bsf=False``: devices scan
+    independently and agree only once at the end. Reproduces the Fig. 20
+    pruning-effort gap at mesh scale.
+  * early termination: the *global* minimum unprocessed lower bound is
+    compared with the BSF, so the while_loop trip count is identical on every
+    device (collectives inside the loop stay aligned).
+
+Raw-data placement: the distributed index stores raw series in *index order*
+(``raw_sorted = raw[pos]``), co-locating every candidate's raw data with its
+summarization shard — the distributed analogue of the paper's sorted
+candidate list turning random disk reads into sequential ones; no cross-device
+gather is needed in the hot loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import isax
+from repro.core.index import ParISIndex
+from repro.core.search import SearchResult
+from repro.kernels import ops
+
+INF = jnp.float32(jnp.inf)
+IMAX = jnp.int32(2**31 - 1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DistIndex:
+    """Index arrays laid out for the mesh: all sharded along N (axis 0)."""
+
+    sax: jax.Array  # (N, w) uint8, index order
+    raw_sorted: jax.Array  # (N, n) f32, index order (co-located with sax)
+    pos: jax.Array  # (N,) int32, index order -> file offset
+    series_length: int = dataclasses.field(metadata=dict(static=True))
+    segments: int = dataclasses.field(metadata=dict(static=True))
+    cardinality: int = dataclasses.field(metadata=dict(static=True))
+
+
+def dist_index_from(index: ParISIndex, num_shards: int) -> DistIndex:
+    """Pad N to the shard count and materialize index-ordered raw data."""
+    n = index.num_series
+    padded = -(-n // num_shards) * num_shards
+    pad = padded - n
+    sax = jnp.pad(index.sax, ((0, pad), (0, 0)))
+    pos = jnp.pad(index.pos, (0, pad), constant_values=0)
+    raw_sorted = jnp.take(index.raw, index.pos, axis=0)
+    if pad:
+        # Padded rows: +BIG raw values so their distance can never win.
+        filler = jnp.full((pad, index.series_length), 1e9, index.raw.dtype)
+        raw_sorted = jnp.concatenate([raw_sorted, filler], axis=0)
+    return DistIndex(
+        sax=sax,
+        raw_sorted=raw_sorted,
+        pos=pos,
+        series_length=index.series_length,
+        segments=index.segments,
+        cardinality=index.cardinality,
+    )
+
+
+def index_shardings(mesh: Mesh, axes: Sequence[str]) -> DistIndex:
+    """NamedShardings (as a DistIndex-shaped pytree) for placement/dry-run."""
+    spec = P(tuple(axes))
+    row = NamedSharding(mesh, P(tuple(axes), None))
+    vec = NamedSharding(mesh, spec)
+    return DistIndex(sax=row, raw_sorted=row, pos=vec,
+                     series_length=0, segments=0, cardinality=0)
+
+
+def _local_exact_search(
+    sax_l: jax.Array,
+    raw_l: jax.Array,
+    pos_l: jax.Array,
+    query: jax.Array,
+    *,
+    series_length: int,
+    segments: int,
+    cardinality: int,
+    round_size: int,
+    leaf_cap: int,
+    shared_bsf: bool,
+    axis_names: tuple,
+    impl: str,
+    select: str = "sort",
+) -> SearchResult:
+    """Per-device body (runs under shard_map); collectives over axis_names."""
+    n_local = sax_l.shape[0]
+    q = isax.znorm(query)
+    qp = isax.paa(q, segments)
+    bpp = isax.padded_breakpoints(cardinality)
+
+    def gmin(x):
+        for ax in axis_names:
+            x = jax.lax.pmin(x, ax)
+        return x
+
+    def gsum(x):
+        for ax in axis_names:
+            x = jax.lax.psum(x, ax)
+        return x
+
+    # Approximate search: every device scans its first leaf_cap entries in
+    # leaf order; the global pmin is at least as good as one leaf's scan.
+    cap = min(leaf_cap, n_local)
+    d0 = ops.euclid_sq(q, raw_l[:cap], impl=impl)
+    j0 = jnp.argmin(d0)
+    bsf0, bsfpos0 = d0[j0], pos_l[j0]
+    gb = gmin(bsf0)
+    bsfpos0 = jnp.where(bsf0 <= gb, bsfpos0, IMAX)
+    bsf0 = gb
+    bsfpos0 = gmin(bsfpos0)
+
+    # LBC phase on the local shard. ParIS+ sorts its candidate list (enables
+    # wholesale early termination); nb- scans in SAX order (Alg. 7/8).
+    # select="topk" (beyond-paper, §Perf): the paper sorts the *candidate
+    # list* — a full argsort of every local lower bound is the dominant LBC
+    # cost at pod scale. Partial selection keeps only the smallest K bounds
+    # (K = max(n/16, round)); exactness is preserved by a fallback pass
+    # over the remainder that only runs if the K-th bound still beats the
+    # BSF when the candidate list is exhausted (rare: reads are ~1-4%).
+    lb = ops.lower_bound_sq(qp, sax_l, bpp, series_length, impl=impl)
+    if shared_bsf and select == "topk":
+        k_sel = min(max(n_local // 16, round_size), n_local)
+        neg, order = jax.lax.top_k(-lb, k_sel)
+        order = order.astype(jnp.int32)
+        lb_sorted = -neg
+        sel_len = k_sel
+    elif shared_bsf:
+        order = jnp.argsort(lb).astype(jnp.int32)
+        lb_sorted = jnp.take(lb, order, axis=0)
+        sel_len = n_local
+    else:
+        order = jnp.arange(n_local, dtype=jnp.int32)
+        lb_sorted = lb
+        sel_len = n_local
+    n_rounds = -(-sel_len // round_size)
+    padded = n_rounds * round_size
+    if padded > sel_len:
+        order = jnp.concatenate(
+            [order, jnp.zeros(padded - sel_len, jnp.int32)])
+        lb_sorted = jnp.concatenate(
+            [lb_sorted, jnp.full(padded - sel_len, INF)])
+
+    def cond(st):
+        r, bsf, *_ = st
+        nxt = jax.lax.dynamic_index_in_dim(
+            lb_sorted, r * round_size, keepdims=False)
+        # Global early stop: run while ANY device still has live candidates,
+        # so the while_loop trip count (and the collectives inside) stay
+        # aligned across devices. In shared mode bsf is globally equal, so
+        # gmin(nxt) < bsf is exactly "any device live"; in nb- mode each
+        # device has its own bsf and we reduce the liveness bit instead.
+        if shared_bsf:
+            live = gmin(nxt) < bsf
+        else:
+            # Unsorted list: a high next-lb proves nothing about the rest, so
+            # nb- has no early exit — it scans every round (like Alg. 8).
+            live = True
+        return (r < n_rounds) & live
+
+    def body(st):
+        r, bsf, bsfpos, reads, updates = st
+        idx = jax.lax.dynamic_slice_in_dim(order, r * round_size, round_size)
+        lbs = jax.lax.dynamic_slice_in_dim(lb_sorted, r * round_size,
+                                           round_size)
+        mask = lbs < bsf
+        raws = jnp.take(raw_l, idx, axis=0)
+        d = jnp.where(mask, ops.euclid_sq(q, raws, impl=impl), INF)
+        j = jnp.argmin(d)
+        cand_pos = jnp.take(pos_l, idx, axis=0)
+        better = d[j] < bsf
+        bsf_new = jnp.where(better, d[j], bsf)
+        pos_new = jnp.where(better, cand_pos[j], bsfpos)
+        if shared_bsf:
+            gb_new = gmin(bsf_new)
+            pos_new = jnp.where(bsf_new <= gb_new, pos_new, IMAX)
+            pos_new = gmin(pos_new)
+            bsf_new = gb_new
+        return (r + 1, bsf_new, pos_new, reads + jnp.sum(mask),
+                updates + better.astype(jnp.int32))
+
+    st0 = (jnp.int32(0), bsf0, bsfpos0.astype(jnp.int32),
+           jnp.int32(cap), jnp.int32(0))
+    r, bsf, bsfpos, reads, updates = jax.lax.while_loop(cond, body, st0)
+
+    if shared_bsf and select == "topk" and sel_len < n_local:
+        # Fallback for exactness: if the truncated candidate list was
+        # exhausted while its worst bound still beat the BSF, unselected
+        # series might qualify — scan the full shard in SAX order with
+        # BSF pruning. Globally gated so collectives stay aligned.
+        kth = lb_sorted[sel_len - 1]
+        need = gmin(jnp.where(kth < bsf, 0, 1)) < 1
+        all_rounds = -(-n_local // round_size)
+        pad_all = all_rounds * round_size
+        idx_all = jnp.arange(pad_all, dtype=jnp.int32) % n_local
+        lb_all = jnp.concatenate(
+            [lb, jnp.full(pad_all - n_local, INF)]) \
+            if pad_all > n_local else lb
+
+        def fcond(st):
+            r2, bsf2, *_ = st
+            live = gmin(jnp.where(r2 < all_rounds, 0, 1)) < 1
+            return live & need
+
+        def fbody(st):
+            r2, bsf2, pos2, reads2, upd2 = st
+            idx = jax.lax.dynamic_slice_in_dim(idx_all, r2 * round_size,
+                                               round_size)
+            lbs = jax.lax.dynamic_slice_in_dim(lb_all, r2 * round_size,
+                                               round_size)
+            mask = lbs < bsf2
+            raws = jnp.take(raw_l, idx, axis=0)
+            d = jnp.where(mask, ops.euclid_sq(q, raws, impl=impl), INF)
+            j = jnp.argmin(d)
+            cand = jnp.take(pos_l, idx, axis=0)
+            better = d[j] < bsf2
+            bsf_new = jnp.where(better, d[j], bsf2)
+            pos_new = jnp.where(better, cand[j], pos2)
+            gb2 = gmin(bsf_new)
+            pos_new = jnp.where(bsf_new <= gb2, pos_new, IMAX)
+            return (r2 + 1, gb2, gmin(pos_new), reads2 + jnp.sum(mask),
+                    upd2 + better.astype(jnp.int32))
+
+        st1 = (jnp.int32(0), bsf, bsfpos, reads, updates)
+        _, bsf, bsfpos, reads, updates = jax.lax.while_loop(
+            fcond, fbody, st1)
+
+    # Final agreement (no-op when shared_bsf already converged).
+    gb = gmin(bsf)
+    bsfpos = jnp.where(bsf <= gb, bsfpos, IMAX)
+    return SearchResult(gb, gmin(bsfpos), gsum(reads), gsum(updates), r)
+
+
+def make_distributed_search(
+    mesh: Mesh,
+    axes: Sequence[str],
+    *,
+    series_length: int = 256,
+    segments: int = isax.DEFAULT_SEGMENTS,
+    cardinality: int = isax.DEFAULT_CARDINALITY,
+    round_size: int = 4096,
+    leaf_cap: int = 256,
+    shared_bsf: bool = True,
+    impl: str = "auto",
+    batch_queries: int = 0,
+    select: str = "sort",
+):
+    """Build the jitted, mesh-sharded exact-search step.
+
+    Returns ``search_step(dist_index, query) -> SearchResult`` with
+    ``dist_index`` sharded along N over ``axes`` and the query replicated.
+    ``batch_queries > 0``: the step takes (Q, n) and answers Q queries per
+    launch (vmapped workers; per-query collectives batch into one — the
+    throughput-serving variant, see EXPERIMENTS.md §Perf). This is also the
+    step the dry-run lowers for the ``paris`` arch.
+    """
+    axes = tuple(axes)
+    kernel = functools.partial(
+        _local_exact_search,
+        series_length=series_length,
+        segments=segments,
+        cardinality=cardinality,
+        round_size=round_size,
+        leaf_cap=leaf_cap,
+        shared_bsf=shared_bsf,
+        axis_names=axes,
+        impl=impl,
+        select=select,
+    )
+    if batch_queries:
+        inner = kernel
+
+        def kernel(sax_l, raw_l, pos_l, queries):  # noqa: F811
+            return jax.vmap(
+                lambda q: inner(sax_l, raw_l, pos_l, q))(queries)
+
+    row = P(axes, None)
+    vec = P(axes)
+    rep = P()
+
+    def step(dist_index: DistIndex, query: jax.Array) -> SearchResult:
+        return jax.shard_map(
+            kernel,
+            mesh=mesh,
+            in_specs=(row, row, vec, rep),
+            out_specs=SearchResult(rep, rep, rep, rep, rep),
+            check_vma=False,
+        )(dist_index.sax, dist_index.raw_sorted, dist_index.pos, query)
+
+    return step
+
+
+def make_distributed_build(
+    mesh: Mesh,
+    axes: Sequence[str],
+    *,
+    segments: int = isax.DEFAULT_SEGMENTS,
+    cardinality: int = isax.DEFAULT_CARDINALITY,
+    impl: str = "auto",
+):
+    """Mesh-sharded bulk-loading step: raw chunk -> (sax, root keys).
+
+    The conversion (Stage 2) is embarrassingly parallel over devices; the
+    global leaf-order sort stays on the host pipeline (build_pipeline.py)
+    which consumes these per-shard outputs. Lowered for the dry-run as the
+    ``paris`` arch's build step.
+    """
+    axes = tuple(axes)
+    bp = isax.gaussian_breakpoints(cardinality)
+
+    def local_convert(chunk):
+        x = isax.znorm(chunk)
+        sax, _ = ops.paa_isax(x, bp, segments, impl=impl, normalize=False)
+        return sax, isax.root_key(sax, cardinality)
+
+    row = P(axes, None)
+    vec = P(axes)
+
+    def step(chunk: jax.Array):
+        return jax.shard_map(
+            local_convert,
+            mesh=mesh,
+            in_specs=(row,),
+            out_specs=(row, vec),
+            check_vma=False,
+        )(chunk)
+
+    return step

@@ -1,0 +1,169 @@
+"""The ParIS index as a flat, radix-bucketed CSR structure.
+
+TPU adaptation of the ADS+/ParIS tree (DESIGN.md §2): the paper's index root
+fans out on the first bit of each of the ``w`` segments (one RecBuf / root
+subtree per value, at most ``2**w``); everything below the root exists to (a)
+bound the series scanned by approximate search and (b) keep leaf writes
+sequential. A pointer tree is hostile to TPUs, so we keep the radix partition
+and flatten the subtrees:
+
+  * ``sax``            (N, w) uint8 — summarizations, sorted by
+                       (root_key, refined bit-plane key): exactly the leaf
+                       order a fully split ADS+ tree would produce,
+  * ``pos``            (N,) int32 — original "file offsets" of each series,
+  * ``bucket_offsets`` (2**root_bits + 1,) int32 — CSR offsets of each root
+                       subtree into the sorted arrays,
+  * ``raw``            (N, n) f32 — the z-normalized raw series, in *file
+                       order* (this array plays the role of the on-disk raw
+                       file; exact search gathers from it through ``pos``).
+
+Approximate search = O(1) bucket lookup + a bounded scan of one bucket.
+Exact search = full SAX-array scan with lower-bound pruning (like the paper,
+which also scans the flat SAX array rather than the tree).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isax
+from repro.kernels import ops
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ParISIndex:
+    sax: jax.Array  # (N, w) uint8, index (sorted) order
+    pos: jax.Array  # (N,) int32, index order -> file order
+    bucket_offsets: jax.Array  # (2**root_bits + 1,) int32
+    raw: jax.Array  # (N, n) f32, file order (the "raw data file")
+    series_length: int = dataclasses.field(metadata=dict(static=True))
+    segments: int = dataclasses.field(metadata=dict(static=True))
+    cardinality: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_series(self) -> int:
+        return self.sax.shape[0]
+
+    @property
+    def num_buckets(self) -> int:
+        return self.bucket_offsets.shape[0] - 1
+
+    def bucket(self, key) -> tuple:
+        """(start, end) of a root bucket in index order."""
+        return self.bucket_offsets[key], self.bucket_offsets[key + 1]
+
+
+def sort_by_index_key(
+    sax: jax.Array, cardinality: int, refine_bits: int = 4
+) -> jax.Array:
+    """Permutation sorting series into index (leaf) order.
+
+    Primary key: root_key (MSB of each segment — the root radix partition).
+    Secondary: bit-plane-interleaved refinement (ADS+ split-order analogue).
+    LSD-style: stable argsort from the least-significant plane up, so the
+    most-significant plane (the root key) dominates.
+    """
+    keys = isax.refine_keys(sax, refine_bits, cardinality)
+    n = sax.shape[0]
+    order = jnp.arange(n, dtype=jnp.int32)
+    for key in reversed(keys):
+        order = jnp.take(order, jnp.argsort(jnp.take(key, order), stable=True))
+    return order
+
+
+def bucket_offsets_from_keys(
+    sorted_root_keys: jax.Array, num_buckets: int
+) -> jax.Array:
+    """CSR offsets from the sorted root keys (vectorized searchsorted)."""
+    targets = jnp.arange(num_buckets + 1, dtype=sorted_root_keys.dtype)
+    return jnp.searchsorted(sorted_root_keys, targets, side="left").astype(
+        jnp.int32
+    )
+
+
+def build_index(
+    raw: jax.Array,
+    segments: int = isax.DEFAULT_SEGMENTS,
+    cardinality: int = isax.DEFAULT_CARDINALITY,
+    *,
+    normalize: bool = True,
+    refine_bits: int = 4,
+    impl: str = "auto",
+) -> ParISIndex:
+    """One-shot (in-memory) index build: the semantic spec of the pipeline.
+
+    ``core.build_pipeline`` produces byte-identical indices through the
+    staged, double-buffered, out-of-core path; tests assert they agree.
+    """
+    if normalize:
+        raw = isax.znorm(raw)
+    bp = isax.gaussian_breakpoints(cardinality)
+    sax, _ = ops.paa_isax(raw, bp, segments, impl=impl, normalize=False)
+    order = sort_by_index_key(sax, cardinality, refine_bits)
+    sax_sorted = jnp.take(sax, order, axis=0)
+    root_sorted = isax.root_key(sax_sorted, cardinality)
+    offsets = bucket_offsets_from_keys(root_sorted, 2 ** segments)
+    return ParISIndex(
+        sax=sax_sorted,
+        pos=order.astype(jnp.int32),
+        bucket_offsets=offsets,
+        raw=raw,
+        series_length=raw.shape[-1],
+        segments=segments,
+        cardinality=cardinality,
+    )
+
+
+def assemble_index(
+    sax_sorted: np.ndarray,
+    pos_sorted: np.ndarray,
+    raw: jax.Array,
+    segments: int,
+    cardinality: int,
+) -> ParISIndex:
+    """Wrap pre-sorted host arrays (from the build pipeline) into an index."""
+    sax_sorted = jnp.asarray(sax_sorted)
+    root_sorted = isax.root_key(sax_sorted, cardinality)
+    offsets = bucket_offsets_from_keys(root_sorted, 2 ** segments)
+    return ParISIndex(
+        sax=sax_sorted,
+        pos=jnp.asarray(pos_sorted, jnp.int32),
+        bucket_offsets=offsets,
+        raw=raw,
+        series_length=raw.shape[-1],
+        segments=segments,
+        cardinality=cardinality,
+    )
+
+
+def validate_index(index: ParISIndex) -> dict:
+    """Structural invariants (used by tests and the builder's self-check)."""
+    sax_file_order = np.zeros((index.num_series, index.segments), np.uint8)
+    pos = np.asarray(index.pos)
+    sax_file_order[pos] = np.asarray(index.sax)
+    expect_sax, _ = isax.convert_to_sax(
+        index.raw, index.segments, index.cardinality, normalize=False
+    )
+    root = np.asarray(isax.root_key(index.sax, index.cardinality))
+    off = np.asarray(index.bucket_offsets)
+    ok_perm = np.array_equal(np.sort(pos), np.arange(index.num_series))
+    ok_sax = np.array_equal(sax_file_order, np.asarray(expect_sax))
+    ok_sorted = bool(np.all(np.diff(root) >= 0))
+    ok_offsets = bool(
+        off[0] == 0
+        and off[-1] == index.num_series
+        and np.all(np.diff(off) >= 0)
+        and all(
+            np.all(root[off[k]: off[k + 1]] == k)
+            for k in np.unique(root)
+        )
+    )
+    return dict(
+        permutation=ok_perm, sax=ok_sax, sorted=ok_sorted, offsets=ok_offsets
+    )

@@ -1,0 +1,325 @@
+"""Exact and approximate similarity search over a ParIS index (paper §3.3).
+
+Single-device reference implementations; ``core.distributed`` wraps them in
+``shard_map`` for the mesh. All algorithms operate on *squared* distances
+(sqrt is monotone) and return file-order positions.
+
+Algorithm map (paper -> here):
+
+  approximate search        -> :func:`approx_search` — O(1) root-bucket lookup
+                               + true distances over one leaf-sized window of
+                               index-sorted neighbors.
+  LBC workers (Alg. 10)     -> one vectorized lower-bound pass over the SAX
+                               array (the Pallas VPU kernel).
+  candidate list, sorted    -> argsort of lower bounds; processed in rounds.
+  RDC workers + shared BSF  -> :func:`exact_search` — a ``while_loop`` over
+    (Alg. 11)                  candidate rounds; within a round a whole tile of
+                               raw series is gathered and distanced (MXU), the
+                               BSF updates *between* rounds (the collective-
+                               friendly granularity of an atomic update).
+  early abandon             -> the loop exits when the smallest unprocessed
+                               lower bound >= BSF (list is sorted, so the rest
+                               is pruned wholesale).
+  nb-ParIS+ (Alg. 7/8)      -> :func:`nb_exact_search` — workers scan disjoint
+                               *unsorted* SAX blocks with purely local BSFs.
+  ADS+ serial scan          -> :func:`exact_search` with ``sort=False`` (file-
+                               order candidate processing, no early exit).
+  UCR-Suite optimized scan  -> :func:`brute_force` — full-data distance scan,
+                               no index.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import isax
+from repro.core.index import ParISIndex
+from repro.kernels import ops
+
+INF = jnp.float32(jnp.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    round_size: int = 4096  # candidates distance-checked per BSF round
+    leaf_cap: int = 256  # approximate-search window ("leaf" size)
+    sort: bool = True  # sort candidate list by lower bound (ParIS+)
+    impl: str = "auto"  # kernel dispatch (ops.py)
+    workers: int = 16  # nb- variant only: #independent scan blocks
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    dist_sq: jax.Array  # squared distance of the 1-NN
+    position: jax.Array  # file-order offset of the 1-NN
+    raw_reads: jax.Array  # series whose raw data was fetched (Fig. 20b)
+    bsf_updates: jax.Array  # BSF improvements after init (Fig. 20a)
+    rounds: jax.Array  # candidate rounds executed
+
+
+def _query_paa(index: ParISIndex, query: jax.Array) -> tuple:
+    q = isax.znorm(query)
+    return q, isax.paa(q, index.segments)
+
+
+def approx_search(
+    index: ParISIndex, query: jax.Array, leaf_cap: int = 256
+) -> tuple:
+    """Initial BSF: true distances over the query's root-bucket neighborhood.
+
+    The paper walks root->leaf and scans that leaf. Our flat index sorts
+    series in leaf order, so the analogue is a fixed ``leaf_cap`` window of
+    index-sorted entries starting at the query's bucket (an empty bucket
+    degrades gracefully to the nearest neighbors in leaf order). Returns
+    (bsf_sq, file position).
+    """
+    q, qp = _query_paa(index, query)
+    qsax = isax.sax_from_paa(qp, index.cardinality)
+    key = isax.root_key(qsax, index.cardinality)
+    start, end = index.bucket(key)
+    # Center the window on the bucket; clamp to the array.
+    pad = jnp.maximum(leaf_cap - (end - start), 0) // 2
+    s = jnp.clip(start - pad, 0, index.num_series - leaf_cap)
+    window = jax.lax.dynamic_slice_in_dim(index.pos, s, leaf_cap)
+    raws = jnp.take(index.raw, window, axis=0)
+    d = ops.euclid_sq(q, raws)
+    j = jnp.argmin(d)
+    return d[j], window[j]
+
+
+def _pad_to(x: jax.Array, size: int, fill) -> jax.Array:
+    pad = size - x.shape[0]
+    if pad <= 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("round_size", "leaf_cap", "sort", "impl")
+)
+def _exact_search_impl(
+    index: ParISIndex,
+    query: jax.Array,
+    *,
+    round_size: int,
+    leaf_cap: int,
+    sort: bool,
+    impl: str,
+) -> SearchResult:
+    n_series = index.num_series
+    q, qp = _query_paa(index, query)
+    bsf0, pos0 = approx_search(index, query, leaf_cap)
+    bpp = isax.padded_breakpoints(index.cardinality)
+
+    # --- LBC phase: one vectorized pass over the whole SAX array. ---
+    lb = ops.lower_bound_sq(qp, index.sax, bpp, index.series_length, impl=impl)
+
+    # --- Candidate list (sorted for ParIS+; SAX order for the ADS+ mode). ---
+    if sort:
+        order_idx = jnp.argsort(lb)
+        lb_sorted = jnp.take(lb, order_idx, axis=0)
+    else:
+        order_idx = jnp.arange(n_series, dtype=jnp.int32)
+        lb_sorted = lb
+    n_rounds = -(-n_series // round_size)
+    padded = n_rounds * round_size
+    order_idx = _pad_to(order_idx.astype(jnp.int32), padded, 0)
+    lb_sorted = _pad_to(lb_sorted, padded, INF)
+
+    # --- RDC phase: rounds of gather + batched ED, shared BSF in carry. ---
+    def cond(st):
+        r, bsf, *_ = st
+        more = r < n_rounds
+        if sort:  # sorted list => everything past a pruned head is pruned
+            more &= jax.lax.dynamic_index_in_dim(
+                lb_sorted, r * round_size, keepdims=False
+            ) < bsf
+        return more
+
+    def body(st):
+        r, bsf, bsfpos, reads, updates = st
+        idx = jax.lax.dynamic_slice_in_dim(order_idx, r * round_size, round_size)
+        lbs = jax.lax.dynamic_slice_in_dim(lb_sorted, r * round_size, round_size)
+        mask = lbs < bsf
+        cand_pos = jnp.take(index.pos, idx, axis=0)
+        raws = jnp.take(index.raw, cand_pos, axis=0)  # the "disk reads"
+        d = ops.euclid_sq(q, raws, impl=impl)
+        d = jnp.where(mask, d, INF)
+        j = jnp.argmin(d)
+        better = d[j] < bsf
+        return (
+            r + 1,
+            jnp.where(better, d[j], bsf),
+            jnp.where(better, cand_pos[j], bsfpos),
+            reads + jnp.sum(mask),
+            updates + better.astype(jnp.int32),
+        )
+
+    st0 = (
+        jnp.int32(0),
+        bsf0,
+        pos0.astype(jnp.int32),
+        jnp.int32(leaf_cap),
+        jnp.int32(0),
+    )
+    r, bsf, bsfpos, reads, updates = jax.lax.while_loop(cond, body, st0)
+    return SearchResult(bsf, bsfpos, reads, updates, r)
+
+
+def exact_search(
+    index: ParISIndex, query: jax.Array, cfg: SearchConfig = SearchConfig()
+) -> SearchResult:
+    """ParIS+ exact 1-NN (``cfg.sort=False`` gives the ADS+-style serial scan)."""
+    return _exact_search_impl(
+        index,
+        query,
+        round_size=cfg.round_size,
+        leaf_cap=cfg.leaf_cap,
+        sort=cfg.sort,
+        impl=cfg.impl,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("round_size", "leaf_cap", "workers", "impl")
+)
+def _nb_exact_search_impl(
+    index: ParISIndex,
+    query: jax.Array,
+    *,
+    round_size: int,
+    leaf_cap: int,
+    workers: int,
+    impl: str,
+) -> SearchResult:
+    n_series = index.num_series
+    q, qp = _query_paa(index, query)
+    bsf0, pos0 = approx_search(index, query, leaf_cap)
+    bpp = isax.padded_breakpoints(index.cardinality)
+    lb = ops.lower_bound_sq(qp, index.sax, bpp, index.series_length, impl=impl)
+
+    per = -(-n_series // workers)
+    rounds = -(-per // round_size)
+    padded = workers * rounds * round_size
+    idx_all = _pad_to(jnp.arange(n_series, dtype=jnp.int32), padded, 0)
+    lb_all = _pad_to(lb, padded, INF)
+    idx_blocks = idx_all.reshape(workers, rounds, round_size)
+    lb_blocks = lb_all.reshape(workers, rounds, round_size)
+
+    def worker(idx_b, lb_b):
+        def step(carry, xs):
+            bsf, bsfpos, reads, updates = carry
+            idx, lbs = xs
+            mask = lbs < bsf  # local BSF only — no sharing (nb- semantics)
+            cand_pos = jnp.take(index.pos, idx, axis=0)
+            raws = jnp.take(index.raw, cand_pos, axis=0)
+            d = jnp.where(mask, ops.euclid_sq(q, raws, impl=impl), INF)
+            j = jnp.argmin(d)
+            better = d[j] < bsf
+            carry = (
+                jnp.where(better, d[j], bsf),
+                jnp.where(better, cand_pos[j], bsfpos),
+                reads + jnp.sum(mask),
+                updates + better.astype(jnp.int32),
+            )
+            return carry, None
+
+        init = (bsf0, pos0.astype(jnp.int32), jnp.int32(0), jnp.int32(0))
+        (bsf, bsfpos, reads, updates), _ = jax.lax.scan(
+            step, init, (idx_b, lb_b)
+        )
+        return bsf, bsfpos, reads, updates
+
+    bsf_v, pos_v, reads_v, upd_v = jax.vmap(worker)(idx_blocks, lb_blocks)
+    j = jnp.argmin(bsf_v)
+    return SearchResult(
+        bsf_v[j],
+        pos_v[j],
+        jnp.sum(reads_v) + leaf_cap,
+        jnp.sum(upd_v),
+        jnp.int32(rounds),
+    )
+
+
+def nb_exact_search(
+    index: ParISIndex, query: jax.Array, cfg: SearchConfig = SearchConfig()
+) -> SearchResult:
+    """nb-ParIS+: independent workers, local BSFs, unsorted blocks (Fig. 8)."""
+    return _nb_exact_search_impl(
+        index,
+        query,
+        round_size=cfg.round_size,
+        leaf_cap=cfg.leaf_cap,
+        workers=cfg.workers,
+        impl=cfg.impl,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def brute_force(
+    index: ParISIndex, query: jax.Array, impl: str = "auto"
+) -> SearchResult:
+    """UCR-Suite analogue: optimized full scan, no pruning, no index."""
+    q = isax.znorm(query)
+    d, j = ops.euclid_min(q, index.raw, impl=impl)
+    n = jnp.int32(index.num_series)
+    return SearchResult(d, j.astype(jnp.int32), n, jnp.int32(1), jnp.int32(1))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "round_size", "impl"))
+def exact_knn(
+    index: ParISIndex,
+    query: jax.Array,
+    k: int = 1,
+    round_size: int = 4096,
+    impl: str = "auto",
+) -> tuple:
+    """Exact k-NN: sorted-candidate rounds pruning against the k-th best.
+
+    Returns ((k,) squared distances ascending, (k,) file positions). Backs the
+    paper's k-NN classifier experiment (Fig. 18).
+    """
+    n_series = index.num_series
+    q, qp = _query_paa(index, query)
+    bpp = isax.padded_breakpoints(index.cardinality)
+    lb = ops.lower_bound_sq(qp, index.sax, bpp, index.series_length, impl=impl)
+    order_idx = jnp.argsort(lb)
+    lb_sorted = jnp.take(lb, order_idx, axis=0)
+    n_rounds = -(-n_series // round_size)
+    padded = n_rounds * round_size
+    order_idx = _pad_to(order_idx.astype(jnp.int32), padded, 0)
+    lb_sorted = _pad_to(lb_sorted, padded, INF)
+
+    def cond(st):
+        r, top_d, _ = st
+        return (r < n_rounds) & (
+            jax.lax.dynamic_index_in_dim(lb_sorted, r * round_size, keepdims=False)
+            < top_d[-1]
+        )
+
+    def body(st):
+        r, top_d, top_p = st
+        idx = jax.lax.dynamic_slice_in_dim(order_idx, r * round_size, round_size)
+        lbs = jax.lax.dynamic_slice_in_dim(lb_sorted, r * round_size, round_size)
+        mask = lbs < top_d[-1]
+        cand_pos = jnp.take(index.pos, idx, axis=0)
+        raws = jnp.take(index.raw, cand_pos, axis=0)
+        d = jnp.where(mask, ops.euclid_sq(q, raws, impl=impl), INF)
+        all_d = jnp.concatenate([top_d, d])
+        all_p = jnp.concatenate([top_p, cand_pos])
+        sel = jnp.argsort(all_d)[:k]
+        return r + 1, all_d[sel], all_p[sel]
+
+    st0 = (
+        jnp.int32(0),
+        jnp.full((k,), INF),
+        jnp.zeros((k,), jnp.int32),
+    )
+    _, top_d, top_p = jax.lax.while_loop(cond, body, st0)
+    return top_d, top_p

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: PAA-to-iSAX lower-bound distance (paper §3.3.1).
+
+This is ParIS+'s flagship SIMD contribution adapted to the TPU VPU. The paper
+evaluates the 3-way branch (query PAA ABOVE / BELOW / IN the iSAX region) on
+all 8 AVX lanes and mask-combines the results; here the same branch-free
+algebra runs on 8x128-lane vector registers over VMEM-resident tiles, and the
+breakpoint dictionary lookups become either a VMEM gather or an MXU one-hot
+matmul (layout/version chosen by ``ops.py``).
+
+Baseline layout: SAX tiles of shape (block_n, w) uint8; w=16 symbols sit on
+the lane axis. The optimized layout (``transposed=True``) stores SAX as
+(w, N): the N axis lands on the 128-wide lanes so every lane does useful work
+(the (block_n, 16) layout wastes 7/8 of each vector register to lane padding).
+Both layouts share the same algebra and oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lb_kernel_rows(q_ref, bl_ref, bu_ref, sax_ref, o_ref, *, scale: float):
+    """Tile layout (block_n, w): symbols on lanes. One output per sublane row."""
+    sym = sax_ref[...].astype(jnp.int32)  # (bn, w)
+    # Dictionary lookups: padded-breakpoint tables live in VMEM (257 floats).
+    bl = bl_ref[...][0]  # (card+1,)
+    bu = bu_ref[...][0]
+    lo = jnp.take(bl, sym, axis=0)  # (bn, w)
+    hi = jnp.take(bu, sym, axis=0)
+    q = q_ref[...][0][None, :]  # (1, w) broadcast over the tile
+    above = q - hi
+    below = lo - q
+    # Paper's three masked branches, combined without control flow.
+    d = jnp.maximum(jnp.maximum(above, below), 0.0)
+    o_ref[...] = scale * jnp.sum(d * d, axis=-1, keepdims=True)
+
+
+def _lb_kernel_cols(q_ref, bl_ref, bu_ref, sax_ref, o_ref, *, scale: float):
+    """Tile layout (w, block_n): candidates on lanes (optimized layout)."""
+    sym = sax_ref[...].astype(jnp.int32)  # (w, bn)
+    bl = bl_ref[...][0]
+    bu = bu_ref[...][0]
+    lo = jnp.take(bl, sym, axis=0)
+    hi = jnp.take(bu, sym, axis=0)
+    q = q_ref[...][0][:, None]  # (w, 1)
+    d = jnp.maximum(jnp.maximum(q - hi, lo - q), 0.0)
+    o_ref[...] = scale * jnp.sum(d * d, axis=0, keepdims=True)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("series_length", "block_n", "interpret", "transposed"),
+)
+def lower_bound_sq_pallas(
+    query_paa: jax.Array,
+    sax: jax.Array,
+    bp_padded: jax.Array,
+    series_length: int,
+    *,
+    block_n: int = 1024,
+    interpret: bool = True,
+    transposed: bool = False,
+) -> jax.Array:
+    """(w,) PAA x sax -> (N,) squared lower bounds.
+
+    ``sax`` is (N, w) uint8 for the row layout, (w, N) for ``transposed``.
+    N must be a multiple of ``block_n`` (ops.py pads; padded entries produce
+    garbage the caller slices off).
+    """
+    if transposed:
+        w, n = sax.shape
+    else:
+        n, w = sax.shape
+    if n % block_n:
+        raise ValueError(f"N={n} not a multiple of block_n={block_n}")
+    scale = float(series_length) / float(w)
+    card1 = bp_padded.shape[0] - 1  # card+1 entries -> card usable intervals
+    bl = bp_padded[:-1][None, :]  # (1, card)
+    bu = bp_padded[1:][None, :]
+    grid = (n // block_n,)
+    q2d = query_paa.astype(jnp.float32)[None, :]  # (1, w)
+
+    if transposed:
+        kernel = functools.partial(_lb_kernel_cols, scale=scale)
+        in_specs = [
+            pl.BlockSpec((1, w), lambda i: (0, 0)),
+            pl.BlockSpec((1, card1), lambda i: (0, 0)),
+            pl.BlockSpec((1, card1), lambda i: (0, 0)),
+            pl.BlockSpec((w, block_n), lambda i: (0, i)),
+        ]
+        out_specs = pl.BlockSpec((1, block_n), lambda i: (0, i))
+        out_shape = jax.ShapeDtypeStruct((1, n), jnp.float32)
+    else:
+        kernel = functools.partial(_lb_kernel_rows, scale=scale)
+        in_specs = [
+            pl.BlockSpec((1, w), lambda i: (0, 0)),
+            pl.BlockSpec((1, card1), lambda i: (0, 0)),
+            pl.BlockSpec((1, card1), lambda i: (0, 0)),
+            pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+        ]
+        out_specs = pl.BlockSpec((block_n, 1), lambda i: (i, 0))
+        out_shape = jax.ShapeDtypeStruct((n, 1), jnp.float32)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(q2d, bl, bu, sax)
+    return out.reshape(n)

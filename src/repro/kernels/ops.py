@@ -1,0 +1,130 @@
+"""Dispatch wrappers for the Pallas kernels.
+
+Every op takes ``impl``:
+
+  * ``"auto"``   — compiled Pallas on TPU, jnp reference elsewhere (CPU/GPU);
+  * ``"pallas"`` — Pallas in interpret mode off-TPU (correctness validation);
+  * ``"ref"``    — pure-jnp oracle (also the vectorized "SIMD analogue" used
+                   by the CPU benchmarks);
+  * ``"sisd"``   — scalar-loop formulation (Table-1 baseline; lower bound only).
+
+Wrappers own the ugly parts: padding to block multiples and un-padding
+results, so kernels can assume exact tiling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import euclidean as _euclid
+from repro.kernels import lower_bound as _lb
+from repro.kernels import paa_isax as _pi
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(x: jax.Array, mult: int, fill=0):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.full((pad, *x.shape[1:]), fill, dtype=x.dtype)], axis=0
+        )
+    return x, n
+
+
+def lower_bound_sq(
+    query_paa: jax.Array,
+    sax: jax.Array,
+    bp_padded: jax.Array,
+    series_length: int,
+    *,
+    impl: str = "auto",
+    block_n: int = 1024,
+    transposed: bool = False,
+) -> jax.Array:
+    """(w,) PAA x (N, w) sax -> (N,) squared lower bounds."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.lower_bound_sq(query_paa, sax, bp_padded, series_length)
+    if impl == "sisd":
+        return _ref.lower_bound_sq_sisd(query_paa, sax, bp_padded, series_length)
+    interpret = not _on_tpu()
+    if transposed:
+        pad = (-sax.shape[0]) % block_n
+        saxT = sax.T
+        if pad:
+            saxT = jnp.pad(saxT, ((0, 0), (0, pad)))
+        out = _lb.lower_bound_sq_pallas(
+            query_paa, saxT, bp_padded, series_length,
+            block_n=block_n, interpret=interpret, transposed=True,
+        )
+        return out[: sax.shape[0]]
+    sax_p, n = _pad_rows(sax, block_n, 0)
+    out = _lb.lower_bound_sq_pallas(
+        query_paa, sax_p, bp_padded, series_length,
+        block_n=block_n, interpret=interpret, transposed=False,
+    )
+    return out[:n]
+
+
+def paa_isax(
+    series: jax.Array,
+    breakpoints: jax.Array,
+    segments: int,
+    *,
+    impl: str = "auto",
+    block_b: int = 256,
+    normalize: bool = True,
+) -> tuple:
+    """(B, n) raw -> ((B, w) uint8 sax, (B, w) f32 paa)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.paa_isax(series, segments, breakpoints, normalize)
+    series_p, b = _pad_rows(series, block_b, 1.0)
+    sax, paa = _pi.paa_isax_pallas(
+        series_p, breakpoints, segments,
+        block_b=block_b, interpret=not _on_tpu(), normalize=normalize,
+    )
+    return sax[:b], paa[:b]
+
+
+def euclid_sq(
+    query: jax.Array,
+    data: jax.Array,
+    *,
+    impl: str = "auto",
+    block_b: int = 256,
+) -> jax.Array:
+    """(n,) query x (B, n) data -> (B,) squared distances."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.euclid_sq(query, data)
+    data_p, b = _pad_rows(data, block_b, 0.0)
+    out = _euclid.euclid_sq_pallas(
+        query, data_p, block_b=block_b, interpret=not _on_tpu()
+    )
+    return out[:b]
+
+
+def euclid_min(
+    query: jax.Array,
+    data: jax.Array,
+    *,
+    impl: str = "auto",
+    block_b: int = 256,
+) -> tuple:
+    """(n,) x (B, n) -> (min squared distance, argmin index)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        d = _ref.euclid_sq(query, data)
+        i = jnp.argmin(d)
+        return d[i], i.astype(jnp.int32)
+    data_p, b = _pad_rows(data, block_b, jnp.inf)
+    dists, idxs = _euclid.euclid_min_pallas(
+        query, data_p, block_b=block_b, interpret=not _on_tpu()
+    )
+    j = jnp.argmin(dists)
+    return dists[j], idxs[j]

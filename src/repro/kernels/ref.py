@@ -1,0 +1,83 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is tested against
+(``tests/test_kernels_*.py`` sweep shapes/dtypes and assert_allclose). They are
+also the CPU execution path used by ``ops.py`` when not running on TPU
+(Pallas ``interpret=True`` is for validation, not speed).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import isax
+
+
+def lower_bound_sq(
+    query_paa: jax.Array,
+    sax: jax.Array,
+    bp_padded: jax.Array,
+    series_length: int,
+) -> jax.Array:
+    """(w,) query PAA x (N, w) uint8 sax -> (N,) squared lower bounds."""
+    w = sax.shape[-1]
+    idx = sax.astype(jnp.int32)
+    bl = bp_padded[idx]
+    bu = bp_padded[idx + 1]
+    q = query_paa[None, :].astype(jnp.float32)
+    d = jnp.where(q > bu, q - bu, jnp.where(q < bl, bl - q, 0.0))
+    return (series_length / w) * jnp.sum(d * d, axis=-1)
+
+
+def paa_isax(
+    series: jax.Array,
+    segments: int,
+    breakpoints: jax.Array,
+    normalize: bool = True,
+) -> tuple:
+    """(B, n) raw series -> ((B, w) uint8 symbols, (B, w) f32 PAA)."""
+    x = isax.znorm(series) if normalize else series
+    b, n = x.shape
+    p = jnp.mean(x.reshape(b, segments, n // segments), axis=-1)
+    sym = jnp.sum(p[..., None] > breakpoints, axis=-1).astype(jnp.uint8)
+    return sym, p.astype(jnp.float32)
+
+
+def euclid_sq(query: jax.Array, data: jax.Array) -> jax.Array:
+    """(n,) query x (B, n) data -> (B,) squared Euclidean distances."""
+    d = data.astype(jnp.float32) - query[None, :].astype(jnp.float32)
+    return jnp.sum(d * d, axis=-1)
+
+
+def lower_bound_sq_sisd(
+    query_paa: jax.Array,
+    sax: jax.Array,
+    bp_padded: jax.Array,
+    series_length: int,
+) -> jax.Array:
+    """Scalar-at-a-time ("SISD") lower bound: the paper's Table-1 baseline.
+
+    A sequential fori_loop over candidates and segments with *branching*
+    control flow per element — deliberately the unvectorized formulation the
+    paper compares its SIMD kernel against. Used by benchmarks only.
+    """
+    n_cand, w = sax.shape
+    scale = series_length / w
+
+    def one(i):
+        def seg(j, acc):
+            s = sax[i, j].astype(jnp.int32)
+            bl = bp_padded[s]
+            bu = bp_padded[s + 1]
+            q = query_paa[j]
+            d = jax.lax.cond(
+                q > bu,
+                lambda: q - bu,
+                lambda: jax.lax.cond(q < bl, lambda: bl - q, lambda: 0.0),
+            )
+            return acc + d * d
+
+        return scale * jax.lax.fori_loop(0, w, seg, 0.0)
+
+    return jax.lax.map(one, jnp.arange(n_cand))

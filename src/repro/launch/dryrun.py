@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first (before any jax-importing module): jax
+locks the device count at first init, and the production meshes need 512
+placeholder host devices. Do NOT set this flag anywhere else — smoke tests
+and benchmarks must see 1 device.
+
+For every cell this script:
+  1. builds the step/inputs/shardings via launch/specs.py,
+  2. ``.lower()`` + ``.compile()`` on the mesh (no arrays are ever
+     allocated — inputs are ShapeDtypeStructs),
+  3. records ``compiled.memory_analysis()`` (fits-on-chip proof),
+     ``compiled.cost_analysis()`` (XLA's own numbers, scan-body-once
+     caveat) and the HLO-parsed roofline terms (launch/roofline.py),
+  4. writes one JSON artifact per cell under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --mesh single --arch granite-34b \
+      --shape train_4k
+  python -m repro.launch.dryrun --mesh both --all [--skip-existing]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, outdir: str,
+             overrides=None, tag: str = "", build_kwargs=None) -> dict:
+    import jax
+    from repro import configs
+    from repro.launch import roofline, specs
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.size
+    rec = dict(arch=arch, shape=shape_name, mesh=mesh_kind,
+               devices=n_dev, tag=tag)
+    t0 = time.time()
+    try:
+        if arch == "paris":
+            cell = specs.build_paris_cell(shape_name, mesh,
+                                          **(build_kwargs or {}))
+        else:
+            cell = specs.build_cell(arch, shape_name, mesh,
+                                    overrides=overrides,
+                                    **(build_kwargs or {}))
+        lowered = specs.lower_cell(cell, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        text = compiled.as_text()
+        rep = roofline.analyze(text, n_dev)
+        meta = cell.meta
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            memory=dict(
+                argument_bytes=mem.argument_size_in_bytes,
+                output_bytes=mem.output_size_in_bytes,
+                temp_bytes=mem.temp_size_in_bytes,
+                alias_bytes=mem.alias_size_in_bytes,
+                peak_estimate_bytes=(mem.argument_size_in_bytes
+                                     + mem.output_size_in_bytes
+                                     + mem.temp_size_in_bytes
+                                     - mem.alias_size_in_bytes),
+            ),
+            xla_cost=dict(flops=cost.get("flops", 0.0),
+                          bytes_accessed=cost.get("bytes accessed", 0.0)),
+            roofline=rep.to_json(),
+            meta=meta,
+        )
+        if meta.get("kind") in ("train", "prefill", "decode"):
+            mf = roofline.model_flops(
+                meta.get("params", 0), meta.get("active_params", 0),
+                meta.get("tokens", 0),
+                "train" if meta.get("kind") == "train" else "serve")
+            rec["model_flops"] = mf
+            hlo_total = rep.flops * n_dev
+            rec["model_flops_ratio"] = (mf / hlo_total) if hlo_total else None
+    except Exception as e:  # record failures as artifacts too
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    os.makedirs(outdir, exist_ok=True)
+    fn = os.path.join(outdir,
+                      f"{mesh_kind}__{arch}__{shape_name}"
+                      f"{('__' + tag) if tag else ''}.json")
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def iter_cells():
+    from repro import configs
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_config(arch)
+        for shape_name in configs.SHAPES:
+            reason = configs.shape_applicable(cfg, configs.SHAPES[shape_name])
+            yield arch, shape_name, reason
+    yield "paris", "search", None
+    yield "paris", "build", None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        cells = list(iter_cells())
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required without --all")
+        cells = [(args.arch, args.shape, None)]
+
+    results = []
+    for mesh_kind in meshes:
+        for arch, shape_name, skip_reason in cells:
+            key = f"{mesh_kind}/{arch}/{shape_name}"
+            if skip_reason:
+                rec = dict(arch=arch, shape=shape_name, mesh=mesh_kind,
+                           status="skipped", reason=skip_reason)
+                os.makedirs(args.outdir, exist_ok=True)
+                with open(os.path.join(
+                        args.outdir,
+                        f"{mesh_kind}__{arch}__{shape_name}.json"),
+                        "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"[skip] {key}: {skip_reason}", flush=True)
+                continue
+            fn = os.path.join(args.outdir,
+                              f"{mesh_kind}__{arch}__{shape_name}.json")
+            if args.skip_existing and os.path.exists(fn):
+                try:
+                    old = json.load(open(fn))
+                    if old.get("status") == "ok":
+                        print(f"[keep] {key}", flush=True)
+                        continue
+                except Exception:
+                    pass
+            t0 = time.time()
+            rec = run_cell(arch, shape_name, mesh_kind, args.outdir)
+            dt = time.time() - t0
+            if rec["status"] == "ok":
+                r = rec["roofline"]
+                print(f"[ok]   {key} {dt:.0f}s "
+                      f"compute={r['compute_s']:.4f}s "
+                      f"mem={r['memory_s']:.4f}s "
+                      f"coll={r['collective_s']:.4f}s dom={r['dominant']} "
+                      f"peak={rec['memory']['peak_estimate_bytes']/2**30:.2f}"
+                      f"GiB", flush=True)
+            else:
+                print(f"[ERR]  {key} {dt:.0f}s {rec['error']}", flush=True)
+            results.append(rec)
+    ok = sum(1 for r in results if r["status"] == "ok")
+    print(f"done: {ok}/{len(results)} cells ok", flush=True)
+
+
+if __name__ == "__main__":
+    main()

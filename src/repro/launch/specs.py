@@ -1,0 +1,259 @@
+"""Cell builder: (arch, shape, mesh) -> (step_fn, arg SDS, shardings).
+
+This is the single source of truth for how every dry-run/benchmark cell is
+lowered: which step function runs, what the inputs look like
+(ShapeDtypeStructs — never allocated), and how everything is sharded on the
+production mesh. launch/dryrun.py, the roofline table, and the perf
+hillclimbs all consume it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import batch_axes_of
+from repro.models import Model
+from repro.serving import kv_cache as kvc
+from repro.serving.serve_step import make_decode_step, make_prefill_step
+from repro.training import optimizer as opt_mod
+from repro.training import sharding as shard_mod
+from repro.training.train_step import TrainConfig, make_train_step
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Callable
+    args: Tuple[Any, ...]  # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any  # None -> let XLA infer
+    donate: Tuple[int, ...] = ()
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _rep(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _batch_sds(cfg: ModelConfig, shape: ShapeConfig, with_labels: bool):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {}
+    if cfg.frontend == "audio":
+        batch["frames"] = _sds((b, s, cfg.frontend_dim), jnp.float32)
+    else:
+        batch["tokens"] = _sds((b, s), jnp.int32)
+        if cfg.frontend == "vision":
+            batch["vision_embeds"] = _sds((b, cfg.vision_tokens,
+                                           cfg.frontend_dim), jnp.float32)
+        if cfg.mrope_sections is not None:
+            batch["positions"] = _sds((b, s, 3), jnp.int32)
+    if with_labels:
+        batch["labels"] = _sds((b, s), jnp.int32)
+    return batch
+
+
+def _batch_shardings(batch, mesh, batch_axes):
+    def spec(leaf):
+        if leaf.ndim >= 2 and leaf.shape[0] % _axes_size(mesh, batch_axes) \
+                == 0:
+            return NamedSharding(mesh, P(tuple(batch_axes),
+                                         *([None] * (leaf.ndim - 1))))
+        return _rep(mesh)
+
+    return jax.tree.map(spec, batch)
+
+
+def _axes_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _param_sds(model: Model, dtype=None):
+    sds = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
+    if dtype is not None:
+        sds = jax.tree.map(
+            lambda a: _sds(a.shape, dtype)
+            if (a.dtype == jnp.float32 and len(a.shape) > 1) else a, sds)
+    return sds
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               microbatch_tokens_per_device: int = 4096,
+               grad_compression: str = "none",
+               cache_seq_shard_threshold: int = 1,
+               overrides: Optional[dict] = None,
+               logical_overrides: Optional[dict] = None) -> Cell:
+    """Construct the lowering cell for one (arch x shape x mesh)."""
+    if arch == "paris":
+        return build_paris_cell(shape_name, mesh)
+    cfg: ModelConfig = configs.get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = configs.SHAPES[shape_name]
+    skip = configs.shape_applicable(cfg, shape)
+    if skip:
+        raise ValueError(f"cell skipped: {skip}")
+    batch_axes = batch_axes_of(mesh)
+    dp = _axes_size(mesh, batch_axes)
+    model = Model(cfg, remat=(shape.kind == "train"))
+    shard_mod.use_logical_rules(mesh, batch_axes, extra=logical_overrides)
+
+    if shape.kind == "train":
+        # microbatching: keep per-device microbatch tokens bounded so the
+        # remat-scan carry fits HBM (per-device microbatch >= 1 sample).
+        per_dev_batch = max(shape.global_batch // dp, 1)
+        mb_samples = max(microbatch_tokens_per_device // shape.seq_len, 1)
+        microbatches = max(per_dev_batch // mb_samples, 1)
+        tcfg = TrainConfig(
+            optimizer=opt_mod.OptimizerConfig(),
+            microbatches=microbatches,
+            grad_compression=grad_compression,
+            pod_axis="pod" if "pod" in mesh.shape else None)
+        fn = make_train_step(model, tcfg)
+        params = _param_sds(model)
+        opt = jax.eval_shape(opt_mod.init_opt_state, params)
+        batch = _batch_sds(cfg, shape, with_labels=True)
+        pshard = shard_mod.param_shardings(params, mesh)
+        oshard = shard_mod.opt_state_shardings(opt, pshard, mesh)
+        bshard = _batch_shardings(batch, mesh, batch_axes)
+        return Cell(
+            arch=arch, shape=shape_name, fn=fn,
+            args=(params, opt, batch),
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=None,  # auto: propagation keeps donated shardings
+            donate=(0, 1),
+            meta=dict(kind="train", microbatches=microbatches,
+                      tokens=shape.global_batch * shape.seq_len,
+                      params=cfg.param_count(),
+                      active_params=cfg.active_param_count()))
+
+    # Serving cells use bf16 params.
+    params = _param_sds(model, jnp.bfloat16)
+    pshard = shard_mod.param_shardings(params, mesh)
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(model)
+        batch = _batch_sds(cfg, shape, with_labels=False)
+        bshard = _batch_shardings(batch, mesh, batch_axes)
+        return Cell(
+            arch=arch, shape=shape_name, fn=fn,
+            args=(params, batch),
+            in_shardings=(pshard, bshard),
+            out_shardings=None,
+            meta=dict(kind="prefill",
+                      tokens=shape.global_batch * shape.seq_len,
+                      params=cfg.param_count(),
+                      active_params=cfg.active_param_count()))
+
+    # decode: one token against a seq_len-deep cache.
+    fn = make_decode_step(model)
+    b = shape.global_batch
+    cache = jax.eval_shape(
+        functools.partial(model.init_cache, b, shape.seq_len))
+    batch = {"tokens": _sds((b, 1), jnp.int32)}
+    if cfg.frontend == "audio":
+        raise ValueError("encoder-only arch has no decode step")
+    # cache sharding policy: batch when it divides dp, else shard the
+    # sequence axis (long-context small-batch layout).
+    if b % dp == 0 and b >= dp:
+        cshard = kvc.cache_sharding_tree(cache, mesh, cfg,
+                                         batch_axes=batch_axes)
+    else:
+        cshard = kvc.cache_sharding_tree(
+            cache, mesh, cfg, batch_axes=(),
+            seq_axes=("data",) if "data" in mesh.shape else ())
+    bshard = _batch_shardings(batch, mesh, batch_axes)
+    pos = _sds((), jnp.int32)
+    return Cell(
+        arch=arch, shape=shape_name, fn=fn,
+        args=(params, batch, cache, pos),
+        in_shardings=(pshard, bshard, cshard, _rep(mesh)),
+        out_shardings=None,  # cache sharding propagates from donated input
+        donate=(2,),
+        meta=dict(kind="decode", tokens=shape.global_batch,
+                  params=cfg.param_count(),
+                  active_params=cfg.active_param_count(),
+                  cache_tokens=shape.seq_len))
+
+
+# ---------------------------------------------------------------------------
+# The paper's own workload as dry-run cells.
+# ---------------------------------------------------------------------------
+
+def build_paris_cell(shape_name: str, mesh: Mesh, *,
+                     round_size: Optional[int] = None,
+                     batch_queries: int = 0,
+                     select: str = "sort") -> Cell:
+    from repro.core import distributed as dist
+    pcfg = configs.get_config("paris")
+    axes = tuple(mesh.axis_names)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    n = -(-pcfg.num_series // n_shards) * n_shards
+
+    if shape_name == "search":
+        step = dist.make_distributed_search(
+            mesh, axes, series_length=pcfg.series_length,
+            segments=pcfg.segments, cardinality=pcfg.cardinality,
+            round_size=round_size or pcfg.round_size,
+            leaf_cap=pcfg.leaf_cap, batch_queries=batch_queries,
+            select=select)
+        dindex = dist.DistIndex(
+            sax=_sds((n, pcfg.segments), jnp.uint8),
+            raw_sorted=_sds((n, pcfg.series_length), jnp.float32),
+            pos=_sds((n,), jnp.int32),
+            series_length=pcfg.series_length, segments=pcfg.segments,
+            cardinality=pcfg.cardinality)
+        qshape = ((batch_queries, pcfg.series_length) if batch_queries
+                  else (pcfg.series_length,))
+        query = _sds(qshape, jnp.float32)
+        ish = dist.index_shardings(mesh, axes)
+        ish = dataclasses.replace(
+            ish, series_length=pcfg.series_length, segments=pcfg.segments,
+            cardinality=pcfg.cardinality)
+        return Cell(
+            arch="paris", shape=shape_name, fn=step,
+            args=(dindex, query),
+            in_shardings=(ish, _rep(mesh)),
+            out_shardings=None,
+            meta=dict(kind="search", num_series=n,
+                      series_length=pcfg.series_length))
+    if shape_name == "build":
+        step = dist.make_distributed_build(
+            mesh, axes, segments=pcfg.segments,
+            cardinality=pcfg.cardinality)
+        chunk = 1 << 22  # 4M series per ingest macro-chunk
+        args = (_sds((chunk, pcfg.series_length), jnp.float32),)
+        ish = NamedSharding(mesh, P(axes, None))
+        return Cell(
+            arch="paris", shape=shape_name, fn=step, args=args,
+            in_shardings=(ish,), out_shardings=None,
+            meta=dict(kind="build", chunk=chunk,
+                      series_length=pcfg.series_length))
+    raise KeyError(f"unknown paris shape {shape_name!r}")
+
+
+def lower_cell(cell: Cell, mesh: Mesh):
+    """jit + lower (no compile). Returns the Lowered object."""
+    jitted = jax.jit(
+        cell.fn,
+        in_shardings=cell.in_shardings,
+        out_shardings=cell.out_shardings,
+        donate_argnums=cell.donate or None)
+    with mesh:
+        return jitted.lower(*cell.args)

@@ -1,0 +1,99 @@
+"""Production training driver.
+
+Wires together: arch registry -> Model -> sharded train step (pjit) ->
+double-buffered data pipeline -> elastic checkpointing (resume, async,
+retention) -> metrics logging. On a real pod this binary runs per-host under
+the same mesh; on this container use ``--smoke`` (reduced config, 1 device).
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-34b --smoke \
+      --steps 100 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-34b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on local devices (no 512-dev mesh)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data", default="bigram", choices=["bigram", "random"])
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "bf16", "int8"])
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro import configs
+    from repro.models import Model
+    from repro.training import data as data_mod
+    from repro.training import elastic as el
+    from repro.training import optimizer as opt_mod
+    from repro.training import train_step as ts_mod
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    model = Model(cfg, remat=not args.smoke)
+    tcfg = ts_mod.TrainConfig(
+        optimizer=opt_mod.OptimizerConfig(
+            learning_rate=args.lr, warmup_steps=max(args.steps // 20, 5),
+            total_steps=args.steps),
+        microbatches=args.microbatches,
+        grad_compression=args.compression)
+    step_fn = jax.jit(ts_mod.make_train_step(model, tcfg),
+                      donate_argnums=(0, 1))
+
+    ecfg = el.ElasticConfig(ckpt_dir=args.ckpt_dir,
+                            steps_between_checkpoints=args.ckpt_every)
+    policy = el.CheckpointPolicy(ecfg)
+
+    def init_state():
+        params = model.init_params(jax.random.PRNGKey(0))
+        return (params, opt_mod.init_opt_state(params))
+
+    state, start_step = el.resume_or_init(ecfg, init_state)
+    params, opt_state = state
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M start={start_step}",
+          flush=True)
+
+    batch_fn = (data_mod.bigram_batch if args.data == "bigram"
+                else data_mod.synthetic_batch)
+    loader = data_mod.PrefetchingLoader(
+        batch_fn, args.batch, args.seq, cfg.vocab_size,
+        start_step=start_step)
+    t0 = time.time()
+    tokens_seen = 0
+    try:
+        for _ in range(start_step, args.steps):
+            step_no, batch = loader.__next__()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            tokens_seen += args.batch * args.seq
+            if (step_no + 1) % args.log_every == 0:
+                dt = time.time() - t0
+                print(f"step {step_no + 1:5d} "
+                      f"loss={float(metrics['loss']):.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"lr={float(metrics['lr']):.2e} "
+                      f"tok/s={tokens_seen / dt:.0f}", flush=True)
+            policy.maybe_save(step_no + 1, (params, opt_state))
+    finally:
+        loader.close()
+    policy.finalize(args.steps, (params, opt_state))
+    print(f"done: {args.steps} steps in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

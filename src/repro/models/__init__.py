@@ -1,0 +1,5 @@
+"""Architecture zoo: config-driven models over shared JAX layers."""
+
+from repro.models.model import Model
+
+__all__ = ["Model"]

@@ -1,0 +1,35 @@
+"""Modality frontend stubs (per assignment: the transformer BACKBONE is the
+deliverable; ``input_specs()`` provides precomputed frame/patch embeddings).
+
+audio  (hubert-xlarge): inputs are (B, S, frontend_dim) precomputed frame
+       features (the CNN feature extractor's output); a linear projection
+       maps them to d_model.
+vision (qwen2-vl): inputs are tokens plus (B, vision_tokens, frontend_dim)
+       precomputed patch embeddings (the ViT's output after the merger); they
+       are projected and overwrite the first ``vision_tokens`` positions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_frontend(key, frontend_dim, d_model):
+    return {"proj": layers._dense_init(key, (frontend_dim, d_model))}
+
+
+def audio_embed(p, frames):
+    """(B, S, frontend_dim) precomputed frames -> (B, S, d_model)."""
+    return layers.logical(frames @ p["proj"], "batch", "seq", "embed")
+
+
+def vision_merge(p, token_embeds, patch_embeds):
+    """Overwrite the first Tv positions of the token embedding with the
+    projected patch embeddings (static prefix layout)."""
+    tv = patch_embeds.shape[1]
+    vis = patch_embeds @ p["proj"].astype(patch_embeds.dtype)
+    return jnp.concatenate(
+        [vis.astype(token_embeds.dtype), token_embeds[:, tv:]], axis=1)

@@ -1,0 +1,329 @@
+"""Shared neural-net layers for the architecture zoo.
+
+Pure-function style: every layer is ``f(params, x, ...) -> y`` with params as
+nested dicts of jnp arrays; initializers are ``init_*`` functions returning
+those dicts. Layers carry logical sharding annotations via
+``with_logical_constraint`` (mapped to mesh axes by ``training/sharding.py``).
+
+Attention supports: causal / bidirectional, GQA/MQA (kv heads broadcast),
+sliding-window masks (Gemma-3 local layers), RoPE and M-RoPE (Qwen2-VL),
+dense or flash-style chunked evaluation (long prefill), and KV-cache decode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Logical axis annotations (resolved to mesh axes in training/sharding.py).
+# ---------------------------------------------------------------------------
+
+_LOGICAL_RULES = None  # set by training.sharding.use_logical_rules
+_ACTIVE_MESH = None  # the mesh those rules refer to (for shard_map scopes)
+
+
+def set_logical_rules(rules, mesh=None):
+    global _LOGICAL_RULES, _ACTIVE_MESH
+    _LOGICAL_RULES = rules
+    _ACTIVE_MESH = mesh
+
+
+def logical(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Annotate activation x with logical axis names (no-op without rules)."""
+    if _LOGICAL_RULES is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    spec = P(*(_LOGICAL_RULES.get(n) if n else None for n in names))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) > 1 else shape[-1]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_rmsnorm(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"]).astype(dt)
+
+
+def init_mlp(key, d_model, d_ff, mlp_type="swiglu"):
+    ks = jax.random.split(key, 3)
+    if mlp_type in ("swiglu", "geglu"):
+        return {
+            "wi_gate": _dense_init(ks[0], (d_model, d_ff)),
+            "wi_up": _dense_init(ks[1], (d_model, d_ff)),
+            "wo": _dense_init(ks[2], (d_ff, d_model)),
+        }
+    return {  # gelu / relu-squared
+        "wi": _dense_init(ks[0], (d_model, d_ff)),
+        "wo": _dense_init(ks[1], (d_ff, d_model)),
+    }
+
+
+def mlp(p, x, mlp_type="swiglu"):
+    if mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if mlp_type == "swiglu" else functools.partial(
+            jax.nn.gelu, approximate=True)
+        h = act(x @ p["wi_gate"]) * (x @ p["wi_up"])
+        h = logical(h, "batch", "mlp_seq", "mlp")
+        return h @ p["wo"]
+    if mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["wi"]))
+    else:
+        h = jax.nn.gelu(x @ p["wi"], approximate=True)
+    h = logical(h, "batch", "mlp_seq", "mlp")
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4,
+               mrope_sections: Optional[tuple] = None) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) or (B, S, 3) for M-RoPE.
+
+    M-RoPE (Qwen2-VL): the rotary dimension is split into sections, each
+    rotated by its own position stream (temporal / height / width).
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    if positions.ndim == 3:  # M-RoPE
+        if mrope_sections is None:
+            mrope_sections = (hd // 2 - 2 * (hd // 6), hd // 6, hd // 6)
+        sec = []
+        start = 0
+        for i, s in enumerate(mrope_sections):
+            sec.append(positions[..., i: i + 1] * freqs[None, None,
+                                                        start: start + s])
+            start += s
+        angles = jnp.concatenate(sec, axis=-1)  # (B, S, hd/2)
+    else:
+        angles = positions[..., None].astype(jnp.float32) * freqs
+    cos = jnp.cos(angles)[:, :, None, :]  # (B, S, 1, hd/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, masks, flash-style chunking, KV-cache decode)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model, num_heads, num_kv_heads, head_dim):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(ks[0], (d_model, num_heads * head_dim)),
+        "wk": _dense_init(ks[1], (d_model, num_kv_heads * head_dim)),
+        "wv": _dense_init(ks[2], (d_model, num_kv_heads * head_dim)),
+        "wo": _dense_init(ks[3], (num_heads * head_dim, d_model),
+                          scale=(num_heads * head_dim) ** -0.5),
+    }
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window) -> jax.Array:
+    """(Sq, Sk) additive mask bias from position vectors.
+
+    ``window`` may be a traced scalar (Gemma-3's per-layer local/global
+    schedule rides through one scan as data); window <= 0 means full.
+    """
+    diff = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(diff.shape, bool)
+    if causal:
+        ok &= diff >= 0
+    window = jnp.asarray(window)
+    ok &= (window <= 0) | (diff < window)
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def _sdpa_dense(q, k, v, bias):
+    """q (B,Sq,H,hd), k/v (B,Sk,K,hd) with H = K*G; bias (Sq,Sk) or
+    (B,Sq,Sk) (per-row masks for continuous batching)."""
+    b, sq, h, hd = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    q = q.reshape(b, sq, kheads, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32)
+    bias = bias[:, None, None] if bias.ndim == 3 else bias[None, None, None]
+    scores = scores * (hd ** -0.5) + bias
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _sdpa_flash(q, k, v, q_pos, k_pos, causal, window, q_block, k_block):
+    """Online-softmax chunked attention: memory O(q_block * k_block)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    kheads = k.shape[2]
+    g = h // kheads
+    nq = -(-sq // q_block)
+    nk = -(-sk // k_block)
+    sq_p, sk_p = nq * q_block, nk * k_block
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos, (0, sq_p - sq), constant_values=-(10 ** 9))
+    kpos = jnp.pad(k_pos, (0, sk_p - sk), constant_values=2 ** 30)
+    qp = qp.reshape(b, nq, q_block, kheads, g, hd)
+    kp = kp.reshape(b, nk, k_block, kheads, hd)
+    vp = vp.reshape(b, nk, k_block, kheads, hd)
+    qpos = qpos.reshape(nq, q_block)
+    kpos = kpos.reshape(nk, k_block)
+    scale = hd ** -0.5
+
+    def per_qblock(qb, qpb):
+        # qb (B, q_block, K, G, hd)
+        def step(carry, xs):
+            m, l, acc = carry
+            kb, vb, kpb = xs
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qb, kb).astype(jnp.float32)
+            s = s * scale + _mask_bias(qpb, kpb, causal, window)[None, None,
+                                                                None]
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(vb.dtype), vb).astype(
+                    jnp.float32)
+            return (m_new, l, acc), None
+
+        # m0 = 0 (not -inf): keeps fully-masked kv blocks contributing
+        # exp(-1e30) = 0 instead of exp(0) = 1; the online softmax is exact
+        # for any monotone m >= 0 baseline.
+        m0 = jnp.zeros((b, kheads, g, q_block), jnp.float32)
+        l0 = jnp.zeros((b, kheads, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, kheads, g, q_block, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0),
+            (kp.transpose(1, 0, 2, 3, 4), vp.transpose(1, 0, 2, 3, 4), kpos))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4)  # (B, q_block, K, G, hd)
+
+    out = jax.lax.map(
+        lambda args: per_qblock(*args),
+        (qp.transpose(1, 0, 2, 3, 4, 5), qpos))  # (nq, B, q_block, K, G, hd)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq_p, h, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def attention(
+    p,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    causal: bool = True,
+    window: int = 0,
+    rope_theta: float = 1e4,
+    mrope_sections: Optional[tuple] = None,
+    kv_cache: Optional[tuple] = None,
+    cache_position: Optional[jax.Array] = None,
+    flash_q_block: int = 512,
+    flash_kv_block: int = 512,
+    dense_threshold: int = 2048,
+):
+    """Full attention layer. Returns (out, new_kv) where new_kv is the
+    (k, v) pair — the full sequence for prefill, or the updated cache slice
+    for decode (``kv_cache`` + ``cache_position`` given, Sq == 1).
+    """
+    b, sq, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, sq, num_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, sq, num_kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(b, sq, num_kv_heads, head_dim)
+    q = logical(q, "batch", "attn_seq", "heads", None)
+    k = logical(k, "batch", "attn_seq", "kv_heads", None)
+    pos2d = positions if positions.ndim == 2 else positions[..., 0]
+    if rope_theta > 0:
+        q = apply_rope(q, positions, rope_theta, mrope_sections)
+        k = apply_rope(k, positions, rope_theta, mrope_sections)
+
+    if kv_cache is not None:
+        # cache_position: scalar write index, or (B,) per-row indices (the
+        # continuous-batching path — each slot decodes at its own offset).
+        cp = jnp.asarray(cache_position)
+        if cp.ndim == 0:
+            ck = jax.lax.dynamic_update_slice(
+                kv_cache[0], k.astype(kv_cache[0].dtype), (0, cp, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                kv_cache[1], v.astype(kv_cache[1].dtype), (0, cp, 0, 0))
+        else:
+            upd = jax.vmap(
+                lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0, 0)))
+            ck = upd(kv_cache[0], k.astype(kv_cache[0].dtype), cp)
+            cv = upd(kv_cache[1], v.astype(kv_cache[1].dtype), cp)
+        sk = ck.shape[1]
+        k_pos = jnp.arange(sk)
+        if cp.ndim == 0:
+            bias = _mask_bias(pos2d[0], k_pos, causal, window)  # (Sq, Sk)
+            written = k_pos[None, :] <= cp + sq - 1
+            bias = bias + jnp.where(written, 0.0, -1e30)
+        else:  # per-row positions -> (B, Sq, Sk) bias
+            diff = pos2d[:, :, None] - k_pos[None, None, :]
+            ok = jnp.ones(diff.shape, bool)
+            if causal:
+                ok &= diff >= 0
+            wnd = jnp.asarray(window)
+            ok &= (wnd <= 0) | (diff < wnd)
+            ok &= k_pos[None, None, :] <= (cp[:, None, None] + sq - 1)
+            bias = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+        out = _sdpa_dense(q, ck.astype(q.dtype), cv.astype(q.dtype), bias)
+        new_kv = (ck, cv)
+    else:
+        sk = sq
+        if max(sq, sk) <= dense_threshold:
+            bias = _mask_bias(pos2d[0], pos2d[0], causal, window)
+            out = _sdpa_dense(q, k, v, bias)
+        else:
+            out = _sdpa_flash(q, k, v, pos2d[0], pos2d[0], causal, window,
+                              flash_q_block, flash_kv_block)
+        new_kv = (k, v)
+    out = logical(out, "batch", "attn_seq", "heads", None)
+    out = out.reshape(b, sq, num_heads * head_dim)
+    return out @ p["wo"], new_kv
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab, d_model):
+    return {"table": (jax.random.normal(key, (vocab, d_model)) * 1.0).astype(
+        jnp.float32)}
+
+
+def embed(p, tokens):
+    out = jnp.take(p["table"], tokens, axis=0)
+    return logical(out, "batch", "seq", "embed")
+
+
+def unembed(p_embed, tokens_hidden, head=None):
+    if head is not None:
+        return tokens_hidden @ head["w"]
+    return tokens_hidden @ p_embed["table"].T.astype(tokens_hidden.dtype)

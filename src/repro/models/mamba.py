@@ -1,0 +1,133 @@
+"""Mamba-1 selective SSM block (Jamba's sequence mixer).
+
+Diagonal selective state space: per channel c and state dim n,
+
+    h_t = exp(dt_t * A)[c,n] * h_{t-1} + dt_t * B_t[n] * x_t[c]
+    y_t = sum_n C_t[n] * h_t[c,n] + D[c] * x_t[c]
+
+Training/prefill uses a *chunked associative scan*: within a chunk of length
+``chunk`` the recurrence runs as a parallel associative scan (materializing
+(B, chunk, d_inner, N) only per chunk — the TPU-memory-aware adaptation of
+the CUDA selective-scan kernel); chunk states chain through a lax.scan.
+Decode carries (conv_state, ssm_state) and costs O(1) per token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_mamba(key, d_model, d_state=16, d_conv=4, expand=2, dt_rank=None):
+    d_inner = expand * d_model
+    dt_rank = dt_rank or max(d_model // 16, 1)
+    ks = jax.random.split(key, 7)
+    # S4D-real initialization for A.
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    return {
+        "in_proj": layers._dense_init(ks[0], (d_model, 2 * d_inner)),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner)) *
+                   (d_conv ** -0.5)).astype(jnp.float32),
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "x_to_bc": layers._dense_init(ks[2], (d_inner, 2 * d_state)),
+        "x_to_dt": layers._dense_init(ks[3], (d_inner, dt_rank)),
+        "dt_proj": layers._dense_init(ks[4], (dt_rank, d_inner),
+                                      scale=dt_rank ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((d_inner,), 1e-2))),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": layers._dense_init(ks[5], (d_inner, d_model)),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv over S. x (B,S,C), w (K,C). Returns (y, tail)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)  # (B, K-1, C) trailing inputs
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i: i + x.shape[1]] * w[i][None, None].astype(x.dtype)
+            for i in range(k))
+    return y + b.astype(x.dtype), xp[:, -(k - 1):]
+
+
+def _ssm_chunked(x, dt, b_t, c_t, a, h0, chunk):
+    """Chunked diagonal selective scan.
+
+    x, dt: (B, S, C); b_t, c_t: (B, S, N); a: (C, N); h0: (B, C, N).
+    Returns (y (B,S,C), h_final). S % chunk == 0 (caller pads).
+    """
+    bsz, s, c = x.shape
+    n = b_t.shape[-1]
+    nc = s // chunk
+    xs = x.reshape(bsz, nc, chunk, c).transpose(1, 0, 2, 3)
+    dts = dt.reshape(bsz, nc, chunk, c).transpose(1, 0, 2, 3)
+    bs = b_t.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    cs = c_t.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, xs_):
+        xc, dtc, bc, cc = xs_  # (B, chunk, ...)
+        # log decay per step: (B, chunk, C, N)
+        la = dtc[..., None] * (-a)[None, None]  # positive a -> -a*dt
+        bx = (dtc * xc)[..., None] * bc[:, :, None, :]  # (B,chunk,C,N)
+
+        def assoc(l, r):
+            (la1, u1), (la2, u2) = l, r
+            return la1 + la2, u1 * jnp.exp(la2) + u2
+
+        la_c, u_c = jax.lax.associative_scan(assoc, (la, bx), axis=1)
+        h_t = u_c + h[:, None] * jnp.exp(la_c)  # (B,chunk,C,N)
+        y = jnp.einsum("bscn,bsn->bsc", h_t, cc)
+        return h_t[:, -1], y
+
+    h_f, ys = jax.lax.scan(chunk_step, h0, (xs, dts, bs, cs))
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, s, c)
+    return y, h_f
+
+
+def mamba_block(p, x, *, d_state=16, chunk=64, state=None):
+    """x (B, S, d_model) -> (y, new_state). state = (conv_tail, h)."""
+    bsz, s, _ = x.shape
+    d_inner = p["A_log"].shape[0]
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state[0] if state is not None else None
+    xc, conv_tail = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    bc = xc @ p["x_to_bc"]
+    b_t, c_t = jnp.split(bc, 2, axis=-1)  # (B,S,N) each
+    dt = jax.nn.softplus(
+        (xc @ p["x_to_dt"]) @ p["dt_proj"] + p["dt_bias"])  # (B,S,C)
+    a = jnp.exp(p["A_log"])  # (C, N), positive; decay = exp(-dt*a)
+    h0 = (state[1] if state is not None else
+          jnp.zeros((bsz, d_inner, d_state), jnp.float32))
+
+    if s == 1:  # decode fast path
+        la = (dt[:, 0, :, None] * (-a)[None]).astype(jnp.float32)
+        h = h0 * jnp.exp(la) + ((dt[:, 0] * xc[:, 0])[..., None] *
+                                b_t[:, 0, None, :]).astype(jnp.float32)
+        y = jnp.einsum("bcn,bn->bc", h,
+                       c_t[:, 0].astype(jnp.float32))[:, None]
+        y = y.astype(x.dtype)
+        h_f = h
+    else:
+        pad = (-s) % chunk
+        if pad:
+            xc_p = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b_p = jnp.pad(b_t, ((0, 0), (0, pad), (0, 0)))
+            c_p = jnp.pad(c_t, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xc_p, dt_p, b_p, c_p = xc, dt, b_t, c_t
+        y, h_f = _ssm_chunked(
+            xc_p.astype(jnp.float32), dt_p.astype(jnp.float32),
+            b_p.astype(jnp.float32), c_p.astype(jnp.float32), a, h0, chunk)
+        y = y[:, :s].astype(x.dtype)
+    y = y + xc * p["D"].astype(xc.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], (conv_tail, h_f)

@@ -1,0 +1,454 @@
+"""Config-driven model assembly for the architecture zoo.
+
+One :class:`Model` class covers all 10 assigned architectures through two
+layer-stack shapes:
+
+  * homogeneous stack (dense / uniform-MoE / RWKV): one ``lax.scan`` over
+    L-stacked params, with an optional unrolled dense prefix (DeepSeek-MoE's
+    first-k-dense layers) and a per-layer traced window schedule (Gemma-3's
+    5:1 local:global attention);
+  * period stack (Jamba): ``lax.scan`` over repeating 8-layer periods whose
+    body unrolls the (mamba x7 + attn x1, alternating MLP/MoE) pattern.
+
+Every mode (train / prefill / decode) flows through the same block code, so
+decode-vs-prefill consistency is testable layer-for-layer. Scan-over-layers
+keeps the HLO small (one body per distinct block), which is what makes
+512-way SPMD dry-run compiles tractable on this host; the roofline analyzer
+multiplies while-body costs back up by the annotated trip counts.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import frontend, layers, mamba, moe, rwkv
+
+
+def _cast(tree, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype)
+        if (a.dtype == jnp.float32 and a.ndim > 1) else a, tree)
+
+
+def _index(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, remat: bool = True):
+        self.cfg = cfg
+        self.remat = remat
+        self.compute_dtype = (jnp.bfloat16 if cfg.dtype == "bfloat16"
+                              else jnp.float32)
+
+    # ------------------------------------------------------------------
+    # Parameter initialization
+    # ------------------------------------------------------------------
+    def init_params(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        p: Dict[str, Any] = {
+            "embed": layers.init_embedding(keys[0], cfg.vocab_size,
+                                           cfg.d_model),
+            "final_norm": layers.init_rmsnorm(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = {"w": layers._dense_init(
+                keys[1], (cfg.d_model, cfg.vocab_size))}
+        if cfg.frontend != "none":
+            p["frontend"] = frontend.init_frontend(
+                keys[2], cfg.frontend_dim, cfg.d_model)
+        if cfg.block_pattern:  # Jamba period stack
+            period = len(cfg.block_pattern)
+            n_periods = cfg.num_layers // period
+            assert n_periods * period == cfg.num_layers, "pattern must tile"
+            pk = jax.random.split(keys[3], n_periods)
+            p["periods"] = jax.vmap(self._init_period)(pk)
+        else:
+            n_prefix = cfg.first_k_dense
+            if n_prefix:
+                pk = jax.random.split(keys[4], n_prefix)
+                p["prefix"] = [self._init_layer(pk[i], force_dense=True)
+                               for i in range(n_prefix)]
+            lk = jax.random.split(keys[5], cfg.num_layers - n_prefix)
+            p["blocks"] = jax.vmap(self._init_layer)(lk)
+        return p
+
+    def _init_layer(self, key, force_dense: bool = False):
+        cfg = self.cfg
+        ks = jax.random.split(key, 2)
+        p = {"ln1": layers.init_rmsnorm(cfg.d_model),
+             "ln2": layers.init_rmsnorm(cfg.d_model)}
+        if cfg.rwkv:
+            p["tm"] = rwkv.init_rwkv_timemix(ks[0], cfg.d_model,
+                                             cfg.rwkv_head_dim)
+            p["cm"] = rwkv.init_rwkv_channelmix(ks[1], cfg.d_model, cfg.d_ff)
+            return p
+        p["attn"] = layers.init_attention(
+            ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim)
+        if cfg.num_experts and not force_dense:
+            p["moe"] = moe.init_moe(ks[1], cfg.d_model, cfg.d_ff_expert,
+                                    cfg.num_experts, cfg.num_shared_experts)
+        else:
+            p["mlp"] = layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff,
+                                       cfg.mlp_type)
+        return p
+
+    def _init_period(self, key):
+        cfg = self.cfg
+        pattern = cfg.block_pattern
+        ks = jax.random.split(key, len(pattern))
+        attn_p, mamba_p, mlp_p, moe_p = [], [], [], []
+        for i, kind in enumerate(pattern):
+            sub = jax.random.split(ks[i], 2)
+            entry = {"ln1": layers.init_rmsnorm(cfg.d_model),
+                     "ln2": layers.init_rmsnorm(cfg.d_model)}
+            if kind == "attn":
+                entry["mix"] = layers.init_attention(
+                    sub[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                    cfg.head_dim)
+                attn_p.append(entry)
+            else:
+                entry["mix"] = mamba.init_mamba(
+                    sub[0], cfg.d_model, cfg.mamba_d_state, cfg.mamba_d_conv,
+                    cfg.mamba_expand)
+                mamba_p.append(entry)
+            if cfg.num_experts and i % cfg.moe_every == cfg.moe_offset:
+                moe_p.append(moe.init_moe(
+                    sub[1], cfg.d_model, cfg.d_ff_expert, cfg.num_experts,
+                    cfg.num_shared_experts))
+            else:
+                mlp_p.append(layers.init_mlp(sub[1], cfg.d_model, cfg.d_ff,
+                                             cfg.mlp_type))
+
+        def stack(lst):
+            if not lst:
+                return None
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *lst)
+
+        out = {"attn": stack(attn_p), "mamba": stack(mamba_p),
+               "mlp": stack(mlp_p), "moe": stack(moe_p)}
+        return {k: v for k, v in out.items() if v is not None}
+
+    # ------------------------------------------------------------------
+    # Blocks
+    # ------------------------------------------------------------------
+    def _attn_ffn_block(self, lp, x, positions, window, kv_cache, cache_pos,
+                        force_dense: bool = False):
+        cfg = self.cfg
+        h = layers.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        out, new_kv = layers.attention(
+            lp["attn"], h, positions,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, causal=cfg.causal, window=window,
+            rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
+            kv_cache=kv_cache, cache_position=cache_pos,
+            flash_q_block=cfg.attn_flash_q_block,
+            flash_kv_block=cfg.attn_flash_kv_block,
+            dense_threshold=cfg.attn_dense_threshold)
+        x = x + out
+        h = layers.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if "moe" in lp and not force_dense:
+            f, aux = moe.moe_ffn(lp["moe"], h, num_experts=cfg.num_experts,
+                                 top_k=cfg.num_experts_per_tok,
+                                 capacity_factor=cfg.capacity_factor,
+                                 dispatch=cfg.moe_dispatch)
+        else:
+            f, aux = layers.mlp(lp["mlp"], h, cfg.mlp_type), jnp.float32(0)
+        out = layers.logical(x + f, "batch", "seq", "embed")
+        return out, new_kv, aux
+
+    def _rwkv_block(self, lp, x, state):
+        cfg = self.cfg
+        h = layers.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        out, (tm_x, wkv) = rwkv.rwkv_timemix(
+            lp["tm"], h, head_dim=cfg.rwkv_head_dim, chunk=cfg.rwkv_chunk,
+            state=(state["tm_x"], state["wkv"]))
+        x = x + out
+        h = layers.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        out, cm_x = rwkv.rwkv_channelmix(lp["cm"], h, state["cm_x"])
+        return x + out, {"tm_x": tm_x, "wkv": wkv, "cm_x": cm_x}
+
+    # ------------------------------------------------------------------
+    # Backbones. cache=None => train/prefill(attention archs);
+    # cache given => decode (or stateful prefill for rwkv/jamba).
+    # ------------------------------------------------------------------
+    def _backbone(self, params, x, positions, cache, cache_pos):
+        if self.cfg.block_pattern:
+            return self._backbone_periods(params, x, positions, cache,
+                                          cache_pos)
+        if self.cfg.rwkv:
+            return self._backbone_rwkv(params, x, cache)
+        return self._backbone_attn(params, x, positions, cache, cache_pos)
+
+    def _backbone_rwkv(self, params, x, cache):
+        st = (cache["blocks"] if cache is not None else
+              self._rwkv_zero_state(x.shape[0], x.dtype,
+                                    self.cfg.num_layers))
+
+        def body(h, xs):
+            lp, s = xs
+            h, new_s = self._rwkv_block(lp, h, s)
+            return h, new_s
+
+        if self.remat:
+            body = jax.checkpoint(body)
+        x, new_states = jax.lax.scan(body, x, (params["blocks"], st))
+        new_cache = {"blocks": new_states} if cache is not None else None
+        return x, new_cache, jnp.float32(0)
+
+    def _backbone_attn(self, params, x, positions, cache, cache_pos):
+        cfg = self.cfg
+        aux_total = jnp.float32(0)
+        new_prefix = {"k": [], "v": []}
+        for i, lp in enumerate(params.get("prefix", [])):
+            kvc = None
+            if cache is not None and "prefix" in cache:
+                kvc = (cache["prefix"]["k"][i], cache["prefix"]["v"][i])
+            x, new_kv, aux = self._attn_ffn_block(
+                lp, x, positions, self._window(i), kvc, cache_pos,
+                force_dense=True)
+            aux_total += aux
+            new_prefix["k"].append(new_kv[0])
+            new_prefix["v"].append(new_kv[1])
+
+        n_stack = cfg.num_layers - cfg.first_k_dense
+        windows = jnp.asarray(
+            [self._window(i + cfg.first_k_dense) for i in range(n_stack)],
+            jnp.int32)
+
+        if cache is None:
+            def body(h, xs):
+                lp, win = xs
+                h, new_kv, aux = self._attn_ffn_block(lp, h, positions, win,
+                                                      None, None)
+                return h, (new_kv, aux)
+            if self.remat:
+                body = jax.checkpoint(body)
+            x, (kvs, auxs) = jax.lax.scan(body, x,
+                                          (params["blocks"], windows))
+            new_cache = {"blocks": {"k": kvs[0], "v": kvs[1]}}
+        else:
+            def body(h, xs):
+                lp, win, st = xs
+                h, new_kv, aux = self._attn_ffn_block(
+                    lp, h, positions, win, (st["k"], st["v"]), cache_pos)
+                return h, ({"k": new_kv[0], "v": new_kv[1]}, aux)
+            if self.remat:
+                body = jax.checkpoint(body)
+            x, (new_states, auxs) = jax.lax.scan(
+                body, x, (params["blocks"], windows, cache["blocks"]))
+            new_cache = {"blocks": new_states}
+        if params.get("prefix"):
+            new_cache["prefix"] = {
+                "k": jnp.stack(new_prefix["k"]),
+                "v": jnp.stack(new_prefix["v"])}
+        return x, new_cache, aux_total + jnp.sum(auxs)
+
+    def _backbone_periods(self, params, x, positions, cache, cache_pos):
+        cfg = self.cfg
+        pattern = cfg.block_pattern
+
+        def body(h, xs):
+            pp, st = xs  # period params, period state (or None)
+            ia = im = imlp = imoe = 0
+            new_attn_k, new_attn_v, new_conv, new_ssm = [], [], [], []
+            auxs = jnp.float32(0)
+            for i, kind in enumerate(pattern):
+                if kind == "attn":
+                    lp = _index(pp["attn"], ia)
+                    kvc = None if st is None else (
+                        st["attn_k"][ia], st["attn_v"][ia])
+                    hn = layers.rmsnorm(lp["ln1"], h, cfg.norm_eps)
+                    out, new_kv = layers.attention(
+                        lp["mix"], hn, positions,
+                        num_heads=cfg.num_heads,
+                        num_kv_heads=cfg.num_kv_heads,
+                        head_dim=cfg.head_dim, causal=True, window=0,
+                        rope_theta=cfg.rope_theta, kv_cache=kvc,
+                        cache_position=cache_pos,
+                        flash_q_block=cfg.attn_flash_q_block,
+                        flash_kv_block=cfg.attn_flash_kv_block,
+                        dense_threshold=cfg.attn_dense_threshold)
+                    h = h + out
+                    new_attn_k.append(new_kv[0])
+                    new_attn_v.append(new_kv[1])
+                    ln2 = lp["ln2"]
+                    ia += 1
+                else:
+                    lp = _index(pp["mamba"], im)
+                    mst = None if st is None else (
+                        st["mamba_conv"][im], st["mamba_ssm"][im])
+                    hn = layers.rmsnorm(lp["ln1"], h, cfg.norm_eps)
+                    out, (conv, ssm) = mamba.mamba_block(
+                        lp["mix"], hn, d_state=cfg.mamba_d_state,
+                        chunk=cfg.mamba_chunk, state=mst)
+                    h = h + out
+                    new_conv.append(conv)
+                    new_ssm.append(ssm)
+                    ln2 = lp["ln2"]
+                    im += 1
+                hn = layers.rmsnorm(ln2, h, cfg.norm_eps)
+                if cfg.num_experts and i % cfg.moe_every == cfg.moe_offset:
+                    mp = _index(pp["moe"], imoe)
+                    f, aux = moe.moe_ffn(
+                        mp, hn, num_experts=cfg.num_experts,
+                        top_k=cfg.num_experts_per_tok,
+                        capacity_factor=cfg.capacity_factor,
+                        dispatch=cfg.moe_dispatch)
+                    auxs += aux
+                    imoe += 1
+                else:
+                    mp = _index(pp["mlp"], imlp)
+                    f = layers.mlp(mp, hn, cfg.mlp_type)
+                    imlp += 1
+                h = h + f
+            new_st = None
+            if st is not None:
+                new_st = {"attn_k": jnp.stack(new_attn_k),
+                          "attn_v": jnp.stack(new_attn_v),
+                          "mamba_conv": jnp.stack(new_conv),
+                          "mamba_ssm": jnp.stack(new_ssm)}
+            return h, (new_st, auxs)
+
+        if self.remat:
+            body = jax.checkpoint(body)
+        st = None if cache is None else cache["periods"]
+        if cache is None:
+            def body_nc(h, pp):
+                return body(h, (pp, None))
+            x, (_, auxs) = jax.lax.scan(body_nc, x, params["periods"])
+            new_cache = None
+        else:
+            x, (new_states, auxs) = jax.lax.scan(body, x,
+                                                 (params["periods"], st))
+            new_cache = {"periods": new_states}
+        return x, new_cache, jnp.sum(auxs)
+
+    # ------------------------------------------------------------------
+    def _window(self, i: int) -> int:
+        cfg = self.cfg
+        if cfg.sliding_window <= 0:
+            return 0
+        return 0 if cfg.layer_is_global(i) else cfg.sliding_window
+
+    def _rwkv_zero_state(self, bsz, dtype, n_layers):
+        cfg = self.cfg
+        h = cfg.d_model // cfg.rwkv_head_dim
+        return {
+            "tm_x": jnp.zeros((n_layers, bsz, cfg.d_model), dtype),
+            "wkv": jnp.zeros((n_layers, bsz, h, cfg.rwkv_head_dim,
+                              cfg.rwkv_head_dim), jnp.float32),
+            "cm_x": jnp.zeros((n_layers, bsz, cfg.d_model), dtype),
+        }
+
+    # ------------------------------------------------------------------
+    # Public entry points
+    # ------------------------------------------------------------------
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        if cfg.frontend == "audio":
+            x = frontend.audio_embed(
+                params["frontend"], batch["frames"].astype(
+                    self.compute_dtype))
+            bsz, s = x.shape[0], x.shape[1]
+        else:
+            x = layers.embed(params["embed"], batch["tokens"]).astype(
+                self.compute_dtype)
+            bsz, s = batch["tokens"].shape
+            if cfg.frontend == "vision" and "vision_embeds" in batch:
+                x = frontend.vision_merge(params["frontend"], x,
+                                          batch["vision_embeds"])
+        if "positions" in batch:
+            positions = batch["positions"]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (bsz, s))
+            if cfg.mrope_sections is not None:
+                positions = jnp.broadcast_to(positions[..., None],
+                                             (bsz, s, 3))
+        return x, positions
+
+    def apply(self, params, batch, cache=None, cache_pos=None):
+        """Shared forward: returns (logits, new_cache, aux_loss)."""
+        cfg = self.cfg
+        params = _cast(params, self.compute_dtype)
+        x, positions = self._embed_inputs(params, batch)
+        x, new_cache, aux = self._backbone(params, x, positions, cache,
+                                           cache_pos)
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        x = layers.logical(x, "batch", "seq", "embed")
+        logits = layers.unembed(params["embed"], x, params.get("lm_head"))
+        logits = layers.logical(logits, "batch", "logits_seq", "vocab")
+        return logits, new_cache, aux
+
+    def forward_train(self, params, batch):
+        logits, _, aux = self.apply(params, batch)
+        return logits, aux
+
+    def prefill(self, params, batch):
+        """Full-sequence forward returning (last-position logits, cache)."""
+        cfg = self.cfg
+        if cfg.rwkv or cfg.block_pattern:
+            bsz = batch["tokens"].shape[0]
+            s = batch["tokens"].shape[1]
+            cache = self.init_cache(bsz, s)
+            logits, new_cache, _ = self.apply(params, batch, cache,
+                                              jnp.int32(0))
+            return logits, new_cache
+        logits, kv, _ = self.apply(params, batch)
+        return logits, kv
+
+    def decode_step(self, params, batch, cache, position):
+        """One new token per sequence against an existing cache.
+
+        batch: {"tokens": (B, 1)}; position: scalar int (same for all rows,
+        continuous-batching offsets ride on the positions array instead).
+        """
+        b = dict(batch)
+        bsz = b["tokens"].shape[0]
+        pos = jnp.full((bsz, 1), position, jnp.int32)
+        if self.cfg.mrope_sections is not None:
+            pos = jnp.broadcast_to(pos[..., None], (bsz, 1, 3))
+        b["positions"] = pos
+        logits, new_cache, _ = self.apply(params, b, cache, position)
+        return logits[:, -1], new_cache
+
+    # ------------------------------------------------------------------
+    def init_cache(self, bsz: int, max_len: int):
+        cfg = self.cfg
+        dt = self.compute_dtype
+        if cfg.rwkv:
+            return {"blocks": self._rwkv_zero_state(bsz, dt, cfg.num_layers)}
+        if cfg.block_pattern:
+            pattern = cfg.block_pattern
+            n_periods = cfg.num_layers // len(pattern)
+            n_attn = sum(k == "attn" for k in pattern)
+            n_mamba = len(pattern) - n_attn
+            di = cfg.mamba_expand * cfg.d_model
+            return {"periods": {
+                "attn_k": jnp.zeros((n_periods, n_attn, bsz, max_len,
+                                     cfg.num_kv_heads, cfg.head_dim), dt),
+                "attn_v": jnp.zeros((n_periods, n_attn, bsz, max_len,
+                                     cfg.num_kv_heads, cfg.head_dim), dt),
+                "mamba_conv": jnp.zeros((n_periods, n_mamba, bsz,
+                                         cfg.mamba_d_conv - 1, di), dt),
+                "mamba_ssm": jnp.zeros((n_periods, n_mamba, bsz, di,
+                                        cfg.mamba_d_state), jnp.float32),
+            }}
+        n_stack = cfg.num_layers - cfg.first_k_dense
+        cache = {"blocks": {
+            "k": jnp.zeros((n_stack, bsz, max_len, cfg.num_kv_heads,
+                            cfg.head_dim), dt),
+            "v": jnp.zeros((n_stack, bsz, max_len, cfg.num_kv_heads,
+                            cfg.head_dim), dt)}}
+        if cfg.first_k_dense:
+            cache["prefix"] = {
+                "k": jnp.zeros((cfg.first_k_dense, bsz, max_len,
+                                cfg.num_kv_heads, cfg.head_dim), dt),
+                "v": jnp.zeros((cfg.first_k_dense, bsz, max_len,
+                                cfg.num_kv_heads, cfg.head_dim), dt)}
+        return cache

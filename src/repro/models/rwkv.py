@@ -1,0 +1,167 @@
+"""RWKV-6 "Finch" block: data-dependent-decay linear attention (TimeMix) +
+squared-ReLU ChannelMix, both with token-shift.
+
+TimeMix maintains a per-head matrix state S in R^{hd x hd}:
+
+    S_t = diag(w_t) @ S_{t-1} + k_t^T v_t
+    o_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+
+with w_t in (0,1) *data-dependent* (the Finch contribution) via a low-rank
+MLP, and u the "bonus" for the current token. Training/prefill uses the
+chunked formulation: decays are tracked in log space, intra-chunk
+interactions become (chunk x chunk) masked matmuls (MXU work), and the state
+chains between chunks through a lax.scan — the TPU-native equivalent of the
+fused CUDA wkv kernel. Decode carries (last_x_tm, last_x_cm, S) per layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_rwkv_timemix(key, d_model, head_dim=64, lora_r=32):
+    h = d_model // head_dim
+    ks = jax.random.split(key, 12)
+    return {
+        "mu_r": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d_model,), 0.5, jnp.float32),
+        "wr": layers._dense_init(ks[0], (d_model, d_model)),
+        "wk": layers._dense_init(ks[1], (d_model, d_model)),
+        "wv": layers._dense_init(ks[2], (d_model, d_model)),
+        "wg": layers._dense_init(ks[3], (d_model, d_model)),
+        "wo": layers._dense_init(ks[4], (d_model, d_model)),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x W1) W2))
+        "w0": jnp.full((d_model,), -6.0, jnp.float32),
+        "w1": layers._dense_init(ks[5], (d_model, lora_r)),
+        "w2": layers._dense_init(ks[6], (lora_r, d_model)),
+        "u": (jax.random.normal(ks[7], (h, head_dim)) * 0.1).astype(
+            jnp.float32),
+        "ln_out": jnp.ones((d_model,), jnp.float32),
+    }
+
+
+def init_rwkv_channelmix(key, d_model, d_ff):
+    ks = jax.random.split(key, 2)
+    return {
+        "mu_k": jnp.full((d_model,), 0.5, jnp.float32),
+        "wk": layers._dense_init(ks[0], (d_model, d_ff)),
+        "wv": layers._dense_init(ks[1], (d_ff, d_model)),
+    }
+
+
+def _token_shift(x, last):
+    """shifted[t] = x[t-1]; position -1 comes from the carried state."""
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _wkv_chunked(r, k, v, logw, u, s0, chunk):
+    """Chunked WKV. r,k,v (B,S,H,hd); logw (B,S,H,hd) (<=0); u (H,hd);
+    s0 (B,H,hd,hd). Returns (o (B,S,H,hd), s_final)."""
+    b, s, h, d = r.shape
+    nc = s // chunk
+
+    def reshape(x):
+        return x.reshape(b, nc, chunk, h, d).transpose(1, 0, 2, 3, 4)
+
+    rs, ks_, vs, lws = map(reshape, (r, k, v, logw))
+
+    def chunk_step(s_prev, xs):
+        rc, kc, vc, lwc = xs  # (B, chunk, H, hd)
+        cum = jnp.cumsum(lwc, axis=1)  # inclusive cumsum of log decay
+        total = cum[:, -1]  # (B, H, hd)
+        # Inter-chunk: r_t picks up the state decayed from chunk start;
+        # decay applied to r includes w_1..w_t? State entering position t has
+        # been decayed by w_1..w_t (inclusive: S updated with diag(w) first).
+        r_dec = rc * jnp.exp(cum)  # (B,chunk,H,hd)
+        o_inter = jnp.einsum("bthd,bhde->bthe", r_dec, s_prev)
+        # Intra-chunk: contribution of k_j v_j to o_t (j < t) decayed by
+        # w_{j+1}..w_t = exp(cum_t - cum_j).
+        k_sc = kc * jnp.exp(-cum)  # divide out k_j's own inclusive decay * w_j
+        # pairwise logits: (B, H, t, j)
+        att = jnp.einsum("bthd,bjhd->bhtj", r_dec, k_sc)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(tri[None, None], att, 0.0)
+        # current-token bonus: r_t . (u * k_t)
+        diag = jnp.einsum("bthd,bthd->bth", rc, kc * u[None, None])
+        o_intra = jnp.einsum("bhtj,bjhe->bthe", att, vc) + \
+            diag[..., None] * vc
+        # state update: S_new = diag(exp(total)) S_prev + sum_j
+        #   (k_j decayed by w_{j+1}..w_end) v_j^T
+        k_end = kc * jnp.exp(total[:, None] - cum)  # w_{j+1..end} applied
+        s_new = s_prev * jnp.exp(total)[..., None] + jnp.einsum(
+            "bjhd,bjhe->bhde", k_end, vc)
+        return s_new, o_inter + o_intra
+
+    s_f, os_ = jax.lax.scan(chunk_step, s0, (rs, ks_, vs, lws))
+    o = os_.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+    return o, s_f
+
+
+def rwkv_timemix(p, x, *, head_dim=64, chunk=64, state=None):
+    """x (B,S,D) -> (y, (last_x, S_state))."""
+    b, s, d = x.shape
+    h = d // head_dim
+    last = state[0] if state is not None else jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, last)
+
+    def mix(mu):
+        return x + (xs - x) * mu.astype(x.dtype)
+
+    r = (mix(p["mu_r"]) @ p["wr"]).reshape(b, s, h, head_dim)
+    k = (mix(p["mu_k"]) @ p["wk"]).reshape(b, s, h, head_dim)
+    v = (mix(p["mu_v"]) @ p["wv"]).reshape(b, s, h, head_dim)
+    g = jax.nn.silu(mix(p["mu_g"]) @ p["wg"])
+    # Finch: data-dependent decay (low-rank), w in (0,1), logw <= 0.
+    wx = mix(p["mu_w"])
+    logw = -jnp.exp(
+        p["w0"] + jnp.tanh(wx.astype(jnp.float32) @ p["w1"]) @ p["w2"])
+    # Stability clamp: the chunked factorization materializes exp(-cumsum);
+    # bounding the per-step log-decay at -2 keeps that factor < e^64 for
+    # chunk=32 (f32-safe). Contributions beyond 2 nats/step are ~0 anyway.
+    logw = jnp.maximum(logw, -2.0)
+    logw = logw.reshape(b, s, h, head_dim)
+
+    s0 = (state[1] if state is not None else
+          jnp.zeros((b, h, head_dim, head_dim), jnp.float32))
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    if s == 1:  # decode fast path
+        w1 = jnp.exp(logw[:, 0])  # (B,H,hd)
+        o = jnp.einsum("bhd,bhde->bhe", rf[:, 0] * w1, s0) + \
+            jnp.einsum("bhd,bhd,bhe->bhe", rf[:, 0], kf[:, 0] * p["u"],
+                       vf[:, 0])
+        s_f = s0 * w1[..., None] + jnp.einsum(
+            "bhd,bhe->bhde", kf[:, 0], vf[:, 0])
+        o = o[:, None]
+    else:
+        pad = (-s) % chunk
+        if pad:
+            rf = jnp.pad(rf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        o, s_f = _wkv_chunked(rf, kf, vf, logw, p["u"], s0, chunk)
+        o = o[:, :s]
+    o = o.reshape(b, s, h, head_dim)
+    # per-head group norm
+    mu = o.mean(-1, keepdims=True)
+    var = ((o - mu) ** 2).mean(-1, keepdims=True)
+    o = (o - mu) * jax.lax.rsqrt(var + 1e-5)
+    o = o.reshape(b, s, d) * p["ln_out"]
+    y = (o.astype(x.dtype) * g) @ p["wo"]
+    return y, (x[:, -1], s_f)
+
+
+def rwkv_channelmix(p, x, state=None):
+    b, s, d = x.shape
+    last = state if state is not None else jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, last)
+    xk = x + (xs - x) * p["mu_k"].astype(x.dtype)
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    h = layers.logical(h, "batch", "mlp_seq", "mlp")
+    return h @ p["wv"], x[:, -1]

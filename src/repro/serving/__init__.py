@@ -1,0 +1,8 @@
+"""Serving substrate: KV cache, prefill/decode steps, request batcher."""
+
+from repro.serving.serve_step import (
+    greedy_generate, make_decode_step, make_prefill_step)
+from repro.serving.kv_cache import pad_cache_to, shard_cache
+
+__all__ = ["greedy_generate", "make_decode_step", "make_prefill_step",
+           "pad_cache_to", "shard_cache"]

@@ -1,0 +1,136 @@
+"""Host-side request batcher for decode serving.
+
+Fixed-slot continuous batching: the decode step always runs at batch B (the
+compiled shape); the batcher multiplexes live requests onto slots. A slot
+frees when its request emits EOS or hits max_new. Per-slot positions ride on
+the model's positions array — each slot decodes at its own offset while
+sharing one compiled step.
+
+This mirrors the paper's RDC-worker fetch&add: a shared queue hands work
+(requests) to fixed workers (slots) so all finish "at about the same time".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new: int = 32
+    eos_id: int = -1  # -1: never
+    out: Optional[np.ndarray] = None
+
+
+class SlotBatcher:
+    def __init__(self, model, params, batch_size: int, max_len: int):
+        from repro.serving.serve_step import make_decode_step
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.max_len = max_len
+        self.cache = model.init_cache(batch_size, max_len)
+        self._decode = jax.jit(self._step_fn)
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self.slot_pos = np.zeros(batch_size, np.int32)  # next write index
+        self.slot_tok = np.zeros(batch_size, np.int32)
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self.done: Dict[int, np.ndarray] = {}
+
+    # one-token step with per-slot positions
+    def _step_fn(self, params, tokens, cache, positions):
+        batch = {"tokens": tokens,
+                 "positions": self._expand_positions(positions)}
+        logits, new_cache, _ = self.model.apply(
+            params, batch, cache, positions)  # per-slot write indices
+        return jnp.argmax(logits[:, -1], axis=-1), new_cache
+
+    def _expand_positions(self, positions):
+        pos = positions[:, None]
+        if self.model.cfg.mrope_sections is not None:
+            pos = jnp.broadcast_to(pos[..., None], (*pos.shape, 3))
+        return pos
+
+    def submit(self, req: Request):
+        self.queue.put(req)
+
+    def _admit(self):
+        for i in range(self.B):
+            if self.slots[i] is None and not self.queue.empty():
+                req = self.queue.get()
+                # Prefill the prompt into this slot (single-slot prefill).
+                logits, cache1 = self.model.prefill(
+                    self.params, {"tokens": jnp.asarray(req.prompt[None])})
+                from repro.serving.kv_cache import pad_cache_to
+                cache1 = pad_cache_to(cache1, self.max_len)
+                self._copy_slot(cache1, i)
+                req.out = np.asarray(req.prompt, np.int32)
+                self.slots[i] = req
+                self.slot_pos[i] = len(req.prompt)
+                last = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+                self.slot_tok[i] = int(last[0])
+                req.out = np.concatenate([req.out, last.astype(np.int32)])
+
+    def _copy_slot(self, cache1, slot: int):
+        """Copy a 1-batch cache into slot ``slot`` of the big cache."""
+        def merge(big, small, path=()):
+            return big
+
+        def walk(big, small):
+            if isinstance(big, dict):
+                return {k: walk(big[k], small[k]) for k in big}
+            # batch axis: attention (.., B, S, K, hd) at -4; recurrent at -3
+            # or -2 (tm_x/cm_x (L,B,D)).
+            bax = _batch_axis(big.ndim, small.shape, big.shape)
+            idx = [slice(None)] * big.ndim
+            idx[bax] = slice(slot, slot + 1)
+            # pad small's seq axis already handled by pad_cache_to
+            return big.at[tuple(idx)].set(small.astype(big.dtype))
+
+        self.cache = walk(self.cache, cache1)
+
+    def run(self, steps: int):
+        """Drive up to ``steps`` decode iterations; returns finished map."""
+        for _ in range(steps):
+            self._admit()
+            live = [i for i in range(self.B) if self.slots[i] is not None]
+            if not live:
+                break
+            tokens = jnp.asarray(self.slot_tok[:, None])
+            positions = jnp.asarray(self.slot_pos)
+            nxt, self.cache = self._decode(self.params, tokens, self.cache,
+                                           positions)
+            nxt = np.asarray(nxt)
+            for i in live:
+                req = self.slots[i]
+                tok = int(nxt[i])
+                req.out = np.concatenate(
+                    [req.out, np.asarray([tok], np.int32)])
+                self.slot_pos[i] += 1
+                self.slot_tok[i] = tok
+                done_len = len(req.out) - len(req.prompt)
+                if tok == req.eos_id or done_len >= req.max_new or \
+                        self.slot_pos[i] >= self.max_len - 1:
+                    self.done[req.rid] = req.out
+                    self.slots[i] = None
+        return self.done
+
+
+def _batch_axis(ndim: int, small_shape, big_shape) -> int:
+    """Find the axis where small=1 and big=B (the batch axis)."""
+    for ax in range(ndim):
+        if small_shape[ax] == 1 and big_shape[ax] != small_shape[ax]:
+            return ax
+    # batch == 1 server: first axis whose small==big==1 after stacks
+    for ax in range(ndim):
+        if small_shape[ax] == 1:
+            return ax
+    raise ValueError(f"no batch axis in {small_shape} vs {big_shape}")

@@ -1,0 +1,114 @@
+"""KV-cache utilities: layout, padding, and mesh-sharding policy.
+
+Cache pytrees (see Model.init_cache) have these leaf kinds, matched by key:
+
+  k / v            (L, B, S, K, hd)        attention cache, stacked layers
+  attn_k / attn_v  (P, n, B, S, K, hd)     jamba period-stacked attention
+  wkv              (L, B, H, hd, hd)       rwkv matrix state
+  tm_x / cm_x      (L, B, D)               rwkv token-shift state
+  mamba_conv       (P, n, B, K-1, C)       mamba conv tail
+  mamba_ssm        (P, n, B, C, N)         mamba ssm state
+
+Sharding policy: batch over the data axes everywhere. Attention caches take
+the model axis on kv-heads when divisible, else on the sequence axis (the
+flash-decode layout for MQA like granite's kv=1). Recurrent states take the
+model axis on their channel/head dimension.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def pad_cache_to(cache, max_len: int):
+    """Grow attention cache leaves (.., S, K, hd) to S = max_len after a
+    prefill, making room for decode. Recurrent leaves pass through."""
+    def pad(path, leaf):
+        name = _key_name(path)
+        if name in ("k", "v", "attn_k", "attn_v"):
+            s = leaf.shape[-3]
+            if s < max_len:
+                widths = [(0, 0)] * leaf.ndim
+                widths[-3] = (0, max_len - s)
+                return jnp.pad(leaf, widths)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(pad, cache)
+
+
+def _key_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def cache_pspec_tree(cache_tree, cfg: ModelConfig, batch_axes=("data",),
+                     model_axis: str = "model", model_size: int = 1,
+                     seq_axes: tuple = ()):
+    """PartitionSpec pytree for a cache (arrays or ShapeDtypeStructs).
+
+    ``seq_axes``: shard the attention-cache sequence dim over these axes
+    instead of batch-sharding — the long-context/small-batch layout (e.g.
+    long_500k at batch 1: batch can't shard, the 500k cache must).
+    """
+    kv_on_model = model_size > 1 and cfg.num_kv_heads and \
+        cfg.num_kv_heads % model_size == 0
+    batch_axes = tuple(batch_axes) if batch_axes else None
+
+    def spec(path, leaf):
+        name = _key_name(path)
+        lead: tuple
+        if name in ("k", "v", "attn_k", "attn_v"):
+            lead = (None,) * (leaf.ndim - 4)
+            if seq_axes:
+                kv_ax = model_axis if kv_on_model else None
+                return P(*lead, None, tuple(seq_axes), kv_ax, None)
+            if kv_on_model:
+                return P(*lead, batch_axes, None, model_axis, None)
+            return P(*lead, batch_axes, model_axis, None, None)
+        if name == "wkv":  # (L, B, H, hd, hd)
+            heads = leaf.shape[2]
+            ax = model_axis if (model_size > 1 and heads % model_size == 0) \
+                else None
+            return P(None, batch_axes, ax, None, None)
+        if name in ("tm_x", "cm_x"):  # (L, B, D)
+            dim = leaf.shape[-1]
+            ax = model_axis if (model_size > 1 and dim % model_size == 0) \
+                else None
+            return P(None, batch_axes, ax)
+        if name == "mamba_conv":  # (..., B, K-1, C)
+            lead = (None,) * (leaf.ndim - 3)
+            ax = model_axis if (model_size > 1 and
+                                leaf.shape[-1] % model_size == 0) else None
+            return P(*lead, batch_axes, None, ax)
+        if name == "mamba_ssm":  # (..., B, C, N)
+            lead = (None,) * (leaf.ndim - 3)
+            ax = model_axis if (model_size > 1 and
+                                leaf.shape[-2] % model_size == 0) else None
+            return P(*lead, batch_axes, ax, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def cache_sharding_tree(cache_tree, mesh: Mesh, cfg: ModelConfig,
+                        batch_axes=("data",), model_axis: str = "model",
+                        seq_axes: tuple = ()):
+    """NamedSharding pytree matching a cache tree (arrays or SDS)."""
+    model_size = mesh.shape[model_axis] if model_axis in mesh.shape else 1
+    specs = cache_pspec_tree(cache_tree, cfg, batch_axes, model_axis,
+                             model_size, seq_axes)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def shard_cache(cache, mesh: Mesh, cfg: ModelConfig, batch_axes=("data",),
+                model_axis: str = "model"):
+    shardings = cache_sharding_tree(cache, mesh, cfg, batch_axes, model_axis)
+    return jax.tree.map(jax.device_put, cache, shardings)

@@ -1,0 +1,62 @@
+"""Serving steps: prefill and single-token decode, plus greedy generation.
+
+``make_prefill_step`` / ``make_decode_step`` return plain jittable functions;
+the launcher wraps them in jax.jit with mesh shardings (launch/dryrun.py and
+launch/serve.py). The decode step is the function the assignment's
+``decode_*`` / ``long_*`` shapes lower.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import Model
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch)
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, batch, cache, position):
+        """batch: {"tokens": (B, 1)}; position: scalar int32 (cache write
+        index; same for all rows of the batch)."""
+        return model.decode_step(params, batch, cache, position)
+
+    return decode_step
+
+
+def greedy_generate(model: Model, params, prompt_tokens: jax.Array,
+                    max_new: int = 16, temperature: float = 0.0,
+                    key=None) -> jax.Array:
+    """Host-side loop: prefill the prompt, then decode max_new tokens."""
+    bsz, plen = prompt_tokens.shape
+    total = plen + max_new
+    logits, cache = model.prefill(params, {"tokens": prompt_tokens})
+    from repro.serving.kv_cache import pad_cache_to
+    if not (model.cfg.rwkv or model.cfg.block_pattern):
+        cache = pad_cache_to(cache, total)
+    elif model.cfg.block_pattern:
+        cache = pad_cache_to(cache, total)
+    decode = jax.jit(make_decode_step(model))
+    out = [prompt_tokens]
+    last = logits[:, -1] if logits.ndim == 3 else logits
+    for i in range(max_new):
+        if temperature > 0 and key is not None:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, last / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(last, axis=-1)
+        nxt = nxt[:, None].astype(jnp.int32)
+        out.append(nxt)
+        last, cache = decode(params, {"tokens": nxt}, cache,
+                             jnp.int32(plen + i))
+    return jnp.concatenate(out, axis=1)

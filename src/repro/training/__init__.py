@@ -1,0 +1,8 @@
+"""Training substrate: optimizer, step, sharding, checkpointing, data."""
+
+from repro.training.optimizer import OptimizerConfig, OptState, init_opt_state
+from repro.training.train_step import TrainConfig, make_train_step
+from repro.training import checkpoint, sharding, elastic
+
+__all__ = ["OptimizerConfig", "OptState", "init_opt_state", "TrainConfig",
+           "make_train_step", "checkpoint", "sharding", "elastic"]

@@ -1,0 +1,48 @@
+"""Gradient compression for the cross-pod (pure-DP) all-reduce.
+
+At 1000+ nodes the pod axis carries one full gradient all-reduce per step
+over the slowest links (DCN/optical). Quantizing the operand to bf16 or int8
+cuts that traffic 2-4x. Under GSPMD we cannot splice custom code *inside* the
+collective, so compression is applied to the gradient values themselves
+(quantize -> dequantize); XLA then all-reduces the (information-reduced)
+f32 values. The information loss is identical to a quantized wire format;
+tests bound the round-trip error, and an error-feedback variant accumulates
+the quantization residual into the next step (Seide et al. semantics).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_decompress(g: jax.Array, method: str = "bf16") -> jax.Array:
+    """Round-trip a gradient leaf through the compressed representation."""
+    if method == "none" or g.ndim == 0:
+        return g
+    if method == "bf16":
+        return g.astype(jnp.bfloat16).astype(jnp.float32)
+    if method == "int8":
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        return q.astype(jnp.float32) * scale
+    raise ValueError(f"unknown compression {method!r}")
+
+
+def compress_with_feedback(g: jax.Array, residual: jax.Array,
+                           method: str = "int8"):
+    """Error-feedback compression: returns (decompressed, new_residual)."""
+    if method == "none" or g.ndim == 0:
+        return g, residual
+    corrected = g + residual
+    out = compress_decompress(corrected, method)
+    return out, corrected - out
+
+
+def tree_compress_with_feedback(grads, residuals, method: str = "int8"):
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    outs = [compress_with_feedback(g, r, method)
+            for g, r in zip(flat_g, flat_r)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in outs]),
+            jax.tree.unflatten(treedef, [o[1] for o in outs]))

@@ -1,0 +1,159 @@
+"""Sharding policy: logical-axis rules and param-tree PartitionSpecs.
+
+Baseline layout (DESIGN.md §4):
+
+  * weights: tensor-parallel over ``model`` on the heads/ffn/vocab axis and
+    FSDP over ``data`` on the other axis (optimizer state inherits the same
+    specs — ZeRO-3-equivalent);
+  * activations: batch over (``pod``, ``data``); heads / mlp / experts /
+    vocab over ``model``;
+  * the ``pod`` axis is pure data parallelism (gradient all-reduce only) —
+    the axis that scales to 1000+ nodes.
+
+Param rules are name-based over the path in the params pytree; every rule
+skips axes whose size doesn't divide the mesh axis (falls back to
+replication on that axis), so the same rules serve every arch config.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import layers as layers_mod
+
+# logical activation axis -> mesh axes (see models/layers.py:logical)
+def activation_rules(mesh: Mesh, batch_axes: Sequence[str]):
+    has_model = "model" in mesh.shape and mesh.shape["model"] > 1
+    model = "model" if has_model else None
+    return {
+        "batch": tuple(batch_axes),
+        "seq": None,
+        "embed": None,
+        "heads": model,
+        "kv_heads": model,
+        "mlp": model,
+        "vocab": model,
+        "expert": model,
+    }
+
+
+def use_logical_rules(mesh: Mesh, batch_axes: Sequence[str] = ("data",),
+                      extra: Optional[dict] = None):
+    """Install activation-sharding rules (affects layers.logical).
+
+    ``extra``: overrides merged on top (e.g. {"seq": "model"} turns on
+    sequence-parallel activations — a §Perf lever)."""
+    rules = activation_rules(mesh, batch_axes)
+    if extra:
+        rules.update(extra)
+    layers_mod.set_logical_rules(rules, mesh)
+
+
+def clear_logical_rules():
+    layers_mod.set_logical_rules(None, None)
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+    return "/".join(parts)
+
+
+# (regex over path, spec builder over trailing named dims). The builder gets
+# the *unstacked* trailing dims; leading stack dims (layers / periods /
+# sub-stacks) are padded with None automatically by rank.
+_MATRIX_RULES = [
+    # moe routed experts FIRST (so the generic rules can't claim them):
+    # EP over model on the expert dim, (E, d, f) trailing dims.
+    (r"moe/wi_gate$", ("ep", None, None)),
+    (r"moe/wi_up$", ("ep", None, None)),
+    (r"moe/wo$", ("ep", None, None)),
+    (r"router$", (None, None)),
+    # moe shared experts: plain TP
+    (r"shared/wi_gate$", ("fsdp", "tp")),
+    (r"shared/wi_up$", ("fsdp", "tp")),
+    (r"shared/wo$", ("tp", "fsdp")),
+    # attention projections
+    (r"(attn|mix)/wq$", ("fsdp", "tp")),
+    (r"(attn|mix)/wk$", ("fsdp", "tp")),
+    (r"(attn|mix)/wv$", ("fsdp", "tp")),
+    (r"(attn|mix)/wo$", ("tp", "fsdp")),
+    # rwkv timemix / channelmix
+    (r"tm/(wr|wk|wv|wg)$", ("fsdp", "tp")),
+    (r"tm/wo$", ("tp", "fsdp")),
+    (r"tm/(w1|w2)$", (None, None)),
+    (r"cm/wk$", ("fsdp", "tp")),
+    (r"cm/wv$", ("tp", "fsdp")),
+    # mamba
+    (r"mix/in_proj$", ("fsdp", "tp")),
+    (r"mix/out_proj$", ("tp", "fsdp")),
+    (r"mix/x_to_bc$", ("tp", None)),
+    (r"mix/x_to_dt$", ("tp", None)),
+    (r"mix/dt_proj$", (None, "tp")),
+    # dense mlp
+    (r"wi_gate$", ("fsdp", "tp")),
+    (r"wi_up$", ("fsdp", "tp")),
+    (r"(mlp)/wi$", ("fsdp", "tp")),
+    (r"/wo$", ("tp", "fsdp")),
+    # embeddings / head: vocab over model (TP logits), embed over data
+    (r"embed/table$", ("tp", "fsdp")),
+    (r"lm_head/w$", ("fsdp", "tp")),
+    (r"frontend/proj$", (None, "fsdp")),
+]
+
+
+def param_pspec(path, leaf, *, fsdp_axis: Optional[str],
+                tp_axis: Optional[str], mesh: Mesh) -> P:
+    """Resolve one leaf's PartitionSpec by name rules + divisibility."""
+    ps = _path_str(path)
+    shape = leaf.shape
+
+    def axis_ok(name, dim):
+        if name is None:
+            return None
+        mesh_axes = {"fsdp": fsdp_axis, "tp": tp_axis, "ep": tp_axis}
+        ax = mesh_axes.get(name, name)
+        if ax is None or ax not in mesh.shape:
+            return None
+        return ax if dim % mesh.shape[ax] == 0 else None
+
+    for pat, dims in _MATRIX_RULES:
+        if re.search(pat, ps):
+            n = len(dims)
+            if leaf.ndim < n:
+                return P()
+            lead = (None,) * (leaf.ndim - n)
+            tail = tuple(axis_ok(d, shape[leaf.ndim - n + i])
+                         for i, d in enumerate(dims))
+            return P(*lead, *tail)
+    return P()  # norms, biases, scalars: replicated
+
+
+def param_shardings(params, mesh: Mesh, *, fsdp_axis: Optional[str] = "data",
+                    tp_axis: Optional[str] = "model"):
+    """NamedSharding pytree for a params pytree (arrays or SDS)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_pspec(path, leaf, fsdp_axis=fsdp_axis,
+                              tp_axis=tp_axis, mesh=mesh)),
+        params)
+
+
+def opt_state_shardings(opt_state, param_shard_tree, mesh: Mesh):
+    """Optimizer state: step replicated; moments follow the param specs."""
+    from repro.training.optimizer import OptState
+    rep = NamedSharding(mesh, P())
+    return OptState(step=rep, mu=param_shard_tree, nu=param_shard_tree)

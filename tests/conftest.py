@@ -1,0 +1,19 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose — tests run on the
+single real CPU device; multi-device tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def walk_20k():
+    from repro.core import datagen
+    return datagen.random_walk(20000, 256, seed=11)
+
+
+@pytest.fixture(scope="session")
+def small_index(walk_20k):
+    import jax.numpy as jnp
+    from repro.core import build_index
+    return build_index(jnp.asarray(walk_20k))

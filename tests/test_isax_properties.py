@@ -1,0 +1,88 @@
+"""Hypothesis property tests for the iSAX math — the system's invariants.
+
+The load-bearing property is LOWER-BOUNDING: for any query and any series,
+LB(paa(q), sax(s)) <= ED(q, s). Exactness of the whole index rests on it.
+"""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isax
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+def _finite_series(n_rows, length):
+    return hnp.arrays(
+        np.float32, (n_rows, length),
+        elements=st.floats(-50, 50, width=32,
+                           allow_nan=False, allow_infinity=False))
+
+
+@hypothesis.given(_finite_series(8, 64), _finite_series(1, 64))
+@hypothesis.settings(**SETTINGS)
+def test_lower_bound_never_exceeds_euclidean(series, query):
+    series = jnp.asarray(series)
+    q = isax.znorm(jnp.asarray(query[0]))
+    zs = isax.znorm(series)
+    sax, _ = isax.convert_to_sax(series, segments=8)
+    qp = isax.paa(q, 8)
+    lb = isax.lower_bound_sq(qp, sax, series_length=64)
+    ed = isax.euclid_sq(q, zs)
+    assert np.all(np.asarray(lb) <= np.asarray(ed) + 1e-2), \
+        (np.asarray(lb) - np.asarray(ed)).max()
+
+
+@hypothesis.given(_finite_series(4, 32))
+@hypothesis.settings(**SETTINGS)
+def test_paa_preserves_mean(series):
+    s = isax.znorm(jnp.asarray(series))
+    p = isax.paa(s, 8)
+    np.testing.assert_allclose(np.asarray(p.mean(-1)),
+                               np.asarray(s.mean(-1)), atol=1e-4)
+
+
+@hypothesis.given(_finite_series(16, 64), st.sampled_from([4, 16, 64, 256]))
+@hypothesis.settings(**SETTINGS)
+def test_symbols_in_range_and_monotone(series, card):
+    s = jnp.asarray(series)
+    sax, paa = isax.convert_to_sax(s, segments=8, cardinality=card)
+    a = np.asarray(sax)
+    assert a.min() >= 0 and a.max() < card
+    # symbol order must follow PAA value order within each segment
+    p = np.asarray(paa)
+    for j in range(8):
+        order = np.argsort(p[:, j])
+        assert np.all(np.diff(a[order, j].astype(int)) >= 0)
+
+
+@hypothesis.given(_finite_series(16, 64))
+@hypothesis.settings(**SETTINGS)
+def test_root_key_is_msb_plane(series):
+    sax, _ = isax.convert_to_sax(jnp.asarray(series), segments=8)
+    root = np.asarray(isax.root_key(sax))
+    plane0 = np.asarray(isax.refine_keys(sax, 1)[0])
+    assert np.array_equal(root, plane0)
+    assert root.min() >= 0 and root.max() < 2 ** 8
+
+
+@hypothesis.given(_finite_series(8, 64))
+@hypothesis.settings(**SETTINGS)
+def test_symbol_bounds_bracket_paa(series):
+    s = jnp.asarray(series)
+    sax, paa = isax.convert_to_sax(s, segments=8)
+    lo, hi = isax.symbol_bounds(sax)
+    p = np.asarray(paa)
+    assert np.all(p >= np.asarray(lo) - 1e-5)
+    assert np.all(p <= np.asarray(hi) + 1e-5)
+
+
+def test_breakpoints_are_gaussian_quantiles():
+    bp = np.asarray(isax.gaussian_breakpoints(4))
+    # quartiles of N(0,1)
+    np.testing.assert_allclose(bp, [-0.6745, 0.0, 0.6745], atol=1e-3)
+    bp256 = np.asarray(isax.gaussian_breakpoints(256))
+    assert len(bp256) == 255 and np.all(np.diff(bp256) > 0)

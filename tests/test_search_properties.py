@@ -1,0 +1,41 @@
+"""Hypothesis: exact search equals the oracle on arbitrary inputs."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SearchConfig, build_index, exact_search, isax
+
+
+@hypothesis.given(
+    hnp.arrays(np.float32, st.tuples(st.integers(20, 200),
+                                     st.just(64)),
+               elements=st.floats(-30, 30, width=32, allow_nan=False,
+                                  allow_infinity=False)),
+    st.integers(0, 10 ** 6),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_exact_search_matches_oracle(series, qseed):
+    series = series + np.linspace(0, 1, 64, dtype=np.float32)  # break ties
+    q = jnp.asarray(
+        np.random.default_rng(qseed).standard_normal(64), jnp.float32)
+    idx = build_index(jnp.asarray(series), segments=8)
+    res = exact_search(idx, q, SearchConfig(round_size=32, leaf_cap=16))
+    oracle = np.asarray(isax.euclid_sq(isax.znorm(q), idx.raw))
+    np.testing.assert_allclose(float(res.dist_sq), float(oracle.min()),
+                               rtol=1e-3, atol=1e-3)
+
+
+@hypothesis.given(st.integers(1, 5), st.integers(0, 100))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_query_in_dataset_found_with_zero_distance(k, seed):
+    rng = np.random.default_rng(seed)
+    series = rng.standard_normal((50 * k, 64)).cumsum(axis=1).astype(
+        np.float32)
+    idx = build_index(jnp.asarray(series), segments=8)
+    probe = int(rng.integers(0, len(series)))
+    res = exact_search(idx, jnp.asarray(series[probe]),
+                       SearchConfig(round_size=64, leaf_cap=16))
+    assert float(res.dist_sq) <= 1e-3

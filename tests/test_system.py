@@ -1,0 +1,85 @@
+"""End-to-end behaviour tests for the paper's system: ingest -> staged
+parallel build -> exact query answering -> downstream classifier, plus the
+paper's headline semantics (exactness + pruning) on one realistic run."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    PipelineBuilder, SearchConfig, SeriesSource, brute_force, build_index,
+    exact_search, nb_exact_search, random_walk,
+)
+from repro.core.classifier import KnnClassifier
+from repro.core.datagen import write_dataset
+from repro.core.index import validate_index
+
+
+def test_end_to_end_from_disk_file(tmp_path):
+    """The paper's full pipeline: raw file on disk -> double-buffered
+    coordinator ingest -> ParIS+ build (with memory-limit epochs) -> exact
+    1-NN answering, validated against brute force."""
+    path = str(tmp_path / "data.bin")
+    write_dataset(path, num_series=12000, length=128, seed=42)
+    src = SeriesSource.from_file(path, length=128, chunk_series=2048)
+    assert src.num_series == 12000
+
+    index, stats = PipelineBuilder(
+        mode="paris+", n_workers=4, mem_limit_series=5000,
+        workdir=str(tmp_path / "build")).build(src)
+    assert stats.epochs == 2
+    assert all(validate_index(index).values())
+
+    rng = np.random.default_rng(0)
+    pruned_fracs = []
+    for _ in range(5):
+        q = jnp.asarray(rng.standard_normal(128).cumsum(), jnp.float32)
+        want = brute_force(index, q)
+        got = exact_search(index, q, SearchConfig(round_size=1024))
+        assert int(got.position) == int(want.position)
+        np.testing.assert_allclose(float(got.dist_sq),
+                                   float(want.dist_sq), rtol=1e-4)
+        pruned_fracs.append(1 - int(got.raw_reads) / index.num_series)
+    # the paper's economics: most raw data never read
+    assert np.mean(pruned_fracs) > 0.7, pruned_fracs
+
+
+def test_shared_bsf_beats_local_bsf_on_reads():
+    """Fig. 20: in the cold-init regime (weak first BSF — the paper's
+    single-leaf approximate search), ParIS+ (shared BSF, sorted candidates)
+    must read no more raw series than nb-ParIS+ (local BSFs)."""
+    raw = random_walk(16000, 128, seed=9)
+    index = build_index(jnp.asarray(raw))
+    rng = np.random.default_rng(1)
+    total_plus, total_nb = 0, 0
+    for _ in range(6):
+        base = np.asarray(index.raw[rng.integers(0, index.num_series)])
+        q = jnp.asarray(base + rng.standard_normal(128) * 1.5, jnp.float32)
+        plus = exact_search(index, q, SearchConfig(round_size=256,
+                                                   leaf_cap=4))
+        nb = nb_exact_search(index, q, SearchConfig(round_size=256,
+                                                    workers=16, leaf_cap=4))
+        total_plus += int(plus.raw_reads)
+        total_nb += int(nb.raw_reads)
+    assert total_plus <= total_nb
+    assert total_plus < 0.5 * index.num_series * 6
+
+
+def test_knn_classifier_end_to_end():
+    """Fig. 18 use-case: a k-NN classifier over indexed labeled series."""
+    rng = np.random.default_rng(2)
+    a = (rng.standard_normal((3000, 128)) + 0.05).cumsum(axis=1)
+    b = (rng.standard_normal((3000, 128)) - 0.05).cumsum(axis=1)
+    raw = np.concatenate([a, b]).astype(np.float32)
+    labels = np.concatenate([np.zeros(3000, np.int32),
+                             np.ones(3000, np.int32)])
+    index = build_index(jnp.asarray(raw))
+    clf = KnnClassifier(index, labels, k=5)
+    agree = 0
+    for _ in range(6):
+        q = jnp.asarray((rng.standard_normal(128)
+                         + rng.choice([-0.05, 0.05])).cumsum(),
+                        jnp.float32)
+        agree += clf.predict(q) == clf.predict_brute(q)
+    assert agree == 6
