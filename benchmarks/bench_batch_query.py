@@ -1,0 +1,122 @@
+"""Batched multi-query search engine vs single-query baselines.
+
+Sweeps the batch size Q and reports queries/sec for three ways of answering
+the same Q exact 1-NN queries:
+
+  seq    — Q sequential :func:`exact_search_single` calls (the pre-batch
+           engine: per-query LBC pass + full argsort + private RDC loop),
+  vmap   — ``jax.vmap`` over the single-query engine (one launch, but still
+           per-query argsorts and no shared candidate streaming),
+  batch  — :func:`exact_search_batch` (fused (Q, N) lower-bound kernel,
+           per-query top_k selection, ONE shared RDC while_loop).
+
+The acceptance bar for this engine: batch at Q=64 on the ref backend is
+>= 5x faster end-to-end than 64 sequential calls, with exact parity of the
+returned (dist_sq, position) pairs. Results are written to
+``BENCH_batch_query.json`` when invoked as a script.
+
+    PYTHONPATH=src python benchmarks/bench_batch_query.py [--tiny|--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import dataset, timeit
+from repro.core import (
+    SearchConfig, build_index, exact_search_batch, exact_search_single,
+)
+
+ROUND_SIZE = 512
+
+
+def run(quick: bool = False, tiny: bool = False, impl: str = "ref"):
+    n = 2_000 if tiny else (20_000 if quick else 50_000)
+    q_sweep = [1, 8] if tiny else [1, 8, 64, 256]
+    cfg = SearchConfig(round_size=ROUND_SIZE, impl=impl)
+    raw = jnp.asarray(dataset(n, 256))
+    index = build_index(raw)
+    rng = np.random.default_rng(99)
+    queries = jnp.asarray(
+        rng.standard_normal((max(q_sweep), 256)).cumsum(axis=1), jnp.float32
+    )
+
+    def seq_fn(qs):
+        return [exact_search_single(index, q, cfg) for q in qs]
+
+    vmapped = jax.vmap(lambda q: exact_search_single(index, q, cfg))
+
+    rows, results = [], []
+    for q_n in q_sweep:
+        qs = queries[:q_n]
+        batch_us = timeit(exact_search_batch, index, qs, cfg,
+                          repeats=3, warmup=1)
+        seq_us = timeit(seq_fn, qs, repeats=2, warmup=1)
+        vmap_us = timeit(vmapped, qs, repeats=3, warmup=1)
+
+        got = exact_search_batch(index, qs, cfg)
+        want = seq_fn(qs)
+        parity = all(
+            int(got.position[i]) == int(want[i].position)
+            and abs(float(got.dist_sq[i]) - float(want[i].dist_sq)) < 1e-3
+            for i in range(q_n)
+        )
+        entry = dict(
+            Q=q_n,
+            batch_us=batch_us,
+            seq_us=seq_us,
+            vmap_us=vmap_us,
+            batch_qps=q_n / (batch_us * 1e-6),
+            speedup_vs_seq=seq_us / batch_us,
+            speedup_vs_vmap=vmap_us / batch_us,
+            parity=parity,
+        )
+        results.append(entry)
+        rows.append((
+            f"batch_query_{n}_Q{q_n}", batch_us,
+            f"qps={entry['batch_qps']:.1f} "
+            f"seq_x={entry['speedup_vs_seq']:.2f} "
+            f"vmap_x={entry['speedup_vs_vmap']:.2f} parity={parity}"))
+    report = dict(
+        n_series=n,
+        series_length=256,
+        round_size=ROUND_SIZE,
+        impl=impl,
+        backend=jax.default_backend(),
+        results=results,
+    )
+    return rows, report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: 2k series, Q in {1, 8}")
+    ap.add_argument("--quick", action="store_true", help="20k series")
+    ap.add_argument("--impl", default="ref",
+                    help="kernel impl for the acceptance numbers")
+    ap.add_argument("--out", default=None,
+                    help="JSON path (default: repo-root BENCH_batch_query.json;"
+                         " skipped under --tiny)")
+    args = ap.parse_args()
+    rows, report = run(quick=args.quick, tiny=args.tiny, impl=args.impl)
+    from benchmarks.common import emit
+    emit(rows)
+    out = args.out
+    if out is None and not args.tiny:
+        out = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_batch_query.json")
+    if out:
+        with open(out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,14 +19,16 @@ def main() -> None:
                     help="comma-separated bench names (e.g. query,build)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_build, bench_classifier, bench_lower_bound,
-                            bench_pruning, bench_query, roofline_table)
+    from benchmarks import (bench_batch_query, bench_build, bench_classifier,
+                            bench_lower_bound, bench_pruning, bench_query,
+                            roofline_table)
     from benchmarks.common import emit
 
     benches = {
         "lower_bound": bench_lower_bound.run,  # paper Table 1
         "build": bench_build.run,  # paper Figs 9-13
         "query": bench_query.run,  # paper Figs 14-17/19
+        "batch_query": lambda quick: bench_batch_query.run(quick=quick)[0],
         "pruning": bench_pruning.run,  # paper Fig 20
         "classifier": bench_classifier.run,  # paper Fig 18
         "roofline": roofline_table.run,  # TPU dry-run summary

@@ -6,6 +6,11 @@ state queries the index for its nearest memorized states, whose next tokens
 form a retrieval distribution that is interpolated with the LM logits
 (Khandelwal et al.'s kNN-LM, with ParIS+ replacing the FAISS store).
 
+Serving is *batched* end-to-end: B sequences decode together and every
+decode step answers all B retrieval queries with ONE ``exact_knn_batch``
+call — one fused (Q, N) lower-bound pass and one shared RDC loop per step
+instead of B independent searches.
+
     PYTHONPATH=src python examples/retrieval_serve.py
 """
 
@@ -16,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import SearchConfig, build_index, exact_knn
+from repro.core import SearchConfig, build_index, exact_knn_batch
 from repro.models import Model
 from repro.serving.kv_cache import pad_cache_to
 from repro.training import data as data_mod
@@ -43,31 +48,37 @@ def main():
     index = build_index(jnp.asarray(vecs), segments=16)
     print(f"indexed {index.num_series} (state, next-token) pairs")
 
-    # --- serving pass: decode with kNN interpolation
-    lam, k = 0.3, 8
-    prompt = tokens[:1, :8]
-    logits, cache = model.prefill(params, {"tokens": prompt})
+    # --- serving pass: B sequences decode together; each step answers the
+    # whole query batch through the fused batched search engine.
+    lam, k, bsz, steps = 0.3, 8, 4, 8
+    prompts = tokens[:bsz, :8]
+    logits, cache = model.prefill(params, {"tokens": prompts})
     cache = pad_cache_to(cache, 32)
-    out = list(np.asarray(prompt[0]))
-    last = logits[:, -1]
-    for i in range(8):
-        q = last[0, :256]
-        dists, pos = exact_knn(index, q, k=k, round_size=512)
-        knn_logits = jnp.full((cfg.vocab_size,), -1e9)
-        w = jax.nn.softmax(-jnp.sqrt(jnp.maximum(dists, 0.0)))
-        for j in range(k):
-            t = int(next_tokens[int(pos[j])])
-            knn_logits = knn_logits.at[t].max(jnp.log(w[j] + 1e-9))
-        mix = (1 - lam) * jax.nn.log_softmax(last[0]) + \
-            lam * jax.nn.log_softmax(knn_logits)
-        nxt = int(jnp.argmax(mix))
-        out.append(nxt)
+    outs = [list(np.asarray(prompts[b])) for b in range(bsz)]
+    last = logits[:, -1]  # (B, vocab)
+    for i in range(steps):
+        qs = last[:, :256]  # (B, 256): one retrieval query per sequence
+        dists, pos = exact_knn_batch(index, qs, k=k, round_size=512)
+        nxts = []
+        for b in range(bsz):
+            knn_logits = jnp.full((cfg.vocab_size,), -1e9)
+            w = jax.nn.softmax(-jnp.sqrt(jnp.maximum(dists[b], 0.0)))
+            for j in range(k):
+                t = int(next_tokens[int(pos[b, j])])
+                knn_logits = knn_logits.at[t].max(jnp.log(w[j] + 1e-9))
+            mix = (1 - lam) * jax.nn.log_softmax(last[b]) + \
+                lam * jax.nn.log_softmax(knn_logits)
+            nxt = int(jnp.argmax(mix))
+            outs[b].append(nxt)
+            nxts.append(nxt)
         last, cache = model.decode_step(
-            params, {"tokens": jnp.asarray([[nxt]])}, cache,
-            jnp.int32(prompt.shape[1] + i))
-    print("prompt + generated:", out)
+            params, {"tokens": jnp.asarray(nxts)[:, None]}, cache,
+            jnp.int32(prompts.shape[1] + i))
+    for b in range(bsz):
+        print(f"seq {b} prompt + generated:", outs[b])
     print("(retrieval hits informed every step; ParIS+ answered",
-          f"{8} exact {k}-NN queries over {index.num_series} vectors)")
+          f"{steps} batched exact {k}-NN queries x {bsz} sequences",
+          f"over {index.num_series} vectors)")
 
 
 if __name__ == "__main__":

@@ -5,9 +5,13 @@ from repro.core.search import (
     SearchConfig,
     SearchResult,
     approx_search,
+    approx_search_batch,
     brute_force,
     exact_knn,
+    exact_knn_batch,
     exact_search,
+    exact_search_batch,
+    exact_search_single,
     nb_exact_search,
 )
 from repro.core.build_pipeline import BuildStats, PipelineBuilder
@@ -15,7 +19,8 @@ from repro.core.datagen import SeriesSource, random_walk
 
 __all__ = [
     "ParISIndex", "build_index", "assemble_index",
-    "SearchConfig", "SearchResult", "approx_search", "brute_force",
-    "exact_knn", "exact_search", "nb_exact_search",
+    "SearchConfig", "SearchResult", "approx_search", "approx_search_batch",
+    "brute_force", "exact_knn", "exact_knn_batch", "exact_search",
+    "exact_search_batch", "exact_search_single", "nb_exact_search",
     "BuildStats", "PipelineBuilder", "SeriesSource", "random_walk",
 ]

@@ -38,11 +38,29 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import isax
 from repro.core.index import ParISIndex
-from repro.core.search import SearchResult
+from repro.core.search import SearchResult, select_len as search_select_len
 from repro.kernels import ops
 
 INF = jnp.float32(jnp.inf)
 IMAX = jnp.int32(2**31 - 1)
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6 public API
+
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+
+else:  # jax < 0.6: experimental location, check_rep spelling
+
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map_impl(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
 
 
 @jax.tree_util.register_dataclass
@@ -163,6 +181,15 @@ def _local_exact_search(
         lb_sorted = jnp.concatenate(
             [lb_sorted, jnp.full(padded - sel_len, INF)])
 
+    # Candidate data is gathered into round order OUTSIDE the while_loop:
+    # a data-dependent gather inside a while_loop body miscompiles under
+    # shard_map on older jax (rows silently come back wrong on the forced
+    # host-device backend), and a contiguous dynamic_slice of pre-gathered
+    # rows is the TPU-friendly access pattern anyway (the paper's sequential
+    # reads of the sorted candidate list).
+    raw_ordered = jnp.take(raw_l, order, axis=0)  # (padded, n)
+    pos_ordered = jnp.take(pos_l, order, axis=0)  # (padded,)
+
     def cond(st):
         r, bsf, *_ = st
         nxt = jax.lax.dynamic_index_in_dim(
@@ -182,14 +209,15 @@ def _local_exact_search(
 
     def body(st):
         r, bsf, bsfpos, reads, updates = st
-        idx = jax.lax.dynamic_slice_in_dim(order, r * round_size, round_size)
         lbs = jax.lax.dynamic_slice_in_dim(lb_sorted, r * round_size,
                                            round_size)
         mask = lbs < bsf
-        raws = jnp.take(raw_l, idx, axis=0)
+        raws = jax.lax.dynamic_slice_in_dim(
+            raw_ordered, r * round_size, round_size)
         d = jnp.where(mask, ops.euclid_sq(q, raws, impl=impl), INF)
         j = jnp.argmin(d)
-        cand_pos = jnp.take(pos_l, idx, axis=0)
+        cand_pos = jax.lax.dynamic_slice_in_dim(
+            pos_ordered, r * round_size, round_size)
         better = d[j] < bsf
         bsf_new = jnp.where(better, d[j], bsf)
         pos_new = jnp.where(better, cand_pos[j], bsfpos)
@@ -214,10 +242,15 @@ def _local_exact_search(
         need = gmin(jnp.where(kth < bsf, 0, 1)) < 1
         all_rounds = -(-n_local // round_size)
         pad_all = all_rounds * round_size
-        idx_all = jnp.arange(pad_all, dtype=jnp.int32) % n_local
+        pad_f = pad_all - n_local
         lb_all = jnp.concatenate(
-            [lb, jnp.full(pad_all - n_local, INF)]) \
-            if pad_all > n_local else lb
+            [lb, jnp.full(pad_f, INF)]) if pad_f else lb
+        # Wraparound row padding replaces the old `arange % n_local` gather
+        # (same rows, but sliceable — see the in-loop-gather note above).
+        raw_file = jnp.concatenate(
+            [raw_l, raw_l[:pad_f]], axis=0) if pad_f else raw_l
+        pos_file = jnp.concatenate(
+            [pos_l, pos_l[:pad_f]]) if pad_f else pos_l
 
         def fcond(st):
             r2, bsf2, *_ = st
@@ -226,15 +259,15 @@ def _local_exact_search(
 
         def fbody(st):
             r2, bsf2, pos2, reads2, upd2 = st
-            idx = jax.lax.dynamic_slice_in_dim(idx_all, r2 * round_size,
-                                               round_size)
             lbs = jax.lax.dynamic_slice_in_dim(lb_all, r2 * round_size,
                                                round_size)
             mask = lbs < bsf2
-            raws = jnp.take(raw_l, idx, axis=0)
+            raws = jax.lax.dynamic_slice_in_dim(
+                raw_file, r2 * round_size, round_size)
             d = jnp.where(mask, ops.euclid_sq(q, raws, impl=impl), INF)
             j = jnp.argmin(d)
-            cand = jnp.take(pos_l, idx, axis=0)
+            cand = jax.lax.dynamic_slice_in_dim(
+                pos_file, r2 * round_size, round_size)
             better = d[j] < bsf2
             bsf_new = jnp.where(better, d[j], bsf2)
             pos_new = jnp.where(better, cand[j], pos2)
@@ -301,13 +334,251 @@ def make_distributed_search(
     rep = P()
 
     def step(dist_index: DistIndex, query: jax.Array) -> SearchResult:
-        return jax.shard_map(
+        return _shard_map(
             kernel,
-            mesh=mesh,
+            mesh,
             in_specs=(row, row, vec, rep),
             out_specs=SearchResult(rep, rep, rep, rep, rep),
-            check_vma=False,
         )(dist_index.sax, dist_index.raw_sorted, dist_index.pos, query)
+
+    return step
+
+
+def _local_batch_search(
+    sax_l: jax.Array,
+    raw_l: jax.Array,
+    pos_l: jax.Array,
+    queries: jax.Array,
+    *,
+    series_length: int,
+    segments: int,
+    cardinality: int,
+    round_size: int,
+    leaf_cap: int,
+    axis_names: tuple,
+    impl: str,
+) -> SearchResult:
+    """Per-device body of the batched search (runs under shard_map).
+
+    The batched analogue of :func:`_local_exact_search` with shared BSFs:
+    one fused (Q, n_local) LBC pass per shard, per-query local candidate
+    orders, and ONE joint while_loop whose per-round collectives min-reduce
+    the whole (Q,) BSF vector (and its positions) across shards at once —
+    Q queries cost one collective per round instead of Q.
+    """
+    n_local = sax_l.shape[0]
+    n_q = queries.shape[0]
+    rs = round_size
+    qs = isax.znorm(queries)
+    qps = isax.paa(qs, segments)
+    bpp = isax.padded_breakpoints(cardinality)
+
+    def gmin(x):
+        for ax in axis_names:
+            x = jax.lax.pmin(x, ax)
+        return x
+
+    def gsum(x):
+        for ax in axis_names:
+            x = jax.lax.psum(x, ax)
+        return x
+
+    # Approximate phase: every device scans its first cap rows for every
+    # query; the global elementwise pmin seeds the (Q,) BSF vector.
+    cap = min(leaf_cap, n_local)
+    d0 = jax.vmap(lambda q: ops.euclid_sq(q, raw_l[:cap], impl=impl))(qs)
+    j0 = jnp.argmin(d0, axis=1)
+    bsf0 = jnp.take_along_axis(d0, j0[:, None], axis=1)[:, 0]
+    pos0 = jnp.take(pos_l, j0, axis=0)
+    gb = gmin(bsf0)
+    pos0 = jnp.where(bsf0 <= gb, pos0, IMAX)
+    bsf0 = gb
+    pos0 = gmin(pos0)
+
+    # LBC: one fused (Q, n_local) pass, then per-query top_k partial
+    # selection (ties break toward lower index like a stable sort). The
+    # selection bounds the pre-gathered candidate block below; exactness is
+    # preserved by the fallback scan after the main loop. On top of the
+    # shared heuristic, cap the pre-gather at ~256 MiB of f32 per device —
+    # raw_sel is (Q, sel_len, n) and would otherwise grow unboundedly with
+    # Q and shard size; a tighter cap only means earlier fallback scans,
+    # never lost exactness.
+    lb = ops.lower_bound_sq_batch(qps, sax_l, bpp, series_length, impl=impl)
+    budget_rows = (64 * 1024 * 1024) // max(1, n_q * series_length)
+    sel_len = search_select_len(n_local, rs)
+    sel_len = min(sel_len, max(rs, budget_rows))
+    neg, order = jax.lax.top_k(-lb, sel_len)
+    order = order.astype(jnp.int32)
+    lb_sorted = -neg
+    kth_bound = lb_sorted[:, -1]  # worst selected bound per query
+    n_rounds = -(-sel_len // rs)
+    padded = n_rounds * rs
+    if padded > sel_len:
+        order = jnp.concatenate(
+            [order, jnp.zeros((n_q, padded - sel_len), jnp.int32)], axis=1
+        )
+        lb_sorted = jnp.concatenate(
+            [lb_sorted, jnp.full((n_q, padded - sel_len), INF)], axis=1
+        )
+    # Pre-gather candidates OUTSIDE the while_loop (see the note in
+    # _local_exact_search: in-loop data-dependent gathers miscompile under
+    # shard_map on older jax, and contiguous slices are TPU-friendly).
+    raw_sel = jnp.take(raw_l, order, axis=0)  # (Q, padded, n)
+    pos_sel = jnp.take(pos_l, order, axis=0)  # (Q, padded)
+
+    def cond(st):
+        r, bsf, *_ = st
+        head = jax.lax.dynamic_slice_in_dim(lb_sorted, r * rs, 1, axis=1)[:, 0]
+        # bsf is globally agreed every round, so "any query on any shard
+        # still live" is replicated — trip counts (and the collectives
+        # inside the body) stay aligned across devices.
+        return (r < n_rounds) & jnp.any(gmin(head) < bsf)
+
+    def body(st):
+        r, bsf, bsfpos, reads, updates = st
+        lbs = jax.lax.dynamic_slice_in_dim(lb_sorted, r * rs, rs, axis=1)
+        mask = lbs < bsf[:, None]
+        raws = jax.lax.dynamic_slice_in_dim(raw_sel, r * rs, rs, axis=1)
+        d = jax.vmap(lambda q, rw: ops.euclid_sq(q, rw, impl=impl))(qs, raws)
+        d = jnp.where(mask, d, INF)
+        j = jnp.argmin(d, axis=1)
+        dj = jnp.take_along_axis(d, j[:, None], axis=1)[:, 0]
+        cand_pos = jax.lax.dynamic_slice_in_dim(pos_sel, r * rs, rs, axis=1)
+        candj = jnp.take_along_axis(cand_pos, j[:, None], axis=1)[:, 0]
+        better = dj < bsf
+        bsf_new = jnp.where(better, dj, bsf)
+        pos_new = jnp.where(better, candj, bsfpos)
+        # Cross-shard agreement of the whole (dist, pos) vector at once.
+        gb_new = gmin(bsf_new)
+        pos_new = jnp.where(bsf_new <= gb_new, pos_new, IMAX)
+        pos_new = gmin(pos_new)
+        return (
+            r + 1,
+            gb_new,
+            pos_new,
+            reads + jnp.sum(mask, axis=1, dtype=jnp.int32),
+            updates + better.astype(jnp.int32),
+        )
+
+    st0 = (
+        jnp.int32(0),
+        bsf0,
+        pos0.astype(jnp.int32),
+        jnp.full((n_q,), cap, jnp.int32),
+        jnp.zeros((n_q,), jnp.int32),
+    )
+    r, bsf, bsfpos, reads, updates = jax.lax.while_loop(cond, body, st0)
+
+    if sel_len < n_local:
+        # Exactness fallback over the full shard in SAX order (contiguous
+        # slices, wraparound row padding). A query whose worst selected
+        # bound still beats its BSF may have unselected qualifying
+        # candidates on this shard; the global need bit keeps trip counts
+        # aligned across devices.
+        all_rounds = -(-n_local // rs)
+        pad_all = all_rounds * rs
+        pad_f = pad_all - n_local
+        lb_all = (
+            jnp.concatenate([lb, jnp.full((n_q, pad_f), INF)], axis=1)
+            if pad_f else lb
+        )
+        raw_file = (
+            jnp.concatenate([raw_l, raw_l[:pad_f]], axis=0)
+            if pad_f else raw_l
+        )
+        pos_file = (
+            jnp.concatenate([pos_l, pos_l[:pad_f]]) if pad_f else pos_l
+        )
+
+        def fcond(st):
+            r2, bsf2, *_ = st
+            local_need = jnp.any(kth_bound < bsf2)
+            need_g = gmin(jnp.where(local_need, 0, 1)) < 1
+            return (r2 < all_rounds) & need_g
+
+        def fbody(st):
+            r2, bsf2, bsfpos2, reads2, upd2 = st
+            lbs = jax.lax.dynamic_slice_in_dim(lb_all, r2 * rs, rs, axis=1)
+            # >= kth_bound skips candidates already in the selected list.
+            mask = (
+                (lbs < bsf2[:, None])
+                & (lbs >= kth_bound[:, None])
+                & (kth_bound < bsf2)[:, None]
+            )
+            raws = jax.lax.dynamic_slice_in_dim(raw_file, r2 * rs, rs)
+            d = jax.vmap(
+                lambda q: ops.euclid_sq(q, raws, impl=impl)
+            )(qs)
+            d = jnp.where(mask, d, INF)
+            j = jnp.argmin(d, axis=1)
+            dj = jnp.take_along_axis(d, j[:, None], axis=1)[:, 0]
+            cand = jax.lax.dynamic_slice_in_dim(pos_file, r2 * rs, rs)
+            candj = jnp.take(cand, j, axis=0)
+            better = dj < bsf2
+            bsf_new = jnp.where(better, dj, bsf2)
+            pos_new = jnp.where(better, candj, bsfpos2)
+            gb_new = gmin(bsf_new)
+            pos_new = jnp.where(bsf_new <= gb_new, pos_new, IMAX)
+            pos_new = gmin(pos_new)
+            return (
+                r2 + 1,
+                gb_new,
+                pos_new,
+                reads2 + jnp.sum(mask, axis=1, dtype=jnp.int32),
+                upd2 + better.astype(jnp.int32),
+            )
+
+        st1 = (jnp.int32(0), bsf, bsfpos, reads, updates)
+        r2, bsf, bsfpos, reads, updates = jax.lax.while_loop(
+            fcond, fbody, st1
+        )
+        r = r + r2
+
+    return SearchResult(bsf, bsfpos, gsum(reads), gsum(updates), r)
+
+
+def make_distributed_batch_search(
+    mesh: Mesh,
+    axes: Sequence[str],
+    *,
+    series_length: int = 256,
+    segments: int = isax.DEFAULT_SEGMENTS,
+    cardinality: int = isax.DEFAULT_CARDINALITY,
+    round_size: int = 4096,
+    leaf_cap: int = 256,
+    impl: str = "auto",
+):
+    """Build the jitted mesh-sharded *batched* search step.
+
+    Returns ``search_step(dist_index, queries) -> SearchResult`` where
+    ``queries`` is (Q, n) replicated and every result field is a (Q,) vector
+    (``rounds`` stays scalar). Unlike ``make_distributed_search(...,
+    batch_queries=Q)`` — which vmaps Q independent single-query loops — this
+    runs ONE loop whose collectives reduce the whole BSF vector per round,
+    so collective count is independent of Q.
+    """
+    axes = tuple(axes)
+    kernel = functools.partial(
+        _local_batch_search,
+        series_length=series_length,
+        segments=segments,
+        cardinality=cardinality,
+        round_size=round_size,
+        leaf_cap=leaf_cap,
+        axis_names=axes,
+        impl=impl,
+    )
+    row = P(axes, None)
+    vec = P(axes)
+    rep = P()
+
+    def step(dist_index: DistIndex, queries: jax.Array) -> SearchResult:
+        return _shard_map(
+            kernel,
+            mesh,
+            in_specs=(row, row, vec, rep),
+            out_specs=SearchResult(rep, rep, rep, rep, rep),
+        )(dist_index.sax, dist_index.raw_sorted, dist_index.pos, queries)
 
     return step
 
@@ -339,12 +610,11 @@ def make_distributed_build(
     vec = P(axes)
 
     def step(chunk: jax.Array):
-        return jax.shard_map(
+        return _shard_map(
             local_convert,
-            mesh=mesh,
+            mesh,
             in_specs=(row,),
             out_specs=(row, vec),
-            check_vma=False,
         )(chunk)
 
     return step

@@ -26,6 +26,27 @@ Algorithm map (paper -> here):
                                order candidate processing, no early exit).
   UCR-Suite optimized scan  -> :func:`brute_force` — full-data distance scan,
                                no index.
+
+Batched query answering (beyond-paper; MESSI-style multi-query execution):
+
+  LBC over a query batch    -> :func:`ops.lower_bound_sq_batch` — one fused
+                               (Q, N) kernel pass; the SAX array streams
+                               through VMEM once per *batch*, not per query.
+  candidate selection       -> per-query ``jax.lax.top_k`` partial selection
+                               (``select="topk"``) of the smallest K bounds
+                               instead of a full argsort, with an exactness
+                               fallback scan that runs only if the K-th bound
+                               still beats a query's BSF at list exhaustion.
+  RDC over a query batch    -> :func:`exact_search_batch` / ``exact_knn_batch``
+                               — ONE shared ``while_loop`` with a per-query
+                               BSF vector, per-query masked rounds, and a
+                               joint early exit when every query's smallest
+                               unprocessed lower bound exceeds its own BSF.
+  single-query API          -> :func:`exact_search` / :func:`exact_knn` are
+                               thin Q=1 wrappers over the batch engine;
+                               :func:`exact_search_single` keeps the original
+                               one-query-at-a-time implementation as the
+                               benchmark baseline.
 """
 
 from __future__ import annotations
@@ -51,6 +72,7 @@ class SearchConfig:
     sort: bool = True  # sort candidate list by lower bound (ParIS+)
     impl: str = "auto"  # kernel dispatch (ops.py)
     workers: int = 16  # nb- variant only: #independent scan blocks
+    select: str = "topk"  # candidate ordering: "topk" partial / "sort" full
 
 
 @jax.tree_util.register_dataclass
@@ -79,6 +101,9 @@ def approx_search(
     degrades gracefully to the nearest neighbors in leaf order). Returns
     (bsf_sq, file position).
     """
+    # Tiny indices: a window larger than the index would push the clip's
+    # upper bound negative (below its lower bound) — clamp the cap first.
+    leaf_cap = min(int(leaf_cap), index.num_series)
     q, qp = _query_paa(index, query)
     qsax = isax.sax_from_paa(qp, index.cardinality)
     key = isax.root_key(qsax, index.cardinality)
@@ -93,11 +118,375 @@ def approx_search(
     return d[j], window[j]
 
 
+def approx_search_batch(
+    index: ParISIndex, queries: jax.Array, leaf_cap: int = 256
+) -> tuple:
+    """Batched :func:`approx_search`: (Q, n) queries -> ((Q,) bsf, (Q,) pos).
+
+    Same bucket-window scan per query, vectorized; seeds the per-query BSF
+    vector of the batched RDC loop.
+    """
+    leaf_cap = min(int(leaf_cap), index.num_series)
+    qs = isax.znorm(queries)
+    qps = isax.paa(qs, index.segments)
+    qsax = isax.sax_from_paa(qps, index.cardinality)
+    keys = isax.root_key(qsax, index.cardinality)
+    starts = index.bucket_offsets[keys]
+    ends = index.bucket_offsets[keys + 1]
+    pad = jnp.maximum(leaf_cap - (ends - starts), 0) // 2
+    s = jnp.clip(starts - pad, 0, index.num_series - leaf_cap)
+
+    def one(q, si):
+        window = jax.lax.dynamic_slice_in_dim(index.pos, si, leaf_cap)
+        raws = jnp.take(index.raw, window, axis=0)
+        d = ops.euclid_sq(q, raws)
+        j = jnp.argmin(d)
+        return d[j], window[j]
+
+    return jax.vmap(one)(qs, s)
+
+
 def _pad_to(x: jax.Array, size: int, fill) -> jax.Array:
     pad = size - x.shape[0]
     if pad <= 0:
         return x
     return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+
+
+def _pad_cols(x: jax.Array, size: int, fill) -> jax.Array:
+    pad = size - x.shape[1]
+    if pad <= 0:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((x.shape[0], pad), fill, x.dtype)], axis=1
+    )
+
+
+def select_len(n: int, round_size: int) -> int:
+    """Per-query candidate-list length for top_k partial selection.
+
+    Shared by the single-host batch engine and the distributed batch kernel:
+    the exactness-fallback protocol on both sides assumes the K-th selected
+    bound comes from exactly this K, so there is ONE definition.
+    """
+    return min(n, max(n // 16, 4 * round_size))
+
+
+def _batch_engine_core(
+    index: ParISIndex,
+    queries: jax.Array,
+    *,
+    k: int,
+    round_size: int,
+    leaf_cap: int,
+    sort: bool,
+    select: str,
+    impl: str,
+    init: str,
+) -> tuple:
+    """The shared batched RDC loop behind every batch (and Q=1) search.
+
+    (Q, n) queries -> ((Q, k) dists, (Q, k) positions, (Q,) reads,
+    (Q,) bsf updates, rounds). One ``while_loop`` drives all Q queries:
+    per-query BSF vector, per-query candidate order, per-query round masks,
+    and a joint early exit once no query's next lower bound beats its BSF.
+
+    ``select="topk"`` keeps only the K smallest bounds per query
+    (K = max(N/16, 4*round_size)); exactness is preserved by a fallback scan
+    over the full SAX order that only runs for queries whose K-th bound still
+    beats their BSF when the truncated list is exhausted (rare — raw reads
+    are ~1-4% of N on the paper's workloads). ``select="topk"`` requires
+    ``k == 1``: the fallback re-distances already-seen candidates, which a
+    k>1 merge would duplicate.
+    """
+    if select == "topk" and k > 1:
+        raise ValueError("select='topk' supports k=1 only; use select='sort'")
+    n_series = index.num_series
+    n_q = queries.shape[0]
+    rs = round_size
+    qs = isax.znorm(queries)
+    qps = isax.paa(qs, index.segments)
+    bpp = isax.padded_breakpoints(index.cardinality)
+
+    if init == "approx":
+        leaf = min(int(leaf_cap), n_series)
+        bsf0, pos0 = approx_search_batch(index, queries, leaf)
+        top_d0 = jnp.concatenate(
+            [bsf0[:, None], jnp.full((n_q, k - 1), INF)], axis=1
+        )
+        top_p0 = jnp.concatenate(
+            [pos0.astype(jnp.int32)[:, None],
+             jnp.zeros((n_q, k - 1), jnp.int32)], axis=1,
+        )
+        reads0 = jnp.full((n_q,), leaf, jnp.int32)
+    else:
+        top_d0 = jnp.full((n_q, k), INF)
+        top_p0 = jnp.zeros((n_q, k), jnp.int32)
+        reads0 = jnp.zeros((n_q,), jnp.int32)
+
+    # --- LBC phase: ONE fused (Q, N) pass over the SAX array. ---
+    lb = ops.lower_bound_sq_batch(
+        qps, index.sax, bpp, index.series_length, impl=impl
+    )
+
+    # --- Per-query candidate orders. top_k ties break toward lower index,
+    # exactly like a stable ascending argsort of lb. ---
+    if sort:
+        if select == "topk":
+            sel_len = select_len(n_series, rs)
+        else:
+            sel_len = n_series
+        neg, order = jax.lax.top_k(-lb, sel_len)
+        order = order.astype(jnp.int32)
+        lb_sel = -neg
+    else:
+        sel_len = n_series
+        lb_sel = lb
+
+    n_rounds = -(-sel_len // rs)
+    padded = n_rounds * rs
+    lb_sel_p = _pad_cols(lb_sel, padded, INF)
+    if sort:
+        order_p = _pad_cols(order, padded, 0)
+    else:
+        shared_order_p = _pad_to(
+            jnp.arange(n_series, dtype=jnp.int32), padded, 0
+        )
+
+    def _euclid_rows(raws):
+        # (Q, rs, n) per-query candidates -> (Q, rs) distances.
+        return jax.vmap(
+            lambda q, rw: ops.euclid_sq(q, rw, impl=impl)
+        )(qs, raws)
+
+    def _euclid_shared(raws):
+        # (rs, n) candidates shared by every query -> (Q, rs) distances.
+        return jax.vmap(lambda q: ops.euclid_sq(q, raws, impl=impl))(qs)
+
+    def merge(top_d, top_p, cand_pos, d):
+        if k == 1:  # 1-NN: plain argmin/where, no concat + selection pass
+            j = jnp.argmin(d, axis=1)
+            dj = jnp.take_along_axis(d, j[:, None], axis=1)
+            pj = jnp.take_along_axis(cand_pos, j[:, None], axis=1)
+            better = dj < top_d  # strict: ties keep the incumbent
+            return (
+                jnp.where(better, dj, top_d),
+                jnp.where(better, pj, top_p),
+            )
+        md = jnp.concatenate([top_d, d], axis=1)
+        mp = jnp.concatenate([top_p, cand_pos], axis=1)
+        neg_d, sel = jax.lax.top_k(-md, k)  # O(n log k), not a full sort
+        return -neg_d, jnp.take_along_axis(mp, sel, axis=1)
+
+    def cond(st):
+        r, top_d, *_ = st
+        more = r < n_rounds
+        if sort:  # joint early exit: every query's next bound >= its BSF
+            head = jax.lax.dynamic_slice_in_dim(
+                lb_sel_p, r * rs, 1, axis=1
+            )[:, 0]
+            more &= jnp.any(head < top_d[:, -1])
+        return more
+
+    def body(st):
+        r, top_d, top_p, reads, updates = st
+        kth = top_d[:, -1]
+        lbs = jax.lax.dynamic_slice_in_dim(lb_sel_p, r * rs, rs, axis=1)
+        if sort:
+            idx = jax.lax.dynamic_slice_in_dim(order_p, r * rs, rs, axis=1)
+            cand_pos = jnp.take(index.pos, idx, axis=0)  # (Q, rs)
+            raws = jnp.take(index.raw, cand_pos, axis=0)  # the "disk reads"
+            d = _euclid_rows(raws)
+        else:
+            idx = jax.lax.dynamic_slice_in_dim(shared_order_p, r * rs, rs)
+            pos1 = jnp.take(index.pos, idx, axis=0)  # (rs,) SAX-order scan
+            raws = jnp.take(index.raw, pos1, axis=0)
+            d = _euclid_shared(raws)
+            cand_pos = jnp.broadcast_to(pos1[None, :], (n_q, rs))
+        mask = lbs < kth[:, None]
+        d = jnp.where(mask, d, INF)
+        improved = jnp.min(d, axis=1) < kth
+        top_d, top_p = merge(top_d, top_p, cand_pos, d)
+        return (
+            r + 1,
+            top_d,
+            top_p,
+            reads + jnp.sum(mask, axis=1, dtype=jnp.int32),
+            updates + improved.astype(jnp.int32),
+        )
+
+    st0 = (jnp.int32(0), top_d0, top_p0, reads0,
+           jnp.zeros((n_q,), jnp.int32))
+    r, top_d, top_p, reads, updates = jax.lax.while_loop(cond, body, st0)
+
+    if sort and select == "topk" and sel_len < n_series:
+        # Exactness fallback: a query whose worst *selected* bound still
+        # beats its BSF might have unselected qualifying candidates — scan
+        # the full SAX order with per-query (bound, need) masks. The gate is
+        # re-evaluated every round, so it tightens as BSFs improve. The
+        # whole loop (including its padded-copy setup) lives inside a
+        # lax.cond: in the common case no query needs it and the branch —
+        # and its buffer copies — are skipped entirely.
+        kth_bound = lb_sel[:, -1]
+        all_rounds = -(-n_series // rs)
+        pad_all = all_rounds * rs
+
+        def run_fallback(st):
+            idx_all = _pad_to(
+                jnp.arange(n_series, dtype=jnp.int32), pad_all, 0)
+            lb_all = _pad_cols(lb, pad_all, INF)
+
+            def fcond(fst):
+                r2, top_d, *_ = fst
+                return (r2 < all_rounds) & jnp.any(kth_bound < top_d[:, -1])
+
+            def fbody(fst):
+                r2, top_d, top_p, reads, updates = fst
+                kth = top_d[:, -1]
+                need = kth_bound < kth
+                lbs = jax.lax.dynamic_slice_in_dim(
+                    lb_all, r2 * rs, rs, axis=1)
+                idx = jax.lax.dynamic_slice_in_dim(idx_all, r2 * rs, rs)
+                pos1 = jnp.take(index.pos, idx, axis=0)
+                raws = jnp.take(index.raw, pos1, axis=0)
+                d = _euclid_shared(raws)
+                # lbs >= kth_bound skips candidates the main loop already
+                # processed (everything strictly below the K-th bound was
+                # in the selected list); ties at the bound re-distance
+                # harmlessly.
+                mask = (
+                    (lbs < kth[:, None])
+                    & (lbs >= kth_bound[:, None])
+                    & need[:, None]
+                )
+                d = jnp.where(mask, d, INF)
+                improved = jnp.min(d, axis=1) < kth
+                cand_pos = jnp.broadcast_to(pos1[None, :], (n_q, rs))
+                top_d, top_p = merge(top_d, top_p, cand_pos, d)
+                return (
+                    r2 + 1,
+                    top_d,
+                    top_p,
+                    reads + jnp.sum(mask, axis=1, dtype=jnp.int32),
+                    updates + improved.astype(jnp.int32),
+                )
+
+            return jax.lax.while_loop(fcond, fbody, st)
+
+        st1 = (jnp.int32(0), top_d, top_p, reads, updates)
+        need0 = jnp.any(kth_bound < top_d[:, -1])
+        r2, top_d, top_p, reads, updates = jax.lax.cond(
+            need0, run_fallback, lambda st: st, st1
+        )
+        r = r + r2
+
+    return top_d, top_p, reads, updates, r
+
+
+# Per-index jitted engines. Closing over the index arrays (instead of
+# passing them as jit arguments) lets XLA treat them as baked constants —
+# on CPU an argument index costs a relayout copy of the big arrays on
+# EVERY call (~100ms at 50k x 256 f32). The cache hangs off the index
+# object itself (the jitted closure strongly references the index arrays,
+# so any external cache would pin dead indices; attached to the index, the
+# engines share its lifetime exactly).
+
+
+def _engine_for(index: ParISIndex, statics: tuple):
+    cache = getattr(index, "_engines", None)
+    if cache is None:
+        cache = {}
+        # frozen dataclass: fields are immutable but non-field attributes
+        # (invisible to the pytree flatten) can still be attached.
+        object.__setattr__(index, "_engines", cache)
+    fn = cache.get(statics)
+    if fn is not None:
+        return fn
+    k, round_size, leaf_cap, sort, select, impl, init = statics
+
+    @jax.jit
+    def fn(queries):
+        return _batch_engine_core(
+            index,
+            queries,
+            k=k,
+            round_size=round_size,
+            leaf_cap=leaf_cap,
+            sort=sort,
+            select=select,
+            impl=impl,
+            init=init,
+        )
+
+    cache[statics] = fn
+    return fn
+
+
+def _batch_engine(
+    index: ParISIndex,
+    queries: jax.Array,
+    *,
+    k: int,
+    round_size: int,
+    leaf_cap: int,
+    sort: bool,
+    select: str,
+    impl: str,
+    init: str,
+) -> tuple:
+    fn = _engine_for(
+        index, (k, round_size, leaf_cap, sort, select, impl, init)
+    )
+    return fn(queries)
+
+
+def exact_search_batch(
+    index: ParISIndex, queries: jax.Array, cfg: SearchConfig = SearchConfig()
+) -> SearchResult:
+    """Batched ParIS+ exact 1-NN: (Q, n) queries -> SearchResult of (Q,) arrays.
+
+    All Q queries share one LBC pass and one RDC ``while_loop``; rounds are
+    masked per query and the loop exits when every query is done.
+    """
+    top_d, top_p, reads, updates, rounds = _batch_engine(
+        index,
+        queries,
+        k=1,
+        round_size=cfg.round_size,
+        leaf_cap=cfg.leaf_cap,
+        sort=cfg.sort,
+        select=cfg.select,
+        impl=cfg.impl,
+        init="approx",
+    )
+    return SearchResult(top_d[:, 0], top_p[:, 0], reads, updates, rounds)
+
+
+def exact_knn_batch(
+    index: ParISIndex,
+    queries: jax.Array,
+    k: int = 1,
+    round_size: int = 4096,
+    impl: str = "auto",
+) -> tuple:
+    """Batched exact k-NN: (Q, n) -> ((Q, k) dists ascending, (Q, k) pos).
+
+    Uses the full per-query candidate order (``select="sort"``): the topk
+    fallback re-distances seen candidates, which would duplicate entries in a
+    k>1 result list. The per-round merge is still ``top_k`` (O(n log k)).
+    """
+    top_d, top_p, *_ = _batch_engine(
+        index,
+        queries,
+        k=k,
+        round_size=round_size,
+        leaf_cap=0,
+        sort=True,
+        select="sort",
+        impl=impl,
+        init="inf",
+    )
+    return top_d, top_p
 
 
 @functools.partial(
@@ -172,10 +561,16 @@ def _exact_search_impl(
     return SearchResult(bsf, bsfpos, reads, updates, r)
 
 
-def exact_search(
+def exact_search_single(
     index: ParISIndex, query: jax.Array, cfg: SearchConfig = SearchConfig()
 ) -> SearchResult:
-    """ParIS+ exact 1-NN (``cfg.sort=False`` gives the ADS+-style serial scan)."""
+    """The original one-query-at-a-time engine (full argsort candidate list).
+
+    Kept as the benchmark baseline the batch engine is measured against
+    (``benchmarks/bench_batch_query.py``) and as an independent
+    implementation for parity tests. New callers should prefer
+    :func:`exact_search` / :func:`exact_search_batch`.
+    """
     return _exact_search_impl(
         index,
         query,
@@ -183,6 +578,24 @@ def exact_search(
         leaf_cap=cfg.leaf_cap,
         sort=cfg.sort,
         impl=cfg.impl,
+    )
+
+
+def exact_search(
+    index: ParISIndex, query: jax.Array, cfg: SearchConfig = SearchConfig()
+) -> SearchResult:
+    """ParIS+ exact 1-NN (``cfg.sort=False`` gives the ADS+-style serial scan).
+
+    Thin Q=1 wrapper over :func:`exact_search_batch` — single-query callers
+    ride the same engine as the batch path.
+    """
+    res = exact_search_batch(index, query[None, :], cfg)
+    return SearchResult(
+        res.dist_sq[0],
+        res.position[0],
+        res.raw_reads[0],
+        res.bsf_updates[0],
+        res.rounds,
     )
 
 
@@ -272,7 +685,6 @@ def brute_force(
     return SearchResult(d, j.astype(jnp.int32), n, jnp.int32(1), jnp.int32(1))
 
 
-@functools.partial(jax.jit, static_argnames=("k", "round_size", "impl"))
 def exact_knn(
     index: ParISIndex,
     query: jax.Array,
@@ -283,43 +695,11 @@ def exact_knn(
     """Exact k-NN: sorted-candidate rounds pruning against the k-th best.
 
     Returns ((k,) squared distances ascending, (k,) file positions). Backs the
-    paper's k-NN classifier experiment (Fig. 18).
+    paper's k-NN classifier experiment (Fig. 18). Thin Q=1 wrapper over
+    :func:`exact_knn_batch`; the per-round merge uses ``jax.lax.top_k``
+    (O(n log k)) instead of the old full ``argsort`` (O(n log n)).
     """
-    n_series = index.num_series
-    q, qp = _query_paa(index, query)
-    bpp = isax.padded_breakpoints(index.cardinality)
-    lb = ops.lower_bound_sq(qp, index.sax, bpp, index.series_length, impl=impl)
-    order_idx = jnp.argsort(lb)
-    lb_sorted = jnp.take(lb, order_idx, axis=0)
-    n_rounds = -(-n_series // round_size)
-    padded = n_rounds * round_size
-    order_idx = _pad_to(order_idx.astype(jnp.int32), padded, 0)
-    lb_sorted = _pad_to(lb_sorted, padded, INF)
-
-    def cond(st):
-        r, top_d, _ = st
-        return (r < n_rounds) & (
-            jax.lax.dynamic_index_in_dim(lb_sorted, r * round_size, keepdims=False)
-            < top_d[-1]
-        )
-
-    def body(st):
-        r, top_d, top_p = st
-        idx = jax.lax.dynamic_slice_in_dim(order_idx, r * round_size, round_size)
-        lbs = jax.lax.dynamic_slice_in_dim(lb_sorted, r * round_size, round_size)
-        mask = lbs < top_d[-1]
-        cand_pos = jnp.take(index.pos, idx, axis=0)
-        raws = jnp.take(index.raw, cand_pos, axis=0)
-        d = jnp.where(mask, ops.euclid_sq(q, raws, impl=impl), INF)
-        all_d = jnp.concatenate([top_d, d])
-        all_p = jnp.concatenate([top_p, cand_pos])
-        sel = jnp.argsort(all_d)[:k]
-        return r + 1, all_d[sel], all_p[sel]
-
-    st0 = (
-        jnp.int32(0),
-        jnp.full((k,), INF),
-        jnp.zeros((k,), jnp.int32),
+    top_d, top_p = exact_knn_batch(
+        index, query[None, :], k=k, round_size=round_size, impl=impl
     )
-    _, top_d, top_p = jax.lax.while_loop(cond, body, st0)
-    return top_d, top_p
+    return top_d[0], top_p[0]

@@ -51,6 +51,79 @@ def _lb_kernel_cols(q_ref, bl_ref, bu_ref, sax_ref, o_ref, *, scale: float):
     o_ref[...] = scale * jnp.sum(d * d, axis=0, keepdims=True)
 
 
+def _lb_kernel_batch(q_ref, bl_ref, bu_ref, sax_ref, o_ref, *, scale: float):
+    """Batched tile: queries on sublanes, candidates on lanes.
+
+    q_ref (block_q, w) x sax_ref (w, block_n) -> o_ref (block_q, block_n).
+    The breakpoint gathers run once per SAX tile and are shared by every
+    query row in the block — the whole point of the fused (Q x N) kernel:
+    the SAX array streams through VMEM once per *batch*, not once per query.
+    """
+    sym = sax_ref[...].astype(jnp.int32)  # (w, bn)
+    bl = bl_ref[...][0]
+    bu = bu_ref[...][0]
+    lo = jnp.take(bl, sym, axis=0)  # (w, bn) — hoisted, query-independent
+    hi = jnp.take(bu, sym, axis=0)
+    q = q_ref[...]  # (bq, w)
+    w = q.shape[-1]
+    acc = jnp.zeros((q.shape[0], sym.shape[1]), jnp.float32)
+    for j in range(w):  # w is 8-32: unrolled VPU ops, no (bq, w, bn) blowup
+        qj = q[:, j][:, None]  # (bq, 1)
+        d = jnp.maximum(jnp.maximum(qj - hi[j][None, :], lo[j][None, :] - qj), 0.0)
+        acc = acc + d * d
+    o_ref[...] = scale * acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("series_length", "block_q", "block_n", "interpret"),
+)
+def lower_bound_sq_batch_pallas(
+    query_paa: jax.Array,
+    sax_t: jax.Array,
+    bp_padded: jax.Array,
+    series_length: int,
+    *,
+    block_q: int = 8,
+    block_n: int = 1024,
+    interpret: bool = True,
+) -> jax.Array:
+    """(Q, w) PAA batch x (w, N) sax -> (Q, N) squared lower bounds.
+
+    Grid is (Q/block_q, N/block_n); both must divide exactly (ops.py pads;
+    padded rows/cols produce garbage the caller slices off). Query blocks sit
+    on the sublane axis so all 8 sublanes do useful work, candidates on the
+    128-wide lanes (the optimized transposed layout).
+    """
+    nq, w = query_paa.shape
+    w2, n = sax_t.shape
+    if w != w2:
+        raise ValueError(f"query w={w} != sax w={w2}")
+    if nq % block_q or n % block_n:
+        raise ValueError(
+            f"(Q={nq}, N={n}) not multiples of ({block_q}, {block_n})"
+        )
+    scale = float(series_length) / float(w)
+    card1 = bp_padded.shape[0] - 1
+    bl = bp_padded[:-1][None, :]
+    bu = bp_padded[1:][None, :]
+    grid = (nq // block_q, n // block_n)
+    out = pl.pallas_call(
+        functools.partial(_lb_kernel_batch, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, card1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, card1), lambda i, j: (0, 0)),
+            pl.BlockSpec((w, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq, n), jnp.float32),
+        interpret=interpret,
+    )(query_paa.astype(jnp.float32), bl, bu, sax_t)
+    return out
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("series_length", "block_n", "interpret", "transposed"),

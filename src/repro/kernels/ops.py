@@ -73,6 +73,39 @@ def lower_bound_sq(
     return out[:n]
 
 
+def lower_bound_sq_batch(
+    query_paa: jax.Array,
+    sax: jax.Array,
+    bp_padded: jax.Array,
+    series_length: int,
+    *,
+    impl: str = "auto",
+    block_q: int = 8,
+    block_n: int = 1024,
+) -> jax.Array:
+    """(Q, w) PAA batch x (N, w) sax -> (Q, N) squared lower bounds.
+
+    The fused batch form of :func:`lower_bound_sq`: one grid pass streams the
+    SAX array through VMEM once for the whole query batch. Padding of both Q
+    (to the sublane block) and N (to the lane block) lives here.
+    """
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.lower_bound_sq_batch(
+            query_paa, sax, bp_padded, series_length
+        )
+    n_q, n = query_paa.shape[0], sax.shape[0]
+    q_p, _ = _pad_rows(query_paa, block_q, 0.0)
+    sax_t = sax.T
+    pad_n = (-n) % block_n
+    if pad_n:
+        sax_t = jnp.pad(sax_t, ((0, 0), (0, pad_n)))
+    out = _lb.lower_bound_sq_batch_pallas(
+        q_p, sax_t, bp_padded, series_length,
+        block_q=block_q, block_n=block_n, interpret=not _on_tpu(),
+    )
+    return out[:n_q, :n]
+
+
 def paa_isax(
     series: jax.Array,
     breakpoints: jax.Array,

@@ -30,6 +30,33 @@ def lower_bound_sq(
     return (series_length / w) * jnp.sum(d * d, axis=-1)
 
 
+def lower_bound_sq_batch(
+    query_paa: jax.Array,
+    sax: jax.Array,
+    bp_padded: jax.Array,
+    series_length: int,
+) -> jax.Array:
+    """(Q, w) query PAA batch x (N, w) uint8 sax -> (Q, N) lower bounds.
+
+    Accumulates segment by segment over (Q, N) planes rather than broadcasting
+    a (Q, N, w) intermediate — the peak footprint stays O(Q*N) so large
+    batches against multi-hundred-thousand-series indices fit in host RAM.
+    """
+    n_q, w = query_paa.shape
+    idx = sax.astype(jnp.int32)
+    bl = bp_padded[idx]  # (N, w)
+    bu = bp_padded[idx + 1]
+    q = query_paa.astype(jnp.float32)
+    acc = jnp.zeros((n_q, sax.shape[0]), jnp.float32)
+    for j in range(w):
+        qj = q[:, j][:, None]  # (Q, 1)
+        d = jnp.maximum(
+            jnp.maximum(qj - bu[:, j][None, :], bl[:, j][None, :] - qj), 0.0
+        )
+        acc = acc + d * d
+    return (series_length / w) * acc
+
+
 def paa_isax(
     series: jax.Array,
     segments: int,

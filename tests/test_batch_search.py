@@ -1,0 +1,153 @@
+"""Batched search engine: parity with the single-query path, the tiny-index
+approx-search regression, and the mesh-sharded batched step."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SearchConfig, approx_search, approx_search_batch, brute_force,
+    build_index, exact_knn, exact_knn_batch, exact_search,
+    exact_search_batch, exact_search_single, random_walk,
+)
+
+RNG = np.random.default_rng(17)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _queries(n, length=256):
+    return jnp.asarray(
+        RNG.standard_normal((n, length)).cumsum(axis=1), jnp.float32)
+
+
+# Q=5 deliberately does not divide the kernel's sublane pad block (8).
+@pytest.mark.parametrize("sort", [True, False])
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_exact_search_batch_matches_single_loop(small_index, sort, impl):
+    qs = _queries(5)
+    cfg = SearchConfig(round_size=512, sort=sort, impl=impl)
+    got = exact_search_batch(small_index, qs, cfg)
+    for i in range(qs.shape[0]):
+        want = exact_search_single(small_index, qs[i], cfg)
+        assert int(got.position[i]) == int(want.position), (sort, impl, i)
+        # identical candidate math end-to-end: same floats, not just close
+        assert float(got.dist_sq[i]) == float(want.dist_sq), (sort, impl, i)
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_exact_knn_batch_matches_single_loop(small_index, impl):
+    qs = _queries(3)
+    got_d, got_p = exact_knn_batch(
+        small_index, qs, k=8, round_size=512, impl=impl)
+    for i in range(qs.shape[0]):
+        want_d, want_p = exact_knn(
+            small_index, qs[i], k=8, round_size=512, impl=impl)
+        assert np.array_equal(np.asarray(got_p[i]), np.asarray(want_p))
+        np.testing.assert_array_equal(
+            np.asarray(got_d[i]), np.asarray(want_d))
+
+
+def test_batch_wrappers_equal_brute_force(small_index):
+    qs = _queries(4)
+    res = exact_search_batch(small_index, qs)
+    for i in range(4):
+        want = brute_force(small_index, qs[i])
+        assert int(res.position[i]) == int(want.position)
+        np.testing.assert_allclose(
+            float(res.dist_sq[i]), float(want.dist_sq), rtol=1e-4)
+
+
+def test_topk_select_equals_full_sort(small_index):
+    """Partial selection + fallback must stay exact vs the full sort."""
+    qs = _queries(4)
+    # leaf_cap=4 gives a weak initial BSF -> the fallback path is exercised
+    topk = exact_search_batch(small_index, qs, SearchConfig(
+        round_size=256, leaf_cap=4, select="topk"))
+    full = exact_search_batch(small_index, qs, SearchConfig(
+        round_size=256, leaf_cap=4, select="sort"))
+    np.testing.assert_array_equal(
+        np.asarray(topk.position), np.asarray(full.position))
+    np.testing.assert_allclose(
+        np.asarray(topk.dist_sq), np.asarray(full.dist_sq), rtol=1e-5)
+
+
+def test_approx_search_tiny_index_regression():
+    """leaf_cap > num_series used to flip the window clip's bounds."""
+    raw = jnp.asarray(
+        RNG.standard_normal((12, 64)).cumsum(axis=1), jnp.float32)
+    idx = build_index(raw, segments=8)
+    q = raw[3]
+    d, p = approx_search(idx, q, leaf_cap=256)  # cap >> N
+    # the window now covers the whole index, so this IS the exact answer
+    want = brute_force(idx, q)
+    assert int(p) == int(want.position)
+    np.testing.assert_allclose(float(d), float(want.dist_sq), atol=1e-4)
+    ds, ps = approx_search_batch(idx, raw[:5], leaf_cap=256)
+    for i in range(5):
+        w = brute_force(idx, raw[i])
+        assert int(ps[i]) == int(w.position)
+
+
+def test_batch_search_tiny_index():
+    raw = jnp.asarray(
+        RNG.standard_normal((30, 64)).cumsum(axis=1), jnp.float32)
+    idx = build_index(raw, segments=8)
+    qs = jnp.asarray(
+        RNG.standard_normal((3, 64)).cumsum(axis=1), jnp.float32)
+    res = exact_search_batch(idx, qs, SearchConfig(round_size=16, leaf_cap=8))
+    for i in range(3):
+        want = brute_force(idx, qs[i])
+        assert int(res.position[i]) == int(want.position)
+        np.testing.assert_allclose(
+            float(res.dist_sq[i]), float(want.dist_sq), rtol=1e-4)
+
+
+def test_single_query_wrapper_matches_legacy(small_index):
+    q = _queries(1)[0]
+    new = exact_search(small_index, q, SearchConfig(round_size=512))
+    old = exact_search_single(small_index, q, SearchConfig(round_size=512))
+    assert int(new.position) == int(old.position)
+    assert float(new.dist_sq) == float(old.dist_sq)
+
+
+def test_distributed_batch_search_exact():
+    out_code = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import isax, index as idx_mod, datagen, distributed as dist
+raw = datagen.random_walk(4096, 128, seed=9)
+index = idx_mod.build_index(jnp.asarray(raw))
+mesh = jax.make_mesh((8,), ("shard",))
+dindex = dist.dist_index_from(index, 8)
+rng = np.random.default_rng(3)
+# cold-BSF regime (weak initial bound) + easy random queries
+qs = np.concatenate([
+    np.stack([np.asarray(raw[i]) + rng.standard_normal(128) * 1.5
+              for i in rng.integers(0, 4096, 3)]),
+    rng.standard_normal((3, 128)).cumsum(axis=1)]).astype(np.float32)
+ok = True
+# round_size=128: sel_len == n_local (no fallback compiled);
+# round_size=32: sel_len = 128 < n_local=512 -> the exactness-fallback
+# branch (cross-shard need bit, kth_bound masking) is exercised too.
+for rs in (128, 32):
+    step = jax.jit(dist.make_distributed_batch_search(
+        mesh, ("shard",), series_length=128, round_size=rs, leaf_cap=4))
+    res = step(dindex, jnp.asarray(qs))
+    for i in range(len(qs)):
+        d = np.asarray(
+            isax.euclid_sq(isax.znorm(jnp.asarray(qs[i])), index.raw))
+        ok &= abs(float(res.dist_sq[i]) - d.min()) < 1e-3
+        ok &= int(res.position[i]) == int(d.argmin())
+print("BATCH_DIST", ok)
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", out_code], env=env,
+                         capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "BATCH_DIST True" in out.stdout

@@ -4,9 +4,11 @@ The load-bearing property is LOWER-BOUNDING: for any query and any series,
 LB(paa(q), sax(s)) <= ED(q, s). Exactness of the whole index rests on it.
 """
 
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+hnp = pytest.importorskip("hypothesis.extra.numpy")
+st = pytest.importorskip("hypothesis.strategies")
 import jax.numpy as jnp
 import numpy as np
 

@@ -39,6 +39,31 @@ def test_lower_bound_pallas_vs_ref(n_rows, w, card):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("n_rows", [64, 1000])
+@pytest.mark.parametrize("n_q", [1, 5, 8])  # 5: doesn't divide block_q=8
+@pytest.mark.parametrize("w", [8, 16])
+def test_lower_bound_batch_pallas_vs_ref(n_rows, n_q, w):
+    length = 256
+    card = 256
+    series = _series(n_rows, length)
+    bp = isax.gaussian_breakpoints(card)
+    bpp = isax.padded_breakpoints(card)
+    sax, _ = ref.paa_isax(series, w, bp)
+    qs = isax.znorm(_series(n_q, length))
+    qps = isax.paa(qs, w)
+    want = ref.lower_bound_sq_batch(qps, sax, bpp, length)
+    # the batch oracle must agree row-wise with the single-query oracle
+    rows = jnp.stack([
+        ops.lower_bound_sq(qps[i], sax, bpp, length, impl="ref")
+        for i in range(n_q)])
+    np.testing.assert_allclose(np.asarray(want), np.asarray(rows),
+                               rtol=1e-5, atol=1e-4)
+    got = ops.lower_bound_sq_batch(qps, sax, bpp, length, impl="pallas",
+                                   block_n=256)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               rtol=1e-5, atol=1e-4)
+
+
 def test_lower_bound_sisd_matches():
     series = _series(96, 128)
     bp = isax.gaussian_breakpoints(256)

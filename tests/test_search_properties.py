@@ -1,8 +1,10 @@
 """Hypothesis: exact search equals the oracle on arbitrary inputs."""
 
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+hnp = pytest.importorskip("hypothesis.extra.numpy")
+st = pytest.importorskip("hypothesis.strategies")
 import jax.numpy as jnp
 import numpy as np
 
