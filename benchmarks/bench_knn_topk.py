@@ -1,0 +1,115 @@
+"""Exact k-NN: partial selection (``select="topk"``) vs the full sort.
+
+PR 1 left ``exact_knn_batch`` locked to a full per-query argsort over all N
+candidates because the exactness-fallback scan re-distances already-seen
+candidates, which a k>1 merge would duplicate. The engine is now k-safe
+(re-distanced candidates are masked against the result list by position),
+so k-NN rides the same O(N log K) partial-selection path as 1-NN search.
+
+This harness measures both paths of the SAME engine — identical kernels,
+rounds, and merge; only the candidate-selection strategy differs — over a
+(Q, k) sweep, asserts bit-exact parity, and writes the acceptance artifact
+``BENCH_knn_topk.json`` (the bar: topk beats sort at Q=64, k=8 on the ref
+backend).
+
+    PYTHONPATH=src:. python benchmarks/bench_knn_topk.py [--tiny|--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import dataset, timeit
+from repro.core import build_index, exact_knn_batch
+
+ROUND_SIZE = 512
+
+
+def run(quick: bool = False, tiny: bool = False, impl: str = "ref"):
+    n = 2_000 if tiny else (20_000 if quick else 50_000)
+    sweep = [(8, 1), (8, 8)] if tiny else [(8, 8), (64, 1), (64, 8)]
+    raw = jnp.asarray(dataset(n, 256))
+    index = build_index(raw)
+    rng = np.random.default_rng(99)
+    queries = jnp.asarray(
+        rng.standard_normal((max(q for q, _ in sweep), 256)).cumsum(axis=1),
+        jnp.float32,
+    )
+
+    rows, results = [], []
+    for q_n, k in sweep:
+        qs = queries[:q_n]
+
+        def topk_fn():
+            return exact_knn_batch(index, qs, k=k, round_size=ROUND_SIZE,
+                                   impl=impl, select="topk")
+
+        def sort_fn():
+            return exact_knn_batch(index, qs, k=k, round_size=ROUND_SIZE,
+                                   impl=impl, select="sort")
+
+        topk_us = timeit(topk_fn, repeats=3, warmup=1)
+        sort_us = timeit(sort_fn, repeats=3, warmup=1)
+        td, tp = topk_fn()
+        sd, sp = sort_fn()
+        parity = bool(
+            np.array_equal(np.asarray(tp), np.asarray(sp))
+            and np.array_equal(np.asarray(td), np.asarray(sd))
+        )
+        entry = dict(
+            Q=q_n,
+            k=k,
+            topk_us=topk_us,
+            sort_us=sort_us,
+            topk_qps=q_n / (topk_us * 1e-6),
+            speedup=sort_us / topk_us,
+            parity=parity,
+        )
+        results.append(entry)
+        rows.append((
+            f"knn_topk_{n}_Q{q_n}_k{k}", topk_us,
+            f"qps={entry['topk_qps']:.1f} sort_x={entry['speedup']:.2f} "
+            f"parity={parity}"))
+    report = dict(
+        n_series=n,
+        series_length=256,
+        round_size=ROUND_SIZE,
+        impl=impl,
+        backend=jax.default_backend(),
+        results=results,
+    )
+    return rows, report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: 2k series, Q=8")
+    ap.add_argument("--quick", action="store_true", help="20k series")
+    ap.add_argument("--impl", default="ref",
+                    help="kernel impl for the acceptance numbers")
+    ap.add_argument("--out", default=None,
+                    help="JSON path (default: repo-root BENCH_knn_topk.json;"
+                         " skipped under --tiny)")
+    args = ap.parse_args()
+    rows, report = run(quick=args.quick, tiny=args.tiny, impl=args.impl)
+    from benchmarks.common import emit
+    emit(rows)
+    out = args.out
+    if out is None and not args.tiny:
+        out = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_knn_topk.json")
+    if out:
+        with open(out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Streaming serving harness: the SearchRequestBatcher vs its bounds.
+
+Replays a stream of single k-NN queries through three answer paths:
+
+  seq      — one ``exact_knn_batch`` call per query as it arrives (the
+             no-batching lower bound: every arrival pays a full engine
+             launch at Q=1),
+  batcher  — ``SearchRequestBatcher`` with burst arrivals (the serving
+             path: pow2-padded adaptive batches, per-request futures),
+  direct   — one fixed-shape ``exact_knn_batch`` call over the whole
+             stream at once (the upper bound a batcher can approach when
+             arrivals are perfectly bursty).
+
+Reports queries/sec for each, the batcher's padding overhead, and checks
+that every streamed answer is identical to the direct batch call.
+
+    PYTHONPATH=src:. python benchmarks/bench_search_batcher.py [--tiny]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import dataset, timeit
+from repro.core import build_index, exact_knn_batch
+from repro.serving.search_batcher import SearchRequestBatcher
+
+ROUND_SIZE = 512
+K = 8
+
+
+def run(tiny: bool = False, impl: str = "ref"):
+    n = 2_000 if tiny else 20_000
+    stream = 32 if tiny else 256
+    max_batch = 8 if tiny else 64
+    raw = jnp.asarray(dataset(n, 256))
+    index = build_index(raw)
+    rng = np.random.default_rng(7)
+    qs = rng.standard_normal((stream, 256)).cumsum(axis=1).astype(np.float32)
+    qs_j = jnp.asarray(qs)
+
+    def seq_fn():
+        return [exact_knn_batch(index, qs_j[i:i + 1], k=K,
+                                round_size=ROUND_SIZE, impl=impl)
+                for i in range(stream)]
+
+    def direct_fn():
+        return exact_knn_batch(index, qs_j, k=K, round_size=ROUND_SIZE,
+                               impl=impl)
+
+    def batcher_fn():
+        b = SearchRequestBatcher(index, k=K, max_batch=max_batch,
+                                 max_wait_ms=1000.0, round_size=ROUND_SIZE,
+                                 impl=impl)
+        futs = [b.submit(q) for q in qs]  # burst arrival
+        b.drain()
+        return [f.result() for f in futs], b.stats()
+
+    batcher_us = timeit(lambda: batcher_fn()[0], repeats=3, warmup=1)
+    direct_us = timeit(direct_fn, repeats=3, warmup=1)
+    seq_us = timeit(seq_fn, repeats=1, warmup=1)
+
+    res, stats = batcher_fn()
+    want_d, want_p = direct_fn()
+    parity = all(
+        np.array_equal(res[i][1], np.asarray(want_p[i]))
+        and np.array_equal(res[i][0], np.asarray(want_d[i]))
+        for i in range(stream)
+    )
+    rows = [
+        (f"serve_knn_{n}_seq", seq_us / stream,
+         f"qps={stream / (seq_us * 1e-6):.1f}"),
+        (f"serve_knn_{n}_batcher", batcher_us / stream,
+         f"qps={stream / (batcher_us * 1e-6):.1f} "
+         f"seq_x={seq_us / batcher_us:.2f} "
+         f"pad={stats['padded_queries']} parity={parity}"),
+        (f"serve_knn_{n}_direct", direct_us / stream,
+         f"qps={stream / (direct_us * 1e-6):.1f}"),
+    ]
+    return rows, parity
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: 2k series, 32-query stream")
+    ap.add_argument("--impl", default="ref")
+    args = ap.parse_args()
+    rows, parity = run(tiny=args.tiny, impl=args.impl)
+    from benchmarks.common import emit
+    emit(rows)
+    if not parity:
+        raise SystemExit("batcher answers diverged from the direct batch")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,8 +20,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_batch_query, bench_build, bench_classifier,
-                            bench_lower_bound, bench_pruning, bench_query,
-                            roofline_table)
+                            bench_knn_topk, bench_lower_bound, bench_pruning,
+                            bench_query, bench_search_batcher, roofline_table)
     from benchmarks.common import emit
 
     benches = {
@@ -29,6 +29,9 @@ def main() -> None:
         "build": bench_build.run,  # paper Figs 9-13
         "query": bench_query.run,  # paper Figs 14-17/19
         "batch_query": lambda quick: bench_batch_query.run(quick=quick)[0],
+        "knn_topk": lambda quick: bench_knn_topk.run(quick=quick)[0],
+        "search_batcher":
+            lambda quick: bench_search_batcher.run(tiny=quick)[0],
         "pruning": bench_pruning.run,  # paper Fig 20
         "classifier": bench_classifier.run,  # paper Fig 18
         "roofline": roofline_table.run,  # TPU dry-run summary

@@ -6,10 +6,14 @@ state queries the index for its nearest memorized states, whose next tokens
 form a retrieval distribution that is interpolated with the LM logits
 (Khandelwal et al.'s kNN-LM, with ParIS+ replacing the FAISS store).
 
-Serving is *batched* end-to-end: B sequences decode together and every
-decode step answers all B retrieval queries with ONE ``exact_knn_batch``
-call — one fused (Q, N) lower-bound pass and one shared RDC loop per step
-instead of B independent searches.
+Serving is *streamed* end-to-end: every decoding sequence submits its
+retrieval query to a ``SearchRequestBatcher`` as it arrives; the batcher
+coalesces the stream into padded power-of-two batches and answers each one
+with ONE ``exact_knn_batch`` call — one fused (Q, N) lower-bound pass and
+one shared RDC loop riding the k-safe partial-selection (``select="topk"``)
+path — instead of B independent searches or a fixed-B loop. The retrieved
+(distance, next-token) lists are mixed into the LM logits with a single
+segment-max scatter over the whole (B, k) result.
 
     PYTHONPATH=src python examples/retrieval_serve.py
 """
@@ -21,10 +25,30 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import SearchConfig, build_index, exact_knn_batch
+from repro.core import build_index
 from repro.models import Model
 from repro.serving.kv_cache import pad_cache_to
+from repro.serving.search_batcher import SearchRequestBatcher
 from repro.training import data as data_mod
+
+
+def knn_mix_logits(lm_logits, dists, neighbor_tokens, vocab_size, lam):
+    """kNN-LM interpolation, one scatter for the whole batch.
+
+    lm_logits (B, V); dists (B, k) squared distances ascending;
+    neighbor_tokens (B, k) the next-token of each retrieved state. The
+    retrieval distribution is a softmax over -sqrt(d) whose per-token mass
+    is the MAX over neighbors sharing that token — a single (B, k)
+    segment-max scatter (``.at[rows, tokens].max``) instead of a Python
+    double loop with one device round-trip per neighbor.
+    """
+    bsz, k = dists.shape
+    w = jax.nn.softmax(-jnp.sqrt(jnp.maximum(dists, 0.0)), axis=1)
+    rows = jnp.broadcast_to(jnp.arange(bsz)[:, None], (bsz, k))
+    knn_logits = jnp.full((bsz, vocab_size), -1e9)
+    knn_logits = knn_logits.at[rows, neighbor_tokens].max(jnp.log(w + 1e-9))
+    return (1 - lam) * jax.nn.log_softmax(lm_logits) + \
+        lam * jax.nn.log_softmax(knn_logits)
 
 
 def main():
@@ -48,36 +72,39 @@ def main():
     index = build_index(jnp.asarray(vecs), segments=16)
     print(f"indexed {index.num_series} (state, next-token) pairs")
 
-    # --- serving pass: B sequences decode together; each step answers the
-    # whole query batch through the fused batched search engine.
+    # --- serving pass: B sequences decode together; each step every
+    # sequence submits its own retrieval query to the streaming batcher,
+    # which flushes the whole step's arrivals as one padded engine batch.
     lam, k, bsz, steps = 0.3, 8, 4, 8
+    batcher = SearchRequestBatcher(
+        index, k=k, max_batch=bsz, max_wait_ms=50.0, round_size=512)
     prompts = tokens[:bsz, :8]
     logits, cache = model.prefill(params, {"tokens": prompts})
     cache = pad_cache_to(cache, 32)
     outs = [list(np.asarray(prompts[b])) for b in range(bsz)]
     last = logits[:, -1]  # (B, vocab)
     for i in range(steps):
-        qs = last[:, :256]  # (B, 256): one retrieval query per sequence
-        dists, pos = exact_knn_batch(index, qs, k=k, round_size=512)
-        nxts = []
+        qs = np.asarray(last[:, :256])  # one retrieval query per sequence
+        futs = [batcher.submit(qs[b]) for b in range(bsz)]
+        batcher.drain()  # max_batch == bsz flushes inline; drain is a net
+        res = [f.result() for f in futs]
+        dists = jnp.asarray(np.stack([d for d, _ in res]))
+        pos = np.stack([p for _, p in res])
+        toks = jnp.asarray(next_tokens[pos])  # (B, k)
+        mix = knn_mix_logits(last, dists, toks, cfg.vocab_size, lam)
+        nxts = np.asarray(jnp.argmax(mix, axis=-1))
         for b in range(bsz):
-            knn_logits = jnp.full((cfg.vocab_size,), -1e9)
-            w = jax.nn.softmax(-jnp.sqrt(jnp.maximum(dists[b], 0.0)))
-            for j in range(k):
-                t = int(next_tokens[int(pos[b, j])])
-                knn_logits = knn_logits.at[t].max(jnp.log(w[j] + 1e-9))
-            mix = (1 - lam) * jax.nn.log_softmax(last[b]) + \
-                lam * jax.nn.log_softmax(knn_logits)
-            nxt = int(jnp.argmax(mix))
-            outs[b].append(nxt)
-            nxts.append(nxt)
+            outs[b].append(int(nxts[b]))
         last, cache = model.decode_step(
             params, {"tokens": jnp.asarray(nxts)[:, None]}, cache,
             jnp.int32(prompts.shape[1] + i))
     for b in range(bsz):
         print(f"seq {b} prompt + generated:", outs[b])
+    s = batcher.stats()
     print("(retrieval hits informed every step; ParIS+ answered",
-          f"{steps} batched exact {k}-NN queries x {bsz} sequences",
+          f"{s['answered']} streamed exact {k}-NN queries in",
+          f"{s['batches']} batches (avg size {s['batch_size_avg']:.1f},",
+          f"avg latency {s['latency_ms_avg']:.1f} ms)",
           f"over {index.num_series} vectors)")
 
 

@@ -38,7 +38,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import isax
 from repro.core.index import ParISIndex
-from repro.core.search import SearchResult, select_len as search_select_len
+from repro.core.search import (
+    NO_POS, SearchResult, dedup_mask, select_len as search_select_len,
+)
 from repro.kernels import ops
 
 INF = jnp.float32(jnp.inf)
@@ -82,7 +84,10 @@ def dist_index_from(index: ParISIndex, num_shards: int) -> DistIndex:
     padded = -(-n // num_shards) * num_shards
     pad = padded - n
     sax = jnp.pad(index.sax, ((0, pad), (0, 0)))
-    pos = jnp.pad(index.pos, (0, pad), constant_values=0)
+    # Pad positions carry the NO_POS sentinel so kernels can recognize
+    # filler rows (the k-NN kernel masks them out of its result lists; for
+    # 1-NN the +BIG raw filler below already keeps them from winning).
+    pos = jnp.pad(index.pos, (0, pad), constant_values=int(NO_POS))
     raw_sorted = jnp.take(index.raw, index.pos, axis=0)
     if pad:
         # Padded rows: +BIG raw values so their distance can never win.
@@ -537,6 +542,207 @@ def _local_batch_search(
     return SearchResult(bsf, bsfpos, gsum(reads), gsum(updates), r)
 
 
+def _local_batch_knn(
+    sax_l: jax.Array,
+    raw_l: jax.Array,
+    pos_l: jax.Array,
+    queries: jax.Array,
+    *,
+    k: int,
+    series_length: int,
+    segments: int,
+    cardinality: int,
+    round_size: int,
+    leaf_cap: int,
+    axis_names: tuple,
+    impl: str,
+) -> SearchResult:
+    """Per-device body of the batched exact k-NN (runs under shard_map).
+
+    Mirrors the single-host k-safe ``select="topk"`` protocol of
+    :func:`repro.core.search._batch_engine_core` — shared ``select_len``,
+    the K-th-bound fallback gate, and :func:`repro.core.search.dedup_mask`
+    against re-distanced candidates — on top of a per-shard result list.
+    Each shard carries a local (Q, k) top list holding ONLY its own
+    positions (shards partition the data, so the lists are disjoint); the
+    cross-shard merge each round is an ``all_gather`` + ``top_k`` over the
+    (S*k,) concatenation, which is duplicate-free by construction. Only the
+    globally-agreed k-th distance (the pruning threshold) rides in the
+    carry; the final list is one more merge at exit.
+    """
+    n_local = sax_l.shape[0]
+    n_q = queries.shape[0]
+    rs = round_size
+    qs = isax.znorm(queries)
+    qps = isax.paa(qs, segments)
+    bpp = isax.padded_breakpoints(cardinality)
+
+    def gmin(x):
+        for ax in axis_names:
+            x = jax.lax.pmin(x, ax)
+        return x
+
+    def gsum(x):
+        for ax in axis_names:
+            x = jax.lax.psum(x, ax)
+        return x
+
+    def gtopk(d, p):
+        """Merge ownership-disjoint per-shard (Q, k) lists; replicated."""
+        for ax in axis_names:
+            d_all = jax.lax.all_gather(d, ax)  # (S, Q, k)
+            p_all = jax.lax.all_gather(p, ax)
+            dq = jnp.moveaxis(d_all, 0, 1).reshape(n_q, -1)
+            pq = jnp.moveaxis(p_all, 0, 1).reshape(n_q, -1)
+            neg, sel = jax.lax.top_k(-dq, k)
+            d = -neg
+            p = jnp.take_along_axis(pq, sel, axis=1)
+        return d, p
+
+    def gkth(d):
+        """Globally-agreed k-th best distance — the pruning threshold. The
+        hot loop needs only this (Q,) vector, so it gathers distances
+        alone; positions are merged once at exit via gtopk."""
+        for ax in axis_names:
+            d_all = jax.lax.all_gather(d, ax)  # (S, Q, k)
+            dq = jnp.moveaxis(d_all, 0, 1).reshape(n_q, -1)
+            d = -jax.lax.top_k(-dq, k)[0]
+        return d[:, -1]
+
+    # Approx phase: seed row 0 of the local list with the shard's best over
+    # its first cap rows (rows 1..k-1 stay at INF/NO_POS — the same row-0
+    # seeding shape as the single-host engine's init="approx").
+    cap = min(leaf_cap, n_local)
+    d0 = jax.vmap(lambda q: ops.euclid_sq(q, raw_l[:cap], impl=impl))(qs)
+    d0 = jnp.where(pos_l[None, :cap] < 0, INF, d0)  # skip filler rows
+    j0 = jnp.argmin(d0, axis=1)
+    seed_d = jnp.take_along_axis(d0, j0[:, None], axis=1)[:, 0]
+    seed_p = jnp.take(pos_l, j0, axis=0).astype(jnp.int32)
+    seed_p = jnp.where(jnp.isfinite(seed_d), seed_p, NO_POS)
+    loc_d = jnp.concatenate(
+        [seed_d[:, None], jnp.full((n_q, k - 1), INF)], axis=1)
+    loc_p = jnp.concatenate(
+        [seed_p[:, None], jnp.full((n_q, k - 1), NO_POS)], axis=1)
+
+    # LBC + partial selection (same select_len heuristic and VMEM budget cap
+    # as the 1-NN kernel; a tighter cap only means earlier fallback scans).
+    lb = ops.lower_bound_sq_batch(qps, sax_l, bpp, series_length, impl=impl)
+    budget_rows = (64 * 1024 * 1024) // max(1, n_q * series_length)
+    sel_len = search_select_len(n_local, rs)
+    sel_len = min(sel_len, max(rs, budget_rows))
+    neg, order = jax.lax.top_k(-lb, sel_len)
+    order = order.astype(jnp.int32)
+    lb_sorted = -neg
+    kth_bound = lb_sorted[:, -1]  # worst selected bound per query
+    n_rounds = -(-sel_len // rs)
+    padded = n_rounds * rs
+    if padded > sel_len:
+        order = jnp.concatenate(
+            [order, jnp.zeros((n_q, padded - sel_len), jnp.int32)], axis=1)
+        lb_sorted = jnp.concatenate(
+            [lb_sorted, jnp.full((n_q, padded - sel_len), INF)], axis=1)
+    raw_sel = jnp.take(raw_l, order, axis=0)  # pre-gather (see 1-NN note)
+    pos_sel = jnp.take(pos_l, order, axis=0)
+
+    def merge(loc_d, loc_p, cand_pos, d):
+        d = jnp.where(dedup_mask(cand_pos, loc_d, loc_p), INF, d)
+        md = jnp.concatenate([loc_d, d], axis=1)
+        mp = jnp.concatenate([loc_p, cand_pos], axis=1)
+        neg_d, sel = jax.lax.top_k(-md, k)
+        return -neg_d, jnp.take_along_axis(mp, sel, axis=1)
+
+    kth0 = gkth(loc_d)
+
+    def cond(st):
+        r, _, _, kth, *_ = st
+        head = jax.lax.dynamic_slice_in_dim(lb_sorted, r * rs, 1, axis=1)[:, 0]
+        # kth is globally agreed each round, so "any query on any shard
+        # still live" is replicated and trip counts stay aligned.
+        return (r < n_rounds) & jnp.any(gmin(head) < kth)
+
+    def body(st):
+        r, loc_d, loc_p, kth, reads, updates = st
+        lbs = jax.lax.dynamic_slice_in_dim(lb_sorted, r * rs, rs, axis=1)
+        mask = lbs < kth[:, None]
+        raws = jax.lax.dynamic_slice_in_dim(raw_sel, r * rs, rs, axis=1)
+        d = jax.vmap(lambda q, rw: ops.euclid_sq(q, rw, impl=impl))(qs, raws)
+        cand_pos = jax.lax.dynamic_slice_in_dim(pos_sel, r * rs, rs, axis=1)
+        d = jnp.where(mask & (cand_pos >= 0), d, INF)  # drop filler rows
+        improved = jnp.min(d, axis=1) < kth
+        loc_d, loc_p = merge(loc_d, loc_p, cand_pos, d)
+        kth = gkth(loc_d)
+        return (
+            r + 1,
+            loc_d,
+            loc_p,
+            kth,
+            reads + jnp.sum(mask, axis=1, dtype=jnp.int32),
+            updates + improved.astype(jnp.int32),
+        )
+
+    st0 = (jnp.int32(0), loc_d, loc_p, kth0,
+           jnp.full((n_q,), cap, jnp.int32), jnp.zeros((n_q,), jnp.int32))
+    r, loc_d, loc_p, kth, reads, updates = jax.lax.while_loop(cond, body, st0)
+
+    if sel_len < n_local:
+        # Exactness fallback over the full shard in file order: same gate
+        # and skip-mask protocol as the single-host engine; dedup_mask
+        # keeps re-distanced ties at the K-th bound out of the list.
+        all_rounds = -(-n_local // rs)
+        pad_all = all_rounds * rs
+        pad_f = pad_all - n_local
+        lb_all = (
+            jnp.concatenate([lb, jnp.full((n_q, pad_f), INF)], axis=1)
+            if pad_f else lb
+        )
+        raw_file = (
+            jnp.concatenate([raw_l, raw_l[:pad_f]], axis=0)
+            if pad_f else raw_l
+        )
+        pos_file = (
+            jnp.concatenate([pos_l, pos_l[:pad_f]]) if pad_f else pos_l
+        )
+
+        def fcond(st):
+            r2, _, _, kth2, *_ = st
+            local_need = jnp.any(kth_bound < kth2)
+            need_g = gmin(jnp.where(local_need, 0, 1)) < 1
+            return (r2 < all_rounds) & need_g
+
+        def fbody(st):
+            r2, loc_d, loc_p, kth2, reads2, upd2 = st
+            lbs = jax.lax.dynamic_slice_in_dim(lb_all, r2 * rs, rs, axis=1)
+            mask = (
+                (lbs < kth2[:, None])
+                & (lbs >= kth_bound[:, None])
+                & (kth_bound < kth2)[:, None]
+            )
+            raws = jax.lax.dynamic_slice_in_dim(raw_file, r2 * rs, rs)
+            d = jax.vmap(lambda q: ops.euclid_sq(q, raws, impl=impl))(qs)
+            cand = jax.lax.dynamic_slice_in_dim(pos_file, r2 * rs, rs)
+            cand_pos = jnp.broadcast_to(cand[None, :], (n_q, rs))
+            d = jnp.where(mask & (cand_pos >= 0), d, INF)
+            improved = jnp.min(d, axis=1) < kth2
+            loc_d, loc_p = merge(loc_d, loc_p, cand_pos, d)
+            kth2 = gkth(loc_d)
+            return (
+                r2 + 1,
+                loc_d,
+                loc_p,
+                kth2,
+                reads2 + jnp.sum(mask, axis=1, dtype=jnp.int32),
+                upd2 + improved.astype(jnp.int32),
+            )
+
+        st1 = (jnp.int32(0), loc_d, loc_p, kth, reads, updates)
+        r2, loc_d, loc_p, kth, reads, updates = jax.lax.while_loop(
+            fcond, fbody, st1)
+        r = r + r2
+
+    g_d, g_p = gtopk(loc_d, loc_p)
+    return SearchResult(g_d, g_p, gsum(reads), gsum(updates), r)
+
+
 def make_distributed_batch_search(
     mesh: Mesh,
     axes: Sequence[str],
@@ -547,6 +753,7 @@ def make_distributed_batch_search(
     round_size: int = 4096,
     leaf_cap: int = 256,
     impl: str = "auto",
+    k: int = 1,
 ):
     """Build the jitted mesh-sharded *batched* search step.
 
@@ -556,18 +763,37 @@ def make_distributed_batch_search(
     batch_queries=Q)`` — which vmaps Q independent single-query loops — this
     runs ONE loop whose collectives reduce the whole BSF vector per round,
     so collective count is independent of Q.
+
+    ``k > 1`` answers exact k-NN instead: ``dist_sq``/``position`` become
+    (Q, k) arrays (ascending, sentinel (INF, -1) when the index holds fewer
+    than k real series) via the k-safe partial-selection protocol of
+    :func:`_local_batch_knn`. ``k`` must not exceed the per-shard padded
+    row count for sentinel-free results.
     """
     axes = tuple(axes)
-    kernel = functools.partial(
-        _local_batch_search,
-        series_length=series_length,
-        segments=segments,
-        cardinality=cardinality,
-        round_size=round_size,
-        leaf_cap=leaf_cap,
-        axis_names=axes,
-        impl=impl,
-    )
+    if k > 1:
+        kernel = functools.partial(
+            _local_batch_knn,
+            k=k,
+            series_length=series_length,
+            segments=segments,
+            cardinality=cardinality,
+            round_size=round_size,
+            leaf_cap=leaf_cap,
+            axis_names=axes,
+            impl=impl,
+        )
+    else:
+        kernel = functools.partial(
+            _local_batch_search,
+            series_length=series_length,
+            segments=segments,
+            cardinality=cardinality,
+            round_size=round_size,
+            leaf_cap=leaf_cap,
+            axis_names=axes,
+            impl=impl,
+        )
     row = P(axes, None)
     vec = P(axes)
     rep = P()

@@ -37,6 +37,11 @@ Batched query answering (beyond-paper; MESSI-style multi-query execution):
                                instead of a full argsort, with an exactness
                                fallback scan that runs only if the K-th bound
                                still beats a query's BSF at list exhaustion.
+                               The path is k-safe for k-NN: re-distanced
+                               candidates are masked against the current
+                               (Q, k) result list by position
+                               (:func:`dedup_mask`), so the fallback can
+                               never duplicate an entry.
   RDC over a query batch    -> :func:`exact_search_batch` / ``exact_knn_batch``
                                — ONE shared ``while_loop`` with a per-query
                                BSF vector, per-query masked rounds, and a
@@ -172,6 +177,29 @@ def select_len(n: int, round_size: int) -> int:
     return min(n, max(n // 16, 4 * round_size))
 
 
+NO_POS = jnp.int32(-1)  # sentinel position of an unfilled k-NN result slot
+
+
+def dedup_mask(cand_pos: jax.Array, top_d: jax.Array,
+               top_p: jax.Array) -> jax.Array:
+    """(Q, R) mask of candidates already present in the (Q, k) result list.
+
+    The k-safety primitive of the ``select="topk"`` protocol (shared by the
+    single-host engine and the distributed batch kernel): the exactness
+    fallback — and, under ``init="approx"``, the main loop — re-distances
+    candidates that may have been merged before. A candidate can only be a
+    duplicate if its position currently sits in ``top_p``: once evicted, its
+    distance is >= the k-th best forever after (distances are immutable and
+    the k-th best only decreases), so it can never re-enter. Unfilled slots
+    hold ``NO_POS`` (-1) + INF and match no real candidate.
+    """
+    return jnp.any(
+        (cand_pos[:, :, None] == top_p[:, None, :])
+        & (top_d[:, None, :] < INF),
+        axis=2,
+    )
+
+
 def _batch_engine_core(
     index: ParISIndex,
     queries: jax.Array,
@@ -194,13 +222,16 @@ def _batch_engine_core(
     ``select="topk"`` keeps only the K smallest bounds per query
     (K = max(N/16, 4*round_size)); exactness is preserved by a fallback scan
     over the full SAX order that only runs for queries whose K-th bound still
-    beats their BSF when the truncated list is exhausted (rare — raw reads
-    are ~1-4% of N on the paper's workloads). ``select="topk"`` requires
-    ``k == 1``: the fallback re-distances already-seen candidates, which a
-    k>1 merge would duplicate.
+    beats their k-th best distance when the truncated list is exhausted
+    (rare — raw reads are ~1-4% of N on the paper's workloads). The path is
+    k-safe: the fallback (and, under ``init="approx"``, the main loop)
+    re-distances already-seen candidates, and for k > 1 every merge masks
+    candidates whose position already sits in the result list
+    (:func:`dedup_mask`), so no entry can be duplicated. Unfilled result
+    slots are (INF, :data:`NO_POS`).
     """
-    if select == "topk" and k > 1:
-        raise ValueError("select='topk' supports k=1 only; use select='sort'")
+    if not 1 <= k <= index.num_series:
+        raise ValueError(f"k={k} outside [1, {index.num_series}]")
     n_series = index.num_series
     n_q = queries.shape[0]
     rs = round_size
@@ -216,12 +247,12 @@ def _batch_engine_core(
         )
         top_p0 = jnp.concatenate(
             [pos0.astype(jnp.int32)[:, None],
-             jnp.zeros((n_q, k - 1), jnp.int32)], axis=1,
+             jnp.full((n_q, k - 1), NO_POS)], axis=1,
         )
         reads0 = jnp.full((n_q,), leaf, jnp.int32)
     else:
         top_d0 = jnp.full((n_q, k), INF)
-        top_p0 = jnp.zeros((n_q, k), jnp.int32)
+        top_p0 = jnp.full((n_q, k), NO_POS)
         reads0 = jnp.zeros((n_q,), jnp.int32)
 
     # --- LBC phase: ONE fused (Q, N) pass over the SAX array. ---
@@ -273,6 +304,9 @@ def _batch_engine_core(
                 jnp.where(better, dj, top_d),
                 jnp.where(better, pj, top_p),
             )
+        # k-safety: a re-distanced candidate (approx seed, fallback scan,
+        # ties at the K-th bound) must not enter the list twice.
+        d = jnp.where(dedup_mask(cand_pos, top_d, top_p), INF, d)
         md = jnp.concatenate([top_d, d], axis=1)
         mp = jnp.concatenate([top_p, cand_pos], axis=1)
         neg_d, sel = jax.lax.top_k(-md, k)  # O(n log k), not a full sort
@@ -468,24 +502,47 @@ def exact_knn_batch(
     k: int = 1,
     round_size: int = 4096,
     impl: str = "auto",
+    select: str = "topk",
+    sort: bool = True,
+    leaf_cap: int = 256,
+    stats: bool = False,
 ) -> tuple:
     """Batched exact k-NN: (Q, n) -> ((Q, k) dists ascending, (Q, k) pos).
 
-    Uses the full per-query candidate order (``select="sort"``): the topk
-    fallback re-distances seen candidates, which would duplicate entries in a
-    k>1 result list. The per-round merge is still ``top_k`` (O(n log k)).
+    Rides the partial-selection fast path by default (``select="topk"``,
+    O(N log K) per query instead of a full O(N log N) argsort) with an
+    approx-seeded BSF: row 0 of the result list starts at the query's
+    bucket-window best, rows 1..k-1 at INF. Exactness is kept by the
+    dedup-masked fallback protocol of :func:`_batch_engine_core`.
+
+    ``k`` is validated: ``k < 1`` raises; ``k > index.num_series`` is
+    answered with the ``num_series`` real neighbors and the remaining slots
+    filled with the (INF, :data:`NO_POS`) sentinel — never duplicated
+    placeholders. ``stats=True`` appends the engine's per-query
+    (raw_reads, bsf_updates) vectors and the scalar round count.
     """
-    top_d, top_p, *_ = _batch_engine(
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    k_eff = min(k, index.num_series)
+    top_d, top_p, reads, updates, rounds = _batch_engine(
         index,
         queries,
-        k=k,
+        k=k_eff,
         round_size=round_size,
-        leaf_cap=0,
-        sort=True,
-        select="sort",
+        leaf_cap=leaf_cap,
+        sort=sort,
+        select=select,
         impl=impl,
-        init="inf",
+        init="approx",
     )
+    if k_eff < k:  # tiny index: pad missing neighbors with the sentinel
+        n_q = top_d.shape[0]
+        top_d = jnp.concatenate(
+            [top_d, jnp.full((n_q, k - k_eff), INF)], axis=1)
+        top_p = jnp.concatenate(
+            [top_p, jnp.full((n_q, k - k_eff), NO_POS)], axis=1)
+    if stats:
+        return top_d, top_p, reads, updates, rounds
     return top_d, top_p
 
 
@@ -691,15 +748,17 @@ def exact_knn(
     k: int = 1,
     round_size: int = 4096,
     impl: str = "auto",
+    select: str = "topk",
 ) -> tuple:
     """Exact k-NN: sorted-candidate rounds pruning against the k-th best.
 
     Returns ((k,) squared distances ascending, (k,) file positions). Backs the
     paper's k-NN classifier experiment (Fig. 18). Thin Q=1 wrapper over
-    :func:`exact_knn_batch`; the per-round merge uses ``jax.lax.top_k``
-    (O(n log k)) instead of the old full ``argsort`` (O(n log n)).
+    :func:`exact_knn_batch` — partial selection + approx-seeded BSF by
+    default, like the batch path.
     """
     top_d, top_p = exact_knn_batch(
-        index, query[None, :], k=k, round_size=round_size, impl=impl
+        index, query[None, :], k=k, round_size=round_size, impl=impl,
+        select=select,
     )
     return top_d[0], top_p[0]

@@ -1,8 +1,15 @@
-"""Serving substrate: KV cache, prefill/decode steps, request batcher."""
+"""Serving substrate: KV cache, prefill/decode steps, request batchers.
+
+Two host-side batchers multiplex streams onto fixed compiled shapes:
+``SlotBatcher`` (decode requests -> slots of one decode step) and
+``SearchRequestBatcher`` (single search queries -> padded power-of-two
+batches of the ParIS+ batch engine).
+"""
 
 from repro.serving.serve_step import (
     greedy_generate, make_decode_step, make_prefill_step)
 from repro.serving.kv_cache import pad_cache_to, shard_cache
+from repro.serving.search_batcher import SearchRequestBatcher
 
 __all__ = ["greedy_generate", "make_decode_step", "make_prefill_step",
-           "pad_cache_to", "shard_cache"]
+           "pad_cache_to", "shard_cache", "SearchRequestBatcher"]

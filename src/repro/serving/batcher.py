@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.util import pow2_bucket
+
 
 @dataclasses.dataclass
 class Request:
@@ -66,16 +68,30 @@ class SlotBatcher:
         for i in range(self.B):
             if self.slots[i] is None and not self.queue.empty():
                 req = self.queue.get()
-                # Prefill the prompt into this slot (single-slot prefill).
+                plen = len(req.prompt)
+                tokens = np.asarray(req.prompt, np.int32)[None]
+                # Pad the prompt to a power-of-two bucket so prefill traces
+                # once per bucket, not once per distinct prompt length.
+                # Causal attention makes the position-(plen-1) logits and
+                # the cache rows [0, plen) independent of the right pads
+                # (pad K/V rows sit at positions the decode mask never
+                # attends). Recurrent models (rwkv / block_pattern) fold
+                # every token into their state, so they prefill unpadded.
+                recurrent = self.model.cfg.rwkv or self.model.cfg.block_pattern
+                if not recurrent:
+                    bucket = min(pow2_bucket(plen), self.max_len)
+                    if bucket > plen:
+                        tokens = np.pad(tokens, ((0, 0), (0, bucket - plen)))
                 logits, cache1 = self.model.prefill(
-                    self.params, {"tokens": jnp.asarray(req.prompt[None])})
+                    self.params, {"tokens": jnp.asarray(tokens)})
                 from repro.serving.kv_cache import pad_cache_to
                 cache1 = pad_cache_to(cache1, self.max_len)
                 self._copy_slot(cache1, i)
                 req.out = np.asarray(req.prompt, np.int32)
                 self.slots[i] = req
-                self.slot_pos[i] = len(req.prompt)
-                last = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+                self.slot_pos[i] = plen
+                last = np.asarray(
+                    jnp.argmax(logits[:, plen - 1], axis=-1))
                 self.slot_tok[i] = int(last[0])
                 req.out = np.concatenate([req.out, last.astype(np.int32)])
 
@@ -98,7 +114,13 @@ class SlotBatcher:
         self.cache = walk(self.cache, cache1)
 
     def run(self, steps: int):
-        """Drive up to ``steps`` decode iterations; returns finished map."""
+        """Drive up to ``steps`` decode iterations.
+
+        Returns the requests that finished since the last ``run`` call,
+        draining them from the batcher — each request is reported exactly
+        once (``self.done`` is the between-calls holding pen, not an
+        ever-growing archive).
+        """
         for _ in range(steps):
             self._admit()
             live = [i for i in range(self.B) if self.slots[i] is not None]
@@ -121,7 +143,8 @@ class SlotBatcher:
                         self.slot_pos[i] >= self.max_len - 1:
                     self.done[req.rid] = req.out
                     self.slots[i] = None
-        return self.done
+        finished, self.done = self.done, {}
+        return finished
 
 
 def _batch_axis(ndim: int, small_shape, big_shape) -> int:

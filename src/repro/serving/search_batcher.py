@@ -1,0 +1,258 @@
+"""Streaming search service: an adaptive query batcher over the batch engine.
+
+The ParIS+ batch engine answers a (Q, n) query matrix in one fused
+lower-bound pass + one shared RDC loop — but a serving workload is a
+*stream* of single queries, not a fixed-B matrix. ``SearchRequestBatcher``
+is the host-side adapter between the two (the retrieval analogue of
+``serving.batcher.SlotBatcher`` for decode):
+
+  * ``submit(query)`` enqueues one query and returns a
+    ``concurrent.futures.Future`` for its answer;
+  * a flush fires when ``max_batch`` queries are waiting (full batch) or
+    the oldest request has waited ``max_wait_ms`` (latency bound), echoing
+    the paper's goal that workers are handed enough work to all finish
+    "at about the same time" without starving latency;
+  * flushed queries are stacked and right-padded to a power-of-two batch
+    shape (pad rows repeat a real query and are discarded), so the engine
+    compiles ONE step per bucket shape instead of one per arrival count —
+    the jitted engines themselves come from ``core.search._engine_for``'s
+    per-index cache, shared with every direct ``exact_*_batch`` caller;
+  * ``drain()`` answers everything still queued (shutdown / test barrier);
+  * throughput and latency counters ride along (``stats()``).
+
+Two modes: ``k=None`` answers exact 1-NN through
+:func:`repro.core.search.exact_search_batch` (per-request ``SearchResult``
+scalars); ``k >= 1`` answers exact k-NN through the partial-selection
+:func:`repro.core.search.exact_knn_batch` (per-request ((k,) dists,
+(k,) positions)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import ParISIndex
+from repro.core.search import (
+    SearchConfig, SearchResult, exact_knn_batch, exact_search_batch,
+)
+from repro.serving.util import pow2_bucket
+
+
+@dataclasses.dataclass
+class _Pending:
+    query: np.ndarray  # (n,) float32
+    future: Future
+    t_submit: float
+
+
+class SearchRequestBatcher:
+    """Queue single queries; answer them in padded power-of-two batches.
+
+    Parameters
+    ----------
+    index:        the ParISIndex to search.
+    k:            None -> exact 1-NN (``SearchResult`` per request);
+                  int >= 1 -> exact k-NN (((k,) dists, (k,) pos) per
+                  request).
+    max_batch:    flush as soon as this many queries are waiting.
+    max_wait_ms:  flush (on ``poll``/background thread) once the oldest
+                  request has waited this long, even if the batch is small.
+    cfg:          SearchConfig for 1-NN mode (round_size/select/impl).
+    round_size / select / impl / leaf_cap: k-NN engine knobs.
+    min_bucket:   smallest padded batch shape (bounds compile count from
+                  below; 1 keeps single-query latency minimal).
+
+    Thread-safe: ``submit`` may be called from any thread. Each flush
+    claims its cohort of pending requests atomically under the lock, so
+    every request is answered exactly once; the engine call itself runs
+    OUTSIDE the lock (concurrent flushes may overlap in jax — safe, the
+    engines are pure). ``start()`` spawns a daemon thread that enforces
+    ``max_wait_ms`` for callers that block on futures; without it, call
+    ``poll()`` periodically or ``drain()`` at a barrier.
+    """
+
+    def __init__(
+        self,
+        index: ParISIndex,
+        *,
+        k: Optional[int] = None,
+        max_batch: int = 64,
+        max_wait_ms: float = 2.0,
+        cfg: SearchConfig = SearchConfig(),
+        round_size: int = 4096,
+        select: str = "topk",
+        impl: str = "auto",
+        leaf_cap: int = 256,
+        min_bucket: int = 1,
+    ):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if k is not None and k < 1:
+            raise ValueError("k must be None (1-NN mode) or >= 1")
+        self.index = index
+        self.k = k
+        self.max_batch = max_batch
+        self.max_wait_ms = max_wait_ms
+        self.cfg = cfg
+        self.round_size = round_size
+        self.select = select
+        self.impl = impl
+        self.leaf_cap = leaf_cap
+        self.min_bucket = min_bucket
+        self._pending: List[_Pending] = []
+        self._lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._t0 = time.monotonic()
+        self._counters = dict(
+            submitted=0, answered=0, batches=0, padded_queries=0,
+            flush_full=0, flush_timeout=0, flush_drain=0,
+            latency_ms_sum=0.0, latency_ms_max=0.0, batch_size_sum=0,
+        )
+
+    # ------------------------------------------------------------- request
+    def submit(self, query) -> Future:
+        """Enqueue one (n,) query; returns a Future for its result."""
+        q = np.asarray(query, np.float32)
+        if q.ndim != 1:
+            raise ValueError(f"submit takes one (n,) query, got {q.shape}")
+        fut: Future = Future()
+        with self._lock:
+            self._pending.append(_Pending(q, fut, time.monotonic()))
+            self._counters["submitted"] += 1
+            full = len(self._pending) >= self.max_batch
+        if full:
+            self._flush("flush_full")
+        return fut
+
+    def poll(self) -> int:
+        """Flush if the oldest request exceeded ``max_wait_ms``.
+
+        Returns the number of requests answered by this call.
+        """
+        with self._lock:
+            if not self._pending:
+                return 0
+            age_ms = (time.monotonic() - self._pending[0].t_submit) * 1e3
+            due = age_ms >= self.max_wait_ms
+        return self._flush("flush_timeout") if due else 0
+
+    def drain(self) -> int:
+        """Answer every queued request; returns how many were answered."""
+        total = 0
+        while True:
+            n = self._flush("flush_drain")
+            if n == 0:
+                return total
+            total += n
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self, tick_ms: Optional[float] = None) -> None:
+        """Spawn the daemon flusher enforcing ``max_wait_ms``."""
+        if self._thread is not None:
+            return
+        tick = (tick_ms if tick_ms is not None else
+                max(self.max_wait_ms / 4.0, 0.25)) / 1e3
+
+        def loop():
+            while not self._stop.wait(tick):
+                try:
+                    self.poll()
+                except Exception:
+                    # The failing cohort's futures already carry the
+                    # exception; the flusher must outlive one bad batch or
+                    # every later small batch would hang un-flushed.
+                    pass
+
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=loop, name="search-batcher", daemon=True)
+        self._thread.start()
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the flusher thread; by default answer what is left."""
+        if self._thread is not None:
+            self._stop.set()
+            self._thread.join()
+            self._thread = None
+        if drain:
+            self.drain()
+
+    # ------------------------------------------------------------- engine
+    def _flush(self, reason: str) -> int:
+        with self._lock:
+            if not self._pending:
+                return 0
+            take = self._pending[: self.max_batch]
+            del self._pending[: self.max_batch]
+        try:
+            qn = len(take)
+            bucket = pow2_bucket(qn, self.min_bucket)
+            qs = np.stack([p.query for p in take])
+            if bucket > qn:  # pad rows repeat a real query; discarded below
+                pad = np.broadcast_to(qs[0], (bucket - qn, qs.shape[1]))
+                qs = np.concatenate([qs, pad])
+            qs = jnp.asarray(qs)
+            if self.k is None:
+                res = exact_search_batch(self.index, qs, self.cfg)
+                outs = _split_search(res, qn)
+            else:
+                d, p = exact_knn_batch(
+                    self.index, qs, k=self.k, round_size=self.round_size,
+                    impl=self.impl, select=self.select,
+                    leaf_cap=self.leaf_cap,
+                )
+                d, p = np.asarray(d), np.asarray(p)
+                outs = [(d[i], p[i]) for i in range(qn)]
+        except BaseException as e:  # noqa: BLE001 — propagate per request
+            for p in take:
+                p.future.set_exception(e)
+            raise
+        now = time.monotonic()
+        c = self._counters
+        with self._lock:
+            c[reason] += 1
+            c["batches"] += 1
+            c["batch_size_sum"] += qn
+            c["padded_queries"] += bucket - qn
+            c["answered"] += qn
+            for p in take:
+                lat = (now - p.t_submit) * 1e3
+                c["latency_ms_sum"] += lat
+                c["latency_ms_max"] = max(c["latency_ms_max"], lat)
+        for p, out in zip(take, outs):
+            p.future.set_result(out)
+        return qn
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """Counters + derived throughput/latency figures (a shallow copy)."""
+        with self._lock:
+            c = dict(self._counters)
+            c["queued"] = len(self._pending)
+        n = max(c["answered"], 1)
+        b = max(c["batches"], 1)
+        c["latency_ms_avg"] = c["latency_ms_sum"] / n
+        c["batch_size_avg"] = c["batch_size_sum"] / b
+        c["qps"] = c["answered"] / max(time.monotonic() - self._t0, 1e-9)
+        return c
+
+
+def _split_search(res: SearchResult, qn: int) -> list:
+    """(Q,)-vector SearchResult -> per-request scalar SearchResults."""
+    d = np.asarray(res.dist_sq)
+    p = np.asarray(res.position)
+    reads = np.asarray(res.raw_reads)
+    upd = np.asarray(res.bsf_updates)
+    rounds = np.asarray(res.rounds)
+    return [
+        SearchResult(d[i], p[i], reads[i], upd[i], rounds)
+        for i in range(qn)
+    ]

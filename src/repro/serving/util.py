@@ -1,0 +1,14 @@
+"""Small shared serving helpers (no model/engine imports)."""
+
+from __future__ import annotations
+
+
+def pow2_bucket(n: int, lo: int = 1) -> int:
+    """Smallest power of two >= max(n, lo).
+
+    Both host-side batchers quantize dynamic sizes to pow2 buckets —
+    prompt lengths before prefill (``SlotBatcher``) and batch shapes
+    before an engine flush (``SearchRequestBatcher``) — so jit traces one
+    step per bucket instead of one per distinct size.
+    """
+    return 1 << (max(n, lo) - 1).bit_length()

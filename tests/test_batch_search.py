@@ -1,5 +1,6 @@
-"""Batched search engine: parity with the single-query path, the tiny-index
-approx-search regression, and the mesh-sharded batched step."""
+"""Batched search engine: parity with the single-query path, the k-safe
+partial-selection k-NN path, the tiny-index regressions, and the
+mesh-sharded batched step."""
 
 import json
 import os
@@ -15,6 +16,8 @@ from repro.core import (
     build_index, exact_knn, exact_knn_batch, exact_search,
     exact_search_batch, exact_search_single, random_walk,
 )
+from repro.core import isax
+from repro.core.search import select_len
 
 RNG = np.random.default_rng(17)
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -74,6 +77,104 @@ def test_topk_select_equals_full_sort(small_index):
         np.asarray(topk.position), np.asarray(full.position))
     np.testing.assert_allclose(
         np.asarray(topk.dist_sq), np.asarray(full.dist_sq), rtol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_knn_topk_matches_full_sort(small_index, impl):
+    """select="topk" k-NN must be bit-exact with the full-sort path."""
+    qs = _queries(4)
+    for k in (1, 4, 8):
+        td, tp = exact_knn_batch(
+            small_index, qs, k=k, round_size=512, impl=impl, select="topk")
+        sd, sp = exact_knn_batch(
+            small_index, qs, k=k, round_size=512, impl=impl, select="sort")
+        assert np.array_equal(np.asarray(tp), np.asarray(sp)), (impl, k)
+        np.testing.assert_array_equal(np.asarray(td), np.asarray(sd))
+        for i in range(qs.shape[0]):  # k-safety: no duplicated entries
+            assert len(set(np.asarray(tp[i]).tolist())) == k, (impl, k, i)
+
+
+def test_knn_unsorted_scan_matches_topk(small_index):
+    """The ADS+-style serial scan (sort=False) returns the same k-NN."""
+    qs = _queries(3)
+    td, tp = exact_knn_batch(small_index, qs, k=8, round_size=512)
+    ud, up = exact_knn_batch(small_index, qs, k=8, round_size=512,
+                             sort=False)
+    assert np.array_equal(np.asarray(tp), np.asarray(up))
+    np.testing.assert_array_equal(np.asarray(td), np.asarray(ud))
+
+
+def _zero_segment_means(x, segments):
+    shaped = x.reshape(x.shape[0], segments, -1)
+    return (shaped - shaped.mean(axis=2, keepdims=True)).reshape(x.shape)
+
+
+def test_knn_topk_fallback_adversarial():
+    """Truncated selection insufficient -> the cond-gated fallback restores
+    exactness without duplicating re-distanced candidates.
+
+    Every series gets identical (all-zero) segment means, so every lower
+    bound within a query ties and the selected top-K list is an arbitrary
+    128-candidate prefix; the true neighbors are planted far beyond it.
+    The fallback then re-scans the full SAX order — including everything
+    the main loop already merged — so parity with select="sort" holds only
+    if the dedup masking is airtight.
+    """
+    n, length, seg, rs = 2048, 64, 8, 32
+    rng = np.random.default_rng(123)
+    raw = _zero_segment_means(
+        rng.standard_normal((n, length)).astype(np.float32), seg)
+    raw /= raw.std(axis=1, keepdims=True)  # store znormed (paper layout)
+    q = _zero_segment_means(
+        rng.standard_normal((1, length)).astype(np.float32), seg)[0]
+    qz = np.asarray(isax.znorm(jnp.asarray(q)), np.float32)
+    for j in range(8):  # plant the true 8-NN beyond any selected prefix
+        delta = _zero_segment_means(
+            rng.standard_normal((1, length)).astype(np.float32), seg)[0]
+        near = qz + delta * 0.01 * (j + 1)
+        raw[1500 + j] = near / near.std()
+    idx = build_index(jnp.asarray(raw), segments=seg)
+    qs = jnp.asarray(np.stack([q, rng.standard_normal(length)]), jnp.float32)
+
+    sel = select_len(n, rs)
+    assert sel < n  # the selection really is truncated
+    main_rounds = -(-sel // rs)
+    for k in (1, 4, 8):
+        td, tp, reads, _, rounds = exact_knn_batch(
+            idx, qs, k=k, round_size=rs, select="topk", stats=True)
+        sd, sp = exact_knn_batch(idx, qs, k=k, round_size=rs, select="sort")
+        assert np.array_equal(np.asarray(tp), np.asarray(sp)), k
+        np.testing.assert_array_equal(np.asarray(td), np.asarray(sd))
+        # the lax.cond fallback fired: extra rounds ran and raw reads grew
+        # past everything the truncated main loop could have fetched
+        assert int(rounds) > main_rounds, k
+        assert np.all(np.asarray(reads) > 256 + sel), k
+        # and it found the planted neighbors outside the selected prefix
+        want = np.argsort(
+            np.asarray(isax.euclid_sq(isax.znorm(qs[0]), idx.raw)),
+            kind="stable")[:k]
+        assert np.array_equal(np.asarray(tp[0]), want), k
+
+
+def test_exact_knn_k_exceeds_index():
+    """k > num_series: sentinel (-1, INF) slots, never duplicated entries."""
+    rng = np.random.default_rng(21)
+    raw = jnp.asarray(
+        rng.standard_normal((5, 64)).cumsum(axis=1), jnp.float32)
+    idx = build_index(raw, segments=8)
+    qs = jnp.asarray(
+        rng.standard_normal((3, 64)).cumsum(axis=1), jnp.float32)
+    d, p = exact_knn_batch(idx, qs, k=8, round_size=16)
+    d, p = np.asarray(d), np.asarray(p)
+    assert np.all(p[:, 5:] == -1)
+    assert np.all(np.isinf(d[:, 5:]))
+    for i in range(3):  # the real slots hold each series exactly once
+        assert sorted(p[i, :5].tolist()) == [0, 1, 2, 3, 4]
+        assert np.all(np.isfinite(d[i, :5]))
+    d1, p1 = exact_knn(idx, qs[0], k=8, round_size=16)
+    assert np.array_equal(np.asarray(p1), p[0])
+    with pytest.raises(ValueError):
+        exact_knn_batch(idx, qs, k=0)
 
 
 def test_approx_search_tiny_index_regression():
@@ -142,6 +243,38 @@ for rs in (128, 32):
             isax.euclid_sq(isax.znorm(jnp.asarray(qs[i])), index.raw))
         ok &= abs(float(res.dist_sq[i]) - d.min()) < 1e-3
         ok &= int(res.position[i]) == int(d.argmin())
+# Padded-index k-NN: 13 series over 8 shards pads to 16 rows (shard 7 is
+# ALL filler); filler rows must never leak into the result lists and
+# k > num_series overflow slots must be the (INF, -1) sentinel.
+tiny_raw = jnp.asarray(
+    rng.standard_normal((13, 128)).cumsum(axis=1), np.float32)
+tiny = idx_mod.build_index(tiny_raw)
+dtiny = dist.dist_index_from(tiny, 8)
+step_t = jax.jit(dist.make_distributed_batch_search(
+    mesh, ("shard",), series_length=128, round_size=2, leaf_cap=2, k=14))
+res_t = step_t(dtiny, jnp.asarray(qs[:2]))
+for i in range(2):
+    p = np.asarray(res_t.position[i])
+    d = np.asarray(res_t.dist_sq[i])
+    ok &= sorted(p[:13].tolist()) == list(range(13))
+    ok &= bool(np.all(p[13:] == -1) and np.all(np.isinf(d[13:])))
+    ref = np.sort(np.asarray(
+        isax.euclid_sq(isax.znorm(jnp.asarray(qs[i])), tiny.raw)))
+    ok &= np.allclose(d[:13], ref, rtol=1e-3)
+# k-NN (k=4) at rs=32 exercises the per-shard top-list protocol
+# (all_gather merge + dedup-masked fallback) end to end.
+step4 = jax.jit(dist.make_distributed_batch_search(
+    mesh, ("shard",), series_length=128, round_size=32, leaf_cap=4, k=4))
+res4 = step4(dindex, jnp.asarray(qs))
+for i in range(len(qs)):
+    d = np.asarray(
+        isax.euclid_sq(isax.znorm(jnp.asarray(qs[i])), index.raw))
+    want = np.argsort(d, kind="stable")[:4]
+    got = np.asarray(res4.position[i])
+    ok &= np.array_equal(got, want)
+    ok &= np.allclose(np.asarray(res4.dist_sq[i]), np.sort(d)[:4],
+                      rtol=1e-3)
+    ok &= len(set(got.tolist())) == 4
 print("BATCH_DIST", ok)
 """
     env = dict(os.environ)

@@ -1,0 +1,109 @@
+"""SearchRequestBatcher: mixed arrival patterns, exactly-once answering,
+parity with direct batch-engine calls.
+
+The engine answers a query identically no matter which batch it rides in
+(pad rows and finished queries are masked out of every round), so the
+batcher's answers must be bit-identical to one direct ``exact_*_batch``
+call over the same queries — regardless of how the stream got chopped
+into flushes.
+"""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_index, exact_knn_batch, exact_search_batch
+from repro.core.search import SearchConfig
+from repro.serving.search_batcher import SearchRequestBatcher
+from repro.serving.util import pow2_bucket
+
+RNG = np.random.default_rng(31)
+
+
+@pytest.fixture(scope="module")
+def tiny_index():
+    raw = jnp.asarray(
+        RNG.standard_normal((2048, 128)).cumsum(axis=1), jnp.float32)
+    return build_index(raw)
+
+
+def _stream(n):
+    return RNG.standard_normal((n, 128)).cumsum(axis=1).astype(np.float32)
+
+
+def test_mixed_arrival_patterns_knn(tiny_index):
+    """Burst, trickle, and drain arrivals: every request answered exactly
+    once and identically to one direct exact_knn_batch call."""
+    qs = _stream(17)
+    b = SearchRequestBatcher(tiny_index, k=4, max_batch=8, max_wait_ms=5.0,
+                             round_size=256)
+    futs = []
+    futs += [b.submit(q) for q in qs[:11]]  # burst: flushes a full 8 inline
+    assert b.stats()["flush_full"] == 1
+    futs += [b.submit(q) for q in qs[11:13]]  # trickle: 5 now pending
+    assert b.poll() == 0  # not due yet
+    time.sleep(0.006)
+    assert b.poll() == 5  # max_wait_ms exceeded -> timeout flush
+    futs += [b.submit(q) for q in qs[13:]]  # tail: answered by drain
+    assert b.drain() == 4
+    assert b.drain() == 0  # nothing queued, nothing re-answered
+
+    want_d, want_p = exact_knn_batch(
+        tiny_index, jnp.asarray(qs), k=4, round_size=256)
+    for i, f in enumerate(futs):
+        d, p = f.result(timeout=1)
+        assert np.array_equal(p, np.asarray(want_p[i])), i
+        np.testing.assert_array_equal(d, np.asarray(want_d[i]))
+
+    s = b.stats()
+    assert s["submitted"] == s["answered"] == 17
+    assert s["queued"] == 0
+    assert s["flush_full"] == s["flush_timeout"] == 1
+    assert s["flush_drain"] == 1
+    assert s["batches"] == 3
+    # pow2 padding: 8 + 8(5 padded) + 4 -> 3 pads of the trickle flush
+    assert s["padded_queries"] == 3 + 0
+    assert s["latency_ms_max"] >= s["latency_ms_avg"] > 0
+
+
+def test_search_mode_matches_direct(tiny_index):
+    """1-NN mode returns per-request SearchResult scalars equal to one
+    direct exact_search_batch call."""
+    qs = _stream(5)
+    cfg = SearchConfig(round_size=256)
+    b = SearchRequestBatcher(tiny_index, max_batch=4, cfg=cfg)
+    futs = [b.submit(q) for q in qs]  # one full flush of 4 + 1 drained
+    b.drain()
+    want = exact_search_batch(tiny_index, jnp.asarray(qs), cfg)
+    for i, f in enumerate(futs):
+        r = f.result(timeout=1)
+        assert int(r.position) == int(want.position[i])
+        assert float(r.dist_sq) == float(want.dist_sq[i])
+        assert int(r.raw_reads) == int(want.raw_reads[i])
+
+
+def test_background_thread_enforces_timeout(tiny_index):
+    b = SearchRequestBatcher(tiny_index, k=2, max_batch=64, max_wait_ms=5.0,
+                             round_size=256)
+    b.start(tick_ms=2.0)
+    try:
+        f = b.submit(_stream(1)[0])
+        d, p = f.result(timeout=30)  # answered without ever filling a batch
+        assert d.shape == (2,)
+    finally:
+        b.stop()
+    assert b.stats()["answered"] == 1
+
+
+def test_validation(tiny_index):
+    with pytest.raises(ValueError):
+        SearchRequestBatcher(tiny_index, k=0)
+    with pytest.raises(ValueError):
+        SearchRequestBatcher(tiny_index, max_batch=0)
+    b = SearchRequestBatcher(tiny_index, k=1)
+    with pytest.raises(ValueError):
+        b.submit(_stream(2))  # a (2, n) matrix is not a single query
+    assert pow2_bucket(1) == 1 and pow2_bucket(5) == 8
+    assert pow2_bucket(3, lo=4) == 4

@@ -65,6 +65,39 @@ def test_batcher_matches_individual_generation():
             (i, done[i], singles[i])
 
 
+def test_batcher_run_drains_finished():
+    """run() reports each finished request exactly once (no re-reporting
+    of the ever-growing done map), and admits new work afterwards."""
+    cfg, model, params = _model()
+    b = SlotBatcher(model, params, batch_size=2, max_len=32)
+    p0 = np.arange(4, dtype=np.int32) % cfg.vocab_size
+    b.submit(Request(rid=0, prompt=p0, max_new=3))
+    done = b.run(20)
+    assert sorted(done.keys()) == [0]
+    assert b.run(5) == {}  # finished entries were drained, not archived
+    b.submit(Request(rid=1, prompt=(p0 + 1) % cfg.vocab_size, max_new=3))
+    done2 = b.run(20)
+    assert sorted(done2.keys()) == [1]  # only the new request
+
+
+def test_batcher_prompt_bucket_padding_exact():
+    """Prompts whose lengths share a pow2 prefill bucket (5, 7 -> 8) still
+    decode exactly like unbatched greedy generation: the pad tokens must
+    never leak into the last-prompt-position logits or the attended cache."""
+    cfg, model, params = _model()
+    prompts = [(np.arange(7, dtype=np.int32) * 5) % cfg.vocab_size,
+               (np.arange(5, dtype=np.int32) + 3) % cfg.vocab_size]
+    singles = [np.asarray(greedy_generate(
+        model, params, jnp.asarray(p[None]), max_new=4)[0])
+        for p in prompts]
+    b = SlotBatcher(model, params, batch_size=2, max_len=32)
+    for i, p in enumerate(prompts):
+        b.submit(Request(rid=i, prompt=p, max_new=4))
+    done = b.run(30)
+    for i in range(2):
+        assert np.array_equal(done[i], singles[i]), i
+
+
 def test_batcher_rwkv_state_isolation():
     cfg, model, params = _model("rwkv6-1.6b")
     p0 = np.arange(5, dtype=np.int32) % cfg.vocab_size
