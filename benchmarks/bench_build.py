@@ -11,7 +11,7 @@
 
 from __future__ import annotations
 
-from benchmarks.common import Row, dataset
+from benchmarks.common import dataset
 from repro.core import PipelineBuilder, SeriesSource
 
 

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from benchmarks.common import Row, dataset, queries, timeit
+from benchmarks.common import dataset, queries, timeit
 from repro.core import isax
 from repro.kernels import ops
 

@@ -15,10 +15,9 @@ the ordering and the scaling trend reproduce.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from benchmarks.common import Row, dataset, queries, timeit
+from benchmarks.common import dataset, queries, timeit
 from repro.core import (SearchConfig, brute_force, build_index, exact_search,
                         nb_exact_search)
 

@@ -1,18 +1,25 @@
-"""Streaming serving harness: the SearchRequestBatcher vs its bounds.
+"""Streaming serving harness: batcher and sharded router vs their bounds.
 
-Replays a stream of single k-NN queries through three answer paths:
+Replays a stream of single k-NN queries through the answer paths:
 
-  seq      — one ``exact_knn_batch`` call per query as it arrives (the
-             no-batching lower bound: every arrival pays a full engine
-             launch at Q=1),
-  batcher  — ``SearchRequestBatcher`` with burst arrivals (the serving
-             path: pow2-padded adaptive batches, per-request futures),
-  direct   — one fixed-shape ``exact_knn_batch`` call over the whole
-             stream at once (the upper bound a batcher can approach when
-             arrivals are perfectly bursty).
+  seq        — one ``exact_knn_batch`` call per query as it arrives (the
+               no-batching lower bound: every arrival pays a full engine
+               launch at Q=1),
+  batcher    — ``SearchRequestBatcher`` with burst arrivals (the serving
+               path: pow2-padded adaptive batches, per-request futures),
+  router     — ``ShardedSearchRouter`` over S file-order shards (per-shard
+               batchers + engines, global top-list merge),
+  admission  — the batcher under a saturating burst with a bounded queue
+               (``policy="shed-oldest"``): how many requests the admission
+               controller sheds, and at what answered-qps, instead of
+               letting the queue (and tail latency) grow without bound,
+  direct     — one fixed-shape ``exact_knn_batch`` call over the whole
+               stream at once (the upper bound a batcher can approach when
+               arrivals are perfectly bursty).
 
-Reports queries/sec for each, the batcher's padding overhead, and checks
-that every streamed answer is identical to the direct batch call.
+Reports queries/sec for each, the batcher's padding overhead, queue-depth/
+shed counters, and checks every streamed answer (batcher AND router) is
+identical to the direct batch call.
 
     PYTHONPATH=src:. python benchmarks/bench_search_batcher.py [--tiny]
 """
@@ -26,10 +33,12 @@ import numpy as np
 
 from benchmarks.common import dataset, timeit
 from repro.core import build_index, exact_knn_batch
-from repro.serving.search_batcher import SearchRequestBatcher
+from repro.serving.router import ShardedSearchRouter
+from repro.serving.search_batcher import QueueFullError, SearchRequestBatcher
 
 ROUND_SIZE = 512
 K = 8
+SHARDS = 2
 
 
 def run(tiny: bool = False, impl: str = "ref"):
@@ -59,17 +68,64 @@ def run(tiny: bool = False, impl: str = "ref"):
         b.drain()
         return [f.result() for f in futs], b.stats()
 
+    router = ShardedSearchRouter(index, SHARDS, k=K, max_batch=max_batch,
+                                 max_wait_ms=1000.0, round_size=ROUND_SIZE,
+                                 impl=impl)
+
+    def router_fn():
+        futs = [router.submit(q) for q in qs]
+        router.drain()
+        return [f.result() for f in futs], router.stats()
+
+    def admission_fn():
+        # Saturating burst into a queue bounded at a quarter of the stream:
+        # shed-oldest keeps the newest arrivals, fails the stale ones.
+        b = SearchRequestBatcher(
+            index, k=K, max_batch=max_batch, max_wait_ms=1000.0,
+            round_size=ROUND_SIZE, impl=impl,
+            max_pending=max(max_batch, stream // 4), policy="shed-oldest",
+            inline_flush=False)
+        futs = [b.submit(q) for q in qs]
+        b.drain()
+        outs = []
+        for i, f in enumerate(futs):
+            e = f.exception()
+            if e is None:
+                outs.append((i, f.result()))
+            elif not isinstance(e, QueueFullError):
+                raise e
+        return outs, b.stats()
+
     batcher_us = timeit(lambda: batcher_fn()[0], repeats=3, warmup=1)
+    router_us = timeit(lambda: router_fn()[0], repeats=3, warmup=1)
     direct_us = timeit(direct_fn, repeats=3, warmup=1)
     seq_us = timeit(seq_fn, repeats=1, warmup=1)
+    admission_us = timeit(lambda: admission_fn()[0], repeats=3, warmup=1)
+
+    want_d, want_p = direct_fn()
+    want_d, want_p = np.asarray(want_d), np.asarray(want_p)
 
     res, stats = batcher_fn()
-    want_d, want_p = direct_fn()
     parity = all(
-        np.array_equal(res[i][1], np.asarray(want_p[i]))
-        and np.array_equal(res[i][0], np.asarray(want_d[i]))
+        np.array_equal(res[i][1], want_p[i])
+        and np.array_equal(res[i][0], want_d[i])
         for i in range(stream)
     )
+    rres, rstats = router_fn()
+    router_parity = all(
+        np.array_equal(rres[i][1], want_p[i])
+        and np.array_equal(rres[i][0], want_d[i])
+        for i in range(stream)
+    )
+    outs, astats = admission_fn()
+    # Shed requests fail; the survivors must still be exact.
+    adm_parity = all(
+        np.array_equal(p, want_p[i]) and np.array_equal(d, want_d[i])
+        for i, (d, p) in outs
+    ) and astats["shed"] == stream - len(outs) > 0
+    shed_rate = astats["shed"] / stream
+
+    all_parity = parity and router_parity and adm_parity
     rows = [
         (f"serve_knn_{n}_seq", seq_us / stream,
          f"qps={stream / (seq_us * 1e-6):.1f}"),
@@ -77,10 +133,20 @@ def run(tiny: bool = False, impl: str = "ref"):
          f"qps={stream / (batcher_us * 1e-6):.1f} "
          f"seq_x={seq_us / batcher_us:.2f} "
          f"pad={stats['padded_queries']} parity={parity}"),
+        (f"serve_knn_{n}_router{SHARDS}", router_us / stream,
+         f"qps={stream / (router_us * 1e-6):.1f} "
+         f"seq_x={seq_us / router_us:.2f} "
+         f"depth_peak={rstats['queue_depth_peak']} "
+         f"parity={router_parity}"),
+        (f"serve_knn_{n}_admission", admission_us / max(len(outs), 1),
+         f"qps={len(outs) / (admission_us * 1e-6):.1f} "
+         f"shed={astats['shed']} shed_rate={shed_rate:.2f} "
+         f"depth_peak={astats['queue_depth_peak']} "
+         f"parity={adm_parity}"),
         (f"serve_knn_{n}_direct", direct_us / stream,
          f"qps={stream / (direct_us * 1e-6):.1f}"),
     ]
-    return rows, parity
+    return rows, all_parity
 
 
 def main():
@@ -93,7 +159,7 @@ def main():
     from benchmarks.common import emit
     emit(rows)
     if not parity:
-        raise SystemExit("batcher answers diverged from the direct batch")
+        raise SystemExit("streamed answers diverged from the direct batch")
 
 
 if __name__ == "__main__":

@@ -1,22 +1,32 @@
 """Benchmark entry point: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (see each module's docstring
-for the paper mapping). ``--quick`` shrinks datasets for CI-speed runs.
+for the paper mapping). ``--quick``/``--tiny`` shrinks datasets for
+CI-speed runs. ``--json PATH`` additionally writes the rows (plus any
+failures) as a JSON report — the artifact CI uploads — and
+``--strict-parity`` turns any ``parity=False`` row or crashed bench into
+a non-zero exit: the benchmark-parity gate.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
+    ap.add_argument("--quick", "--tiny", action="store_true", dest="quick",
                     help="small datasets (fast smoke run)")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (e.g. query,build)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows + failures as a JSON report")
+    ap.add_argument("--strict-parity", action="store_true",
+                    help="exit non-zero if any bench crashes or reports "
+                         "parity=False (the CI gate)")
     args = ap.parse_args()
 
     from benchmarks import (bench_batch_query, bench_build, bench_classifier,
@@ -24,30 +34,67 @@ def main() -> None:
                             bench_query, bench_search_batcher, roofline_table)
     from benchmarks.common import emit
 
+    # Each registry entry returns (rows, parity): parity is the bench's own
+    # exactness verdict (None when the bench has no parity concept) — the
+    # gate checks this bool structurally, not the derived-text columns.
+    def _batch_query(quick):
+        # quick maps onto these benches' own --tiny smoke configs (the
+        # sizes the CI gate is meant to run), not their mid-size "quick".
+        rows, report = bench_batch_query.run(tiny=quick)
+        return rows, all(e["parity"] for e in report["results"])
+
+    def _knn_topk(quick):
+        rows, report = bench_knn_topk.run(tiny=quick)
+        return rows, all(e["parity"] for e in report["results"])
+
     benches = {
-        "lower_bound": bench_lower_bound.run,  # paper Table 1
-        "build": bench_build.run,  # paper Figs 9-13
-        "query": bench_query.run,  # paper Figs 14-17/19
-        "batch_query": lambda quick: bench_batch_query.run(quick=quick)[0],
-        "knn_topk": lambda quick: bench_knn_topk.run(quick=quick)[0],
-        "search_batcher":
-            lambda quick: bench_search_batcher.run(tiny=quick)[0],
-        "pruning": bench_pruning.run,  # paper Fig 20
-        "classifier": bench_classifier.run,  # paper Fig 18
-        "roofline": roofline_table.run,  # TPU dry-run summary
+        "lower_bound":
+            lambda quick: (bench_lower_bound.run(quick=quick), None),
+        "build": lambda quick: (bench_build.run(quick=quick), None),
+        "query": lambda quick: (bench_query.run(quick=quick), None),
+        "batch_query": _batch_query,
+        "knn_topk": _knn_topk,
+        "search_batcher": lambda quick: bench_search_batcher.run(tiny=quick),
+        "pruning": lambda quick: (bench_pruning.run(quick=quick), None),
+        "classifier": lambda quick: (bench_classifier.run(quick=quick), None),
+        "roofline": lambda quick: (roofline_table.run(quick=quick), None),
     }
     only = set(args.only.split(",")) if args.only else None
+    all_rows = []
+    failures = []
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if only and name not in only:
             continue
         t0 = time.time()
         try:
-            emit(fn(quick=args.quick))
+            rows, parity = fn(args.quick)
+            emit(rows)
+            all_rows += [
+                dict(bench=name, name=r, us_per_call=us, derived=derived)
+                for r, us, derived in rows
+            ]
+            if parity is False:
+                failures.append(f"{name}: non-exact parity")
+            for r, _, derived in rows:  # belt and braces for text-only rows
+                if "parity=False" in derived.replace(" ", ""):
+                    failures.append(f"{name}/{r}: non-exact parity")
         except Exception as e:  # keep the harness going
             print(f"{name}_FAILED,0.0,{type(e).__name__}: {e}",
                   file=sys.stdout)
+            failures.append(f"{name}: {type(e).__name__}: {e}")
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(dict(quick=args.quick, rows=all_rows,
+                           failures=failures), f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    if failures:
+        for msg in failures:
+            print(f"# PARITY-GATE: {msg}", file=sys.stderr)
+        if args.strict_parity:
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -6,14 +6,19 @@ state queries the index for its nearest memorized states, whose next tokens
 form a retrieval distribution that is interpolated with the LM logits
 (Khandelwal et al.'s kNN-LM, with ParIS+ replacing the FAISS store).
 
-Serving is *streamed* end-to-end: every decoding sequence submits its
-retrieval query to a ``SearchRequestBatcher`` as it arrives; the batcher
-coalesces the stream into padded power-of-two batches and answers each one
-with ONE ``exact_knn_batch`` call — one fused (Q, N) lower-bound pass and
-one shared RDC loop riding the k-safe partial-selection (``select="topk"``)
-path — instead of B independent searches or a fixed-B loop. The retrieved
-(distance, next-token) lists are mixed into the LM logits with a single
-segment-max scatter over the whole (B, k) result.
+Serving is *streamed* and *sharded* end-to-end: the datastore is split
+into file-order shards behind a ``ShardedSearchRouter``; every decoding
+sequence submits its retrieval query to the router as it arrives. Each
+shard's batcher coalesces the stream into padded power-of-two batches and
+answers with ONE ``exact_knn_batch`` call over its partition — one fused
+(Q, N_shard) lower-bound pass and one shared RDC loop riding the k-safe
+partial-selection (``select="topk"``) path — and the router merges the
+ownership-disjoint per-shard top lists into the global exact k-NN. The
+pending queues are bounded (``shed-oldest`` admission), so a decode storm
+degrades by shedding stale retrievals instead of growing tail latency
+without bound. The retrieved (distance, next-token) lists are mixed into
+the LM logits with a single segment-max scatter over the whole (B, k)
+result.
 
     PYTHONPATH=src python examples/retrieval_serve.py
 """
@@ -28,8 +33,10 @@ from repro import configs
 from repro.core import build_index
 from repro.models import Model
 from repro.serving.kv_cache import pad_cache_to
-from repro.serving.search_batcher import SearchRequestBatcher
+from repro.serving.router import ShardedSearchRouter
 from repro.training import data as data_mod
+
+NUM_SHARDS = 2
 
 
 def knn_mix_logits(lm_logits, dists, neighbor_tokens, vocab_size, lam):
@@ -73,11 +80,14 @@ def main():
     print(f"indexed {index.num_series} (state, next-token) pairs")
 
     # --- serving pass: B sequences decode together; each step every
-    # sequence submits its own retrieval query to the streaming batcher,
-    # which flushes the whole step's arrivals as one padded engine batch.
+    # sequence submits its own retrieval query to the sharded router,
+    # which fans it to every shard's batcher; each shard flushes the
+    # step's arrivals as one padded engine batch over its partition and
+    # the router merges the per-shard top lists into the exact global k-NN.
     lam, k, bsz, steps = 0.3, 8, 4, 8
-    batcher = SearchRequestBatcher(
-        index, k=k, max_batch=bsz, max_wait_ms=50.0, round_size=512)
+    router = ShardedSearchRouter(
+        index, NUM_SHARDS, k=k, max_batch=bsz, max_wait_ms=50.0,
+        round_size=512, max_pending=4 * bsz, policy="shed-oldest")
     prompts = tokens[:bsz, :8]
     logits, cache = model.prefill(params, {"tokens": prompts})
     cache = pad_cache_to(cache, 32)
@@ -85,8 +95,8 @@ def main():
     last = logits[:, -1]  # (B, vocab)
     for i in range(steps):
         qs = np.asarray(last[:, :256])  # one retrieval query per sequence
-        futs = [batcher.submit(qs[b]) for b in range(bsz)]
-        batcher.drain()  # max_batch == bsz flushes inline; drain is a net
+        futs = [router.submit(qs[b]) for b in range(bsz)]
+        router.drain()  # answers every shard's queued batch at the barrier
         res = [f.result() for f in futs]
         dists = jnp.asarray(np.stack([d for d, _ in res]))
         pos = np.stack([p for _, p in res])
@@ -100,11 +110,14 @@ def main():
             jnp.int32(prompts.shape[1] + i))
     for b in range(bsz):
         print(f"seq {b} prompt + generated:", outs[b])
-    s = batcher.stats()
+    s = router.stats()
     print("(retrieval hits informed every step; ParIS+ answered",
-          f"{s['answered']} streamed exact {k}-NN queries in",
+          f"{s['answered']} streamed shard requests "
+          f"({s['answered'] // s['num_shards']} exact {k}-NN queries x "
+          f"{s['num_shards']} shards) in",
           f"{s['batches']} batches (avg size {s['batch_size_avg']:.1f},",
-          f"avg latency {s['latency_ms_avg']:.1f} ms)",
+          f"avg latency {s['latency_ms_avg']:.1f} ms,",
+          f"queue depth peak {s['queue_depth_peak']}, shed {s['shed']})",
           f"over {index.num_series} vectors)")
 
 

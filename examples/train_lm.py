@@ -6,11 +6,9 @@ resume. (Default size is CPU-scaled; --full-100m selects the 100M config.)
 """
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import Model

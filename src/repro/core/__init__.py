@@ -1,6 +1,12 @@
 """ParIS+ core: iSAX math, the flat CSR index, search, build, distribution."""
 
-from repro.core.index import ParISIndex, build_index, assemble_index
+from repro.core.index import (
+    ParISIndex,
+    ShardedIndex,
+    assemble_index,
+    build_index,
+    build_sharded_index,
+)
 from repro.core.search import (
     SearchConfig,
     SearchResult,
@@ -12,15 +18,18 @@ from repro.core.search import (
     exact_search,
     exact_search_batch,
     exact_search_single,
+    make_batch_engine,
     nb_exact_search,
 )
 from repro.core.build_pipeline import BuildStats, PipelineBuilder
 from repro.core.datagen import SeriesSource, random_walk
 
 __all__ = [
-    "ParISIndex", "build_index", "assemble_index",
+    "ParISIndex", "ShardedIndex", "build_index", "assemble_index",
+    "build_sharded_index",
     "SearchConfig", "SearchResult", "approx_search", "approx_search_batch",
     "brute_force", "exact_knn", "exact_knn_batch", "exact_search",
-    "exact_search_batch", "exact_search_single", "nb_exact_search",
+    "exact_search_batch", "exact_search_single", "make_batch_engine",
+    "nb_exact_search",
     "BuildStats", "PipelineBuilder", "SeriesSource", "random_walk",
 ]

@@ -45,7 +45,7 @@ import numpy as np
 
 from repro.core import isax
 from repro.core.datagen import SeriesSource
-from repro.core.index import ParISIndex, assemble_index
+from repro.core.index import assemble_index
 from repro.kernels import ops
 
 

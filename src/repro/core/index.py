@@ -25,7 +25,6 @@ which also scans the flat SAX array rather than the tree).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -140,6 +139,66 @@ def assemble_index(
         segments=segments,
         cardinality=cardinality,
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedIndex:
+    """S self-contained :class:`ParISIndex` shards over file-order slices.
+
+    Shard ``s`` owns the contiguous file-position range
+    ``[offsets[s], offsets[s+1])`` of the original datastore; its internal
+    positions are shard-local (0-based), so a global answer is
+    ``local_pos + offsets[s]``. Because shards partition the file range,
+    per-shard k-NN result lists are ownership-disjoint by construction —
+    the same duplicate-free-merge invariant ``core.distributed`` relies on.
+    """
+
+    shards: tuple  # (S,) ParISIndex
+    offsets: tuple  # (S + 1,) file-order partition bounds
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def num_series(self) -> int:
+        return self.offsets[-1]
+
+
+def build_sharded_index(index: ParISIndex, num_shards: int) -> ShardedIndex:
+    """Split an assembled index into S self-contained file-order shards.
+
+    The datastore (``raw``, file order) is cut into S contiguous slices
+    (sizes differ by at most one when S does not divide N). Each shard's
+    SAX rows are *selected* from the full index's sorted arrays rather than
+    rebuilt: the leaf-order sort is stable, so a subsequence of the sorted
+    full index is exactly what a fresh ``build_index`` over the slice would
+    produce — shards are byte-identical to independently built indices, and
+    per-series summarizations/distances are bitwise unchanged.
+    """
+    n = index.num_series
+    if not 1 <= num_shards <= n:
+        raise ValueError(f"num_shards={num_shards} outside [1, {n}]")
+    base, rem = divmod(n, num_shards)
+    bounds = [0]
+    for s in range(num_shards):
+        bounds.append(bounds[-1] + base + (1 if s < rem else 0))
+    sax = np.asarray(index.sax)
+    pos = np.asarray(index.pos)
+    shards = []
+    for s in range(num_shards):
+        lo, hi = bounds[s], bounds[s + 1]
+        mask = (pos >= lo) & (pos < hi)
+        shards.append(
+            assemble_index(
+                sax[mask],
+                pos[mask] - lo,
+                index.raw[lo:hi],
+                index.segments,
+                index.cardinality,
+            )
+        )
+    return ShardedIndex(tuple(shards), tuple(bounds))
 
 
 def validate_index(index: ParISIndex) -> dict:

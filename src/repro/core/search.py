@@ -474,6 +474,85 @@ def _batch_engine(
     return fn(queries)
 
 
+def pow2_bucket(n: int, lo: int = 1) -> int:
+    """Smallest power of two >= max(n, lo).
+
+    Dynamic sizes are quantized to pow2 buckets before they reach a jitted
+    engine — batch shapes here and in the serving batchers, prompt lengths
+    in ``serving.batcher.SlotBatcher`` — so jit traces one step per bucket
+    instead of one per distinct size.
+    """
+    return 1 << (max(n, lo) - 1).bit_length()
+
+
+def make_batch_engine(
+    index: ParISIndex,
+    *,
+    k: Optional[int] = None,
+    round_size: int = 4096,
+    leaf_cap: int = 256,
+    sort: bool = True,
+    select: str = "topk",
+    impl: str = "auto",
+    min_bucket: int = 1,
+):
+    """Build a reusable, shape-stable batch engine over one index.
+
+    The factory behind every streaming caller (``SearchRequestBatcher``,
+    ``ShardedSearchRouter``): it resolves the per-index jitted closure once
+    (through ``_engine_for``'s cache, shared with direct ``exact_*_batch``
+    calls) and wraps it so any (Q, n) call is padded up to the power-of-two
+    bucket shape (pad rows repeat row 0 and are discarded) — one trace per
+    bucket instead of one per arrival count, and a router can stamp out S
+    per-shard engines without retracing per query shape.
+
+    ``k=None``: exact 1-NN, returns a ``SearchResult`` of (Q,) arrays.
+    ``k >= 1``: exact k-NN, returns ((Q, k) dists ascending, (Q, k) pos)
+    with the same clamp/sentinel protocol as :func:`exact_knn_batch`.
+
+    The returned callable exposes ``engine.bucket(qn)`` — the padded batch
+    shape a Q-query call compiles at (callers use it for pad accounting).
+    """
+    if k is not None and k < 1:
+        raise ValueError(f"k must be None (1-NN mode) or >= 1, got {k}")
+    k_eff = 1 if k is None else min(k, index.num_series)
+    fn = _engine_for(
+        index, (k_eff, round_size, leaf_cap, sort, select, impl, "approx")
+    )
+
+    def bucket(qn: int) -> int:
+        return pow2_bucket(qn, min_bucket)
+
+    def engine(queries):
+        qs = jnp.asarray(queries, jnp.float32)
+        if qs.ndim != 2:
+            raise ValueError(f"engine takes (Q, n) queries, got {qs.shape}")
+        qn = qs.shape[0]
+        b = bucket(qn)
+        if b > qn:  # pad rows repeat a real query; sliced off below
+            qs = jnp.concatenate(
+                [qs, jnp.broadcast_to(qs[:1], (b - qn, qs.shape[1]))]
+            )
+        top_d, top_p, reads, updates, rounds = fn(qs)
+        if k is None:
+            return SearchResult(
+                top_d[:qn, 0], top_p[:qn, 0], reads[:qn], updates[:qn],
+                rounds,
+            )
+        top_d, top_p = top_d[:qn], top_p[:qn]
+        if k_eff < k:  # tiny index: sentinel-pad the missing neighbors
+            top_d = jnp.concatenate(
+                [top_d, jnp.full((qn, k - k_eff), INF)], axis=1)
+            top_p = jnp.concatenate(
+                [top_p, jnp.full((qn, k - k_eff), NO_POS)], axis=1)
+        return top_d, top_p
+
+    engine.bucket = bucket
+    engine.index = index
+    engine.k = k
+    return engine
+
+
 def exact_search_batch(
     index: ParISIndex, queries: jax.Array, cfg: SearchConfig = SearchConfig()
 ) -> SearchResult:

@@ -14,8 +14,6 @@ results, so kernels can assume exact tiling.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

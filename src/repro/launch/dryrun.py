@@ -31,7 +31,6 @@ import traceback
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, outdir: str,
              overrides=None, tag: str = "", build_kwargs=None) -> dict:
-    import jax
     from repro import configs
     from repro.launch import roofline, specs
     from repro.launch.mesh import make_production_mesh

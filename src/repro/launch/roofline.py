@@ -29,7 +29,6 @@ per chip over its link bandwidth.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 

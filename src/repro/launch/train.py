@@ -12,7 +12,6 @@ the same mesh; on this container use ``--smoke`` (reduced config, 1 device).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 
@@ -35,7 +34,6 @@ def main():
     args = ap.parse_args()
 
     import jax
-    import jax.numpy as jnp
     from repro import configs
     from repro.models import Model
     from repro.training import data as data_mod

@@ -11,7 +11,6 @@ vision (qwen2-vl): inputs are tokens plus (B, vision_tokens, frontend_dim)
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.models import layers

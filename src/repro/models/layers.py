@@ -198,7 +198,7 @@ def _sdpa_flash(q, k, v, q_pos, k_pos, causal, window, q_block, k_block):
     def per_qblock(qb, qpb):
         # qb (B, q_block, K, G, hd)
         def step(carry, xs):
-            m, l, acc = carry
+            m, lsum, acc = carry
             kb, vb, kpb = xs
             s = jnp.einsum("bqkgh,bskh->bkgqs", qb, kb).astype(jnp.float32)
             s = s * scale + _mask_bias(qpb, kpb, causal, window)[None, None,
@@ -206,11 +206,11 @@ def _sdpa_flash(q, k, v, q_pos, k_pos, causal, window, q_block, k_block):
             m_new = jnp.maximum(m, s.max(-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l = l * corr + p.sum(-1)
+            lsum = lsum * corr + p.sum(-1)
             acc = acc * corr[..., None] + jnp.einsum(
                 "bkgqs,bskh->bkgqh", p.astype(vb.dtype), vb).astype(
                     jnp.float32)
-            return (m_new, l, acc), None
+            return (m_new, lsum, acc), None
 
         # m0 = 0 (not -inf): keeps fully-masked kv blocks contributing
         # exp(-1e30) = 0 instead of exp(0) = 1; the online softmax is exact
@@ -218,10 +218,10 @@ def _sdpa_flash(q, k, v, q_pos, k_pos, causal, window, q_block, k_block):
         m0 = jnp.zeros((b, kheads, g, q_block), jnp.float32)
         l0 = jnp.zeros((b, kheads, g, q_block), jnp.float32)
         a0 = jnp.zeros((b, kheads, g, q_block, hd), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(
+        (m, lsum, acc), _ = jax.lax.scan(
             step, (m0, l0, a0),
             (kp.transpose(1, 0, 2, 3, 4), vp.transpose(1, 0, 2, 3, 4), kpos))
-        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out = acc / jnp.maximum(lsum[..., None], 1e-30)
         return out.transpose(0, 3, 1, 2, 4)  # (B, q_block, K, G, hd)
 
     out = jax.lax.map(

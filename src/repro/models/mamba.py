@@ -76,8 +76,8 @@ def _ssm_chunked(x, dt, b_t, c_t, a, h0, chunk):
         la = dtc[..., None] * (-a)[None, None]  # positive a -> -a*dt
         bx = (dtc * xc)[..., None] * bc[:, :, None, :]  # (B,chunk,C,N)
 
-        def assoc(l, r):
-            (la1, u1), (la2, u2) = l, r
+        def assoc(left, right):
+            (la1, u1), (la2, u2) = left, right
             return la1 + la2, u1 * jnp.exp(la2) + u2
 
         la_c, u_c = jax.lax.associative_scan(assoc, (la, bx), axis=1)

@@ -19,7 +19,7 @@ multiplies while-body costs back up by the annotated trip counts.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -1,15 +1,37 @@
 """Serving substrate: KV cache, prefill/decode steps, request batchers.
 
-Two host-side batchers multiplex streams onto fixed compiled shapes:
-``SlotBatcher`` (decode requests -> slots of one decode step) and
-``SearchRequestBatcher`` (single search queries -> padded power-of-two
-batches of the ParIS+ batch engine).
+Retrieval serving architecture (batcher -> router -> per-shard engines)::
+
+    submit(query)                      one Future per request
+        |
+    ShardedSearchRouter                fan-out + global merge (serving/
+        |                              router.py): S file-order shards,
+        |  per-shard fan-out           ownership-disjoint (k,) top lists,
+        v                              concat + k-smallest merge with
+    SearchRequestBatcher  x S          NO_POS sentinels and file-offset
+        |                              translation
+        |  bounded pending queue       admission control: block / reject /
+        |  (max_pending + policy)      shed-oldest, QueueFullError
+        v                              backpressure, depth/shed counters
+    make_batch_engine(shard)  x S      core.search engine factory: per-
+        |                              index jitted closures, pow2 query
+        v                              buckets (no per-shape retracing)
+    exact_*_batch RDC loop             one fused (Q, N) lower-bound pass +
+                                       one shared while_loop per shard
+
+A single-index deployment is the same stack minus the router layer: one
+``SearchRequestBatcher`` straight over one engine. The decode-side
+analogue is ``SlotBatcher`` (decode requests -> slots of one compiled
+decode step).
 """
 
 from repro.serving.serve_step import (
     greedy_generate, make_decode_step, make_prefill_step)
 from repro.serving.kv_cache import pad_cache_to, shard_cache
-from repro.serving.search_batcher import SearchRequestBatcher
+from repro.serving.router import ShardedSearchRouter
+from repro.serving.search_batcher import (
+    QueueFullError, SearchRequestBatcher)
 
 __all__ = ["greedy_generate", "make_decode_step", "make_prefill_step",
-           "pad_cache_to", "shard_cache", "SearchRequestBatcher"]
+           "pad_cache_to", "shard_cache", "QueueFullError",
+           "SearchRequestBatcher", "ShardedSearchRouter"]

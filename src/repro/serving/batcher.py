@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import queue
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +34,6 @@ class Request:
 
 class SlotBatcher:
     def __init__(self, model, params, batch_size: int, max_len: int):
-        from repro.serving.serve_step import make_decode_step
         self.model = model
         self.params = params
         self.B = batch_size
@@ -97,9 +96,6 @@ class SlotBatcher:
 
     def _copy_slot(self, cache1, slot: int):
         """Copy a 1-batch cache into slot ``slot`` of the big cache."""
-        def merge(big, small, path=()):
-            return big
-
         def walk(big, small):
             if isinstance(big, dict):
                 return {k: walk(big[k], small[k]) for k in big}

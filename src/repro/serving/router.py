@@ -1,0 +1,302 @@
+"""Sharded multi-index search router: one host, S shards, exact answers.
+
+The single-host analogue of ``core.distributed.make_distributed_batch_search``
+— ParIS+'s query answering distributes exact search across workers over a
+partitioned index, and this is that shape served from threads instead of a
+``shard_map`` mesh:
+
+  * the datastore is split into S self-contained file-order shards
+    (:func:`repro.core.index.build_sharded_index`); each shard gets its own
+    jitted batch engine (:func:`repro.core.search.make_batch_engine`, pow2
+    query buckets so no per-shape retracing) and its own admission-
+    controlled :class:`~repro.serving.search_batcher.SearchRequestBatcher`;
+  * ``submit(query)`` fans the query out to every shard's batcher and
+    returns ONE future; when the last shard answers, the per-shard (k,)
+    top lists are merged into the global answer on the answering thread —
+    the same ``NO_POS``/dedup protocol as the distributed kernel: shards
+    partition the file range, so per-shard lists are ownership-disjoint
+    and the merge is a plain concat + k-smallest selection with
+    shard-local positions translated by the shard's file offset (sentinel
+    (INF, ``NO_POS``) slots sink and survive only when the whole datastore
+    holds fewer than k series);
+  * thread-level parallelism comes from the per-shard daemon flushers
+    (``start()``): each shard's batcher runs ``inline_flush=False``, so
+    its own thread performs its engine calls — S shards search
+    concurrently, queries stream in from any number of submitters;
+  * admission control is delegated to the per-shard batchers (all shards
+    see the same stream, so they saturate together): ``reject`` surfaces
+    as a :class:`~repro.serving.search_batcher.QueueFullError` raised from
+    ``submit``, ``shed-oldest`` fails the merged future of the shed
+    request, ``block`` applies backpressure to the submitter. ``stats()``
+    aggregates queue-depth peaks and shed/reject counts across shards.
+
+Exactness: every shard scans (and prunes) only its own partition, and the
+union of partitions is the datastore, so the merged k-NN list is exactly
+the single-index answer — bit-identical distances (per-series math does
+not depend on which shard a series lives in) in the identical ascending
+order, with ties broken toward the lower file position.
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future
+from typing import List, Optional, Union
+
+import numpy as np
+
+from repro.core.index import (
+    ParISIndex, ShardedIndex, build_sharded_index,
+)
+from repro.core.search import NO_POS, SearchConfig, SearchResult
+from repro.serving.search_batcher import SearchRequestBatcher
+
+_NO_POS = int(NO_POS)
+
+
+class ShardedSearchRouter:
+    """Fan queries out to S per-shard batch engines; merge exact answers.
+
+    Parameters
+    ----------
+    index:       a single assembled :class:`ParISIndex` (split into
+                 ``num_shards`` file-order shards here) or a prebuilt
+                 :class:`ShardedIndex`.
+    num_shards:  shard count when ``index`` is a ParISIndex (ignored for a
+                 prebuilt ShardedIndex).
+    k:           None -> exact 1-NN (``SearchResult`` per request with
+                 global file positions); int >= 1 -> exact k-NN
+                 (((k,) dists ascending, (k,) global positions)).
+    max_batch / max_wait_ms / min_bucket: per-shard batching knobs (see
+                 :class:`SearchRequestBatcher`).
+    max_pending / policy / block_timeout_ms: per-shard admission control.
+    cfg / round_size / select / impl / leaf_cap: engine knobs.
+
+    Call ``start()`` to spawn one daemon flusher per shard (the serving
+    mode: S threads search concurrently); without it, ``poll()`` or
+    ``drain()`` advance all shards from the calling thread.
+    """
+
+    def __init__(
+        self,
+        index: Union[ParISIndex, ShardedIndex],
+        num_shards: Optional[int] = None,
+        *,
+        k: Optional[int] = None,
+        max_batch: int = 64,
+        max_wait_ms: float = 2.0,
+        cfg: SearchConfig = SearchConfig(),
+        round_size: int = 4096,
+        select: str = "topk",
+        impl: str = "auto",
+        leaf_cap: int = 256,
+        min_bucket: int = 1,
+        max_pending: Optional[int] = None,
+        policy: str = "block",
+        block_timeout_ms: Optional[float] = None,
+    ):
+        if isinstance(index, ShardedIndex):
+            self.sharded = index
+        else:
+            if num_shards is None:
+                raise ValueError(
+                    "num_shards is required when passing a single index")
+            self.sharded = build_sharded_index(index, num_shards)
+        self.k = k
+        # Each shard batcher builds its own jitted engine from the shared
+        # knobs (make_batch_engine via SearchRequestBatcher.__init__) —
+        # ONE knob-to-engine mapping for single-batcher and sharded
+        # deployments alike.
+        self._batchers: List[SearchRequestBatcher] = [
+            SearchRequestBatcher(
+                shard, k=k, max_batch=max_batch, max_wait_ms=max_wait_ms,
+                cfg=cfg, round_size=round_size, select=select, impl=impl,
+                leaf_cap=leaf_cap, min_bucket=min_bucket,
+                max_pending=max_pending, policy=policy,
+                block_timeout_ms=block_timeout_ms, inline_flush=False,
+            )
+            for shard in self.sharded.shards
+        ]
+        self._started = False
+
+    @property
+    def num_shards(self) -> int:
+        return self.sharded.num_shards
+
+    # ------------------------------------------------------------- request
+    def submit(self, query) -> Future:
+        """Fan one (n,) query out to all shards; one Future for the merge.
+
+        The merge runs on whichever shard thread answers last. Under
+        ``reject``, saturation raises
+        :class:`~repro.serving.search_batcher.QueueFullError` here; under
+        ``shed-oldest``, a shed request's merged future carries it.
+        """
+        q = np.asarray(query, np.float32)
+        if q.ndim != 1:
+            raise ValueError(f"submit takes one (n,) query, got {q.shape}")
+        out: Future = Future()
+        shard_futs = []
+        try:
+            for b in self._batchers:
+                shard_futs.append(b.submit(q))
+        except BaseException as e:
+            # A shard turned the request away mid-fan-out: the request
+            # fails as a whole. Shards that already accepted answer into
+            # a dead callback — harmless (exact search is idempotent).
+            out.set_exception(e)
+            raise
+        parts: List[Optional[tuple]] = [None] * len(shard_futs)
+        remaining = [len(shard_futs)]
+        lock = threading.Lock()
+
+        def make_cb(s):
+            def cb(f):
+                try:
+                    parts[s] = ("ok", f.result())
+                except BaseException as e:  # noqa: BLE001 — per-request
+                    parts[s] = ("err", e)
+                with lock:
+                    remaining[0] -= 1
+                    last = remaining[0] == 0
+                if last:
+                    self._finish(out, parts)
+            return cb
+
+        for s, f in enumerate(shard_futs):
+            f.add_done_callback(make_cb(s))
+        return out
+
+    def _finish(self, out: Future, parts: list) -> None:
+        err = next((e for tag, e in parts if tag == "err"), None)
+        if err is not None:
+            out.set_exception(err)
+            return
+        try:
+            results = [r for _, r in parts]
+            if self.k is None:
+                out.set_result(self._merge_1nn(results))
+            else:
+                out.set_result(self._merge_knn(results))
+        except BaseException as e:  # noqa: BLE001 — surface merge bugs
+            out.set_exception(e)
+
+    def _global_pos(self, pos, s):
+        """Shard-local positions -> file positions (NO_POS passes through)."""
+        pos = np.asarray(pos)
+        off = self.sharded.offsets[s]
+        return np.where(pos >= 0, pos + off, _NO_POS).astype(pos.dtype)
+
+    def _merge_knn(self, results: list) -> tuple:
+        # Ownership-disjoint (k,) lists -> global k smallest. Stable sort
+        # on distance: ties (and only ties) resolve toward the earlier
+        # shard, i.e. the lower file range; sentinel INF slots sink.
+        d = np.concatenate([np.asarray(r[0]) for r in results])
+        p = np.concatenate(
+            [self._global_pos(r[1], s) for s, r in enumerate(results)])
+        order = np.argsort(d, kind="stable")[: self.k]
+        return d[order], p[order]
+
+    def _merge_1nn(self, results: list) -> SearchResult:
+        dists = [float(r.dist_sq) for r in results]
+        best = min(
+            range(len(results)),
+            key=lambda s: (dists[s], int(self._global_pos(
+                results[s].position, s))),
+        )
+        r = results[best]
+        return SearchResult(
+            np.asarray(r.dist_sq),
+            self._global_pos(r.position, best),
+            np.sum([np.asarray(x.raw_reads) for x in results]),
+            np.sum([np.asarray(x.bsf_updates) for x in results]),
+            np.max([np.asarray(x.rounds) for x in results]),
+        )
+
+    # ----------------------------------------------------------- batch API
+    def search_batch(self, queries):
+        """Synchronous convenience: (Q, n) -> merged results via the stream.
+
+        Submits every row, drains, and stacks: ``k=None`` gives a
+        ``SearchResult`` of (Q,) arrays; ``k >= 1`` gives ((Q, k) dists,
+        (Q, k) global positions). Admission control still applies — with a
+        bound tighter than Q, ``shed``/``reject`` can fail rows. Without
+        the daemon flushers, full cohorts are flushed between submits
+        (``poll``) so a ``block`` bound tighter than Q makes progress
+        instead of deadlocking the submitting thread.
+        """
+        qs = np.asarray(queries, np.float32)
+        futs = []
+        for q in qs:
+            if not self._started:
+                # No daemon to free queue space: flush whatever is due so
+                # a blocking submit always finds room (max_pending >=
+                # max_batch is enforced, so a full queue has a full batch).
+                self.poll()
+            futs.append(self.submit(q))
+        self.drain()
+        res = [f.result() for f in futs]
+        if self.k is None:
+            return SearchResult(
+                np.stack([np.asarray(r.dist_sq) for r in res]),
+                np.stack([np.asarray(r.position) for r in res]),
+                np.stack([np.asarray(r.raw_reads) for r in res]),
+                np.stack([np.asarray(r.bsf_updates) for r in res]),
+                np.max([np.asarray(r.rounds) for r in res]),
+            )
+        return (
+            np.stack([r[0] for r in res]),
+            np.stack([r[1] for r in res]),
+        )
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self, tick_ms: Optional[float] = None) -> None:
+        """Spawn one daemon flusher per shard (concurrent shard search)."""
+        for b in self._batchers:
+            b.start(tick_ms)
+        self._started = True
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop all shard flushers; by default answer what is left."""
+        for b in self._batchers:
+            b.stop(drain=drain)
+        self._started = False
+
+    def poll(self) -> int:
+        """Advance every shard's due flushes from the calling thread."""
+        return sum(b.poll() for b in self._batchers)
+
+    def drain(self) -> int:
+        """Flush every shard to empty; returns per-shard answered total."""
+        return sum(b.drain() for b in self._batchers)
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """Aggregate per-shard batcher counters (+ ``per_shard`` detail).
+
+        Counts are per *shard request* (each submitted query fans out to
+        ``num_shards`` shard requests); ``submitted``/``answered``/
+        ``rejected``/``shed`` therefore sum over shards. ``queue_depth_peak``
+        is the max over shards; latency figures are worst-shard.
+        """
+        per = [b.stats() for b in self._batchers]
+        agg = dict(
+            num_shards=self.num_shards,
+            submitted=sum(s["submitted"] for s in per),
+            answered=sum(s["answered"] for s in per),
+            batches=sum(s["batches"] for s in per),
+            padded_queries=sum(s["padded_queries"] for s in per),
+            rejected=sum(s["rejected"] for s in per),
+            shed=sum(s["shed"] for s in per),
+            blocked=sum(s["blocked"] for s in per),
+            queued=sum(s["queued"] for s in per),
+            queue_depth_peak=max(s["queue_depth_peak"] for s in per),
+            latency_ms_avg=max(s["latency_ms_avg"] for s in per),
+            latency_ms_max=max(s["latency_ms_max"] for s in per),
+            batch_size_avg=(
+                sum(s["batch_size_sum"] for s in per)
+                / max(sum(s["batches"] for s in per), 1)),
+            qps=min(s["qps"] for s in per),
+            per_shard=per,
+        )
+        return agg

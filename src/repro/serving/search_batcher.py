@@ -12,11 +12,20 @@ is the host-side adapter between the two (the retrieval analogue of
     the oldest request has waited ``max_wait_ms`` (latency bound), echoing
     the paper's goal that workers are handed enough work to all finish
     "at about the same time" without starving latency;
-  * flushed queries are stacked and right-padded to a power-of-two batch
-    shape (pad rows repeat a real query and are discarded), so the engine
-    compiles ONE step per bucket shape instead of one per arrival count —
-    the jitted engines themselves come from ``core.search._engine_for``'s
-    per-index cache, shared with every direct ``exact_*_batch`` caller;
+  * flushed queries ride a :func:`repro.core.search.make_batch_engine`
+    engine, which pads them to a power-of-two batch shape (pad rows repeat
+    a real query and are discarded), so the engine compiles ONE step per
+    bucket shape instead of one per arrival count — the jitted closures
+    come from ``core.search._engine_for``'s per-index cache, shared with
+    every direct ``exact_*_batch`` caller;
+  * the pending queue is *bounded* (``max_pending`` + ``policy``):
+    admission control keeps a traffic burst from growing the queue — and
+    the tail latency of everything behind it — without bound. ``block``
+    makes ``submit`` wait for space (the cooperative backpressure mode),
+    ``reject`` raises :class:`QueueFullError` at the door, and
+    ``shed-oldest`` drops the stalest queued request (failing its future
+    with :class:`QueueFullError`) in favor of the new arrival. Queue-depth
+    peaks and shed/reject counts ride next to the qps/latency counters;
   * ``drain()`` answers everything still queued (shutdown / test barrier);
   * throughput and latency counters ride along (``stats()``).
 
@@ -35,14 +44,24 @@ import time
 from concurrent.futures import Future
 from typing import List, Optional
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.index import ParISIndex
 from repro.core.search import (
-    SearchConfig, SearchResult, exact_knn_batch, exact_search_batch,
+    SearchConfig, SearchResult, make_batch_engine,
 )
-from repro.serving.util import pow2_bucket
+
+ADMISSION_POLICIES = ("block", "reject", "shed-oldest")
+
+
+class QueueFullError(RuntimeError):
+    """Admission control turned a request away (queue at ``max_pending``).
+
+    Raised from ``submit`` under the ``reject`` policy (and by ``block``
+    on timeout); set as the *future's* exception for requests evicted by
+    ``shed-oldest`` — either way the caller sees a typed backpressure
+    signal instead of an unbounded queue.
+    """
 
 
 @dataclasses.dataclass
@@ -68,14 +87,32 @@ class SearchRequestBatcher:
     round_size / select / impl / leaf_cap: k-NN engine knobs.
     min_bucket:   smallest padded batch shape (bounds compile count from
                   below; 1 keeps single-query latency minimal).
+    max_pending:  bound on the pending queue (None = unbounded). With a
+                  bound, ``policy`` decides what saturation does:
+                  ``block`` (submit waits for space; pair with the daemon
+                  flusher or a concurrent poller, else a full queue can
+                  only clear via another thread's ``drain``), ``reject``
+                  (submit raises :class:`QueueFullError`), ``shed-oldest``
+                  (the stalest queued request's future fails with
+                  :class:`QueueFullError` and the new arrival is queued).
+    block_timeout_ms: ``block`` only — give up (QueueFullError) after
+                  waiting this long for space (None = wait forever).
+    inline_flush: flush full batches inside ``submit`` (default). False
+                  defers every flush to ``poll``/daemon/``drain`` — the
+                  router mode, where each shard's daemon thread does its
+                  own engine calls so S shards flush in parallel.
+    engine:       a prebuilt :func:`repro.core.search.make_batch_engine`
+                  callable (the router passes per-shard engines); built
+                  from the knobs above when omitted.
 
     Thread-safe: ``submit`` may be called from any thread. Each flush
     claims its cohort of pending requests atomically under the lock, so
     every request is answered exactly once; the engine call itself runs
     OUTSIDE the lock (concurrent flushes may overlap in jax — safe, the
     engines are pure). ``start()`` spawns a daemon thread that enforces
-    ``max_wait_ms`` for callers that block on futures; without it, call
-    ``poll()`` periodically or ``drain()`` at a barrier.
+    ``max_wait_ms`` (and, with ``inline_flush=False``, full-batch flushes)
+    for callers that block on futures; without it, call ``poll()``
+    periodically or ``drain()`` at a barrier.
     """
 
     def __init__(
@@ -91,58 +128,134 @@ class SearchRequestBatcher:
         impl: str = "auto",
         leaf_cap: int = 256,
         min_bucket: int = 1,
+        max_pending: Optional[int] = None,
+        policy: str = "block",
+        block_timeout_ms: Optional[float] = None,
+        inline_flush: bool = True,
+        engine=None,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if k is not None and k < 1:
             raise ValueError("k must be None (1-NN mode) or >= 1")
+        if policy not in ADMISSION_POLICIES:
+            raise ValueError(
+                f"policy must be one of {ADMISSION_POLICIES}, got {policy!r}")
+        if max_pending is not None and max_pending < max_batch:
+            raise ValueError(
+                f"max_pending={max_pending} < max_batch={max_batch} could "
+                "never fill a batch")
         self.index = index
         self.k = k
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms
-        self.cfg = cfg
-        self.round_size = round_size
-        self.select = select
-        self.impl = impl
-        self.leaf_cap = leaf_cap
-        self.min_bucket = min_bucket
+        self.max_pending = max_pending
+        self.policy = policy
+        self.block_timeout_ms = block_timeout_ms
+        self.inline_flush = inline_flush
+        if engine is None:
+            if k is None:
+                engine = make_batch_engine(
+                    index, k=None, round_size=cfg.round_size,
+                    leaf_cap=cfg.leaf_cap, sort=cfg.sort, select=cfg.select,
+                    impl=cfg.impl, min_bucket=min_bucket,
+                )
+            else:
+                engine = make_batch_engine(
+                    index, k=k, round_size=round_size, leaf_cap=leaf_cap,
+                    select=select, impl=impl, min_bucket=min_bucket,
+                )
+        self._engine = engine
         self._pending: List[_Pending] = []
         self._lock = threading.Lock()
+        self._space = threading.Condition(self._lock)
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._t0 = time.monotonic()
         self._counters = dict(
             submitted=0, answered=0, batches=0, padded_queries=0,
             flush_full=0, flush_timeout=0, flush_drain=0,
+            rejected=0, shed=0, blocked=0, queue_depth_peak=0,
             latency_ms_sum=0.0, latency_ms_max=0.0, batch_size_sum=0,
         )
 
     # ------------------------------------------------------------- request
     def submit(self, query) -> Future:
-        """Enqueue one (n,) query; returns a Future for its result."""
+        """Enqueue one (n,) query; returns a Future for its result.
+
+        Admission control applies first (see ``max_pending``/``policy``):
+        ``reject`` raises :class:`QueueFullError` at saturation, ``block``
+        waits for space, ``shed-oldest`` evicts the stalest queued request
+        (its future fails with :class:`QueueFullError`).
+        """
         q = np.asarray(query, np.float32)
         if q.ndim != 1:
             raise ValueError(f"submit takes one (n,) query, got {q.shape}")
         fut: Future = Future()
+        shed_futs: List[Future] = []
         with self._lock:
+            c = self._counters
+            if (self.max_pending is not None
+                    and len(self._pending) >= self.max_pending):
+                if self.policy == "reject":
+                    c["rejected"] += 1
+                    raise QueueFullError(
+                        f"pending queue full ({self.max_pending}); "
+                        "request rejected")
+                elif self.policy == "shed-oldest":
+                    while len(self._pending) >= self.max_pending:
+                        old = self._pending.pop(0)
+                        c["shed"] += 1
+                        shed_futs.append(old.future)
+                else:  # block
+                    c["blocked"] += 1
+                    deadline = (
+                        None if self.block_timeout_ms is None
+                        else time.monotonic() + self.block_timeout_ms / 1e3)
+                    while len(self._pending) >= self.max_pending:
+                        left = (None if deadline is None
+                                else deadline - time.monotonic())
+                        expired = left is not None and left <= 0
+                        if expired or not self._space.wait(timeout=left):
+                            # A timed-out block turned the request away,
+                            # same as a reject — count it as one.
+                            c["rejected"] += 1
+                            raise QueueFullError(
+                                "timed out waiting for queue space "
+                                f"({self.max_pending} pending)")
             self._pending.append(_Pending(q, fut, time.monotonic()))
-            self._counters["submitted"] += 1
+            c["submitted"] += 1
+            c["queue_depth_peak"] = max(
+                c["queue_depth_peak"], len(self._pending))
             full = len(self._pending) >= self.max_batch
-        if full:
+        for sf in shed_futs:  # outside the lock: callbacks may run inline
+            sf.set_exception(QueueFullError(
+                "request shed from a full queue by a newer arrival"))
+        if full and self.inline_flush:
             self._flush("flush_full")
         return fut
 
     def poll(self) -> int:
-        """Flush if the oldest request exceeded ``max_wait_ms``.
+        """Flush what is due: full batches (``inline_flush=False`` mode)
+        and timed-out partial batches (``max_wait_ms``).
 
         Returns the number of requests answered by this call.
         """
-        with self._lock:
-            if not self._pending:
-                return 0
-            age_ms = (time.monotonic() - self._pending[0].t_submit) * 1e3
-            due = age_ms >= self.max_wait_ms
-        return self._flush("flush_timeout") if due else 0
+        total = 0
+        while True:
+            with self._lock:
+                if not self._pending:
+                    return total
+                full = len(self._pending) >= self.max_batch
+                age_ms = (
+                    time.monotonic() - self._pending[0].t_submit) * 1e3
+                due = age_ms >= self.max_wait_ms
+            if full and not self.inline_flush:
+                total += self._flush("flush_full")
+            elif due:
+                total += self._flush("flush_timeout")
+            else:
+                return total
 
     def drain(self) -> int:
         """Answer every queued request; returns how many were answered."""
@@ -192,24 +305,16 @@ class SearchRequestBatcher:
                 return 0
             take = self._pending[: self.max_batch]
             del self._pending[: self.max_batch]
+            self._space.notify_all()  # blocked submitters may now enqueue
         try:
             qn = len(take)
-            bucket = pow2_bucket(qn, self.min_bucket)
+            bucket = self._engine.bucket(qn)
             qs = np.stack([p.query for p in take])
-            if bucket > qn:  # pad rows repeat a real query; discarded below
-                pad = np.broadcast_to(qs[0], (bucket - qn, qs.shape[1]))
-                qs = np.concatenate([qs, pad])
-            qs = jnp.asarray(qs)
+            out = self._engine(qs)
             if self.k is None:
-                res = exact_search_batch(self.index, qs, self.cfg)
-                outs = _split_search(res, qn)
+                outs = _split_search(out, qn)
             else:
-                d, p = exact_knn_batch(
-                    self.index, qs, k=self.k, round_size=self.round_size,
-                    impl=self.impl, select=self.select,
-                    leaf_cap=self.leaf_cap,
-                )
-                d, p = np.asarray(d), np.asarray(p)
+                d, p = np.asarray(out[0]), np.asarray(out[1])
                 outs = [(d[i], p[i]) for i in range(qn)]
         except BaseException as e:  # noqa: BLE001 — propagate per request
             for p in take:

@@ -8,12 +8,9 @@ launch/serve.py). The decode step is the function the assignment's
 
 from __future__ import annotations
 
-from typing import Any, Dict
-
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.models import Model
 
 

@@ -1,14 +1,12 @@
-"""Small shared serving helpers (no model/engine imports)."""
+"""Small shared serving helpers.
+
+``pow2_bucket`` moved to :mod:`repro.core.search` (the engine factory
+quantizes batch shapes itself now); re-exported here for the decode-side
+``SlotBatcher`` and older callers.
+"""
 
 from __future__ import annotations
 
+from repro.core.search import pow2_bucket
 
-def pow2_bucket(n: int, lo: int = 1) -> int:
-    """Smallest power of two >= max(n, lo).
-
-    Both host-side batchers quantize dynamic sizes to pow2 buckets —
-    prompt lengths before prefill (``SlotBatcher``) and batch shapes
-    before an engine flush (``SearchRequestBatcher``) — so jit traces one
-    step per bucket instead of one per distinct size.
-    """
-    return 1 << (max(n, lo) - 1).bit_length()
+__all__ = ["pow2_bucket"]

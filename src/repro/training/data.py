@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Iterator, Optional
+from typing import Callable
 
 import jax
 import numpy as np

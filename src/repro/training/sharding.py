@@ -21,7 +21,6 @@ import re
 from typing import Optional, Sequence
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import layers as layers_mod

@@ -9,12 +9,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.models import Model
 from repro.training import optimizer as opt_mod
 from repro.training.compression import compress_decompress

@@ -2,7 +2,6 @@
 partial-selection k-NN path, the tiny-index regressions, and the
 mesh-sharded batched step."""
 
-import json
 import os
 import subprocess
 import sys
@@ -14,7 +13,7 @@ import pytest
 from repro.core import (
     SearchConfig, approx_search, approx_search_batch, brute_force,
     build_index, exact_knn, exact_knn_batch, exact_search,
-    exact_search_batch, exact_search_single, random_walk,
+    exact_search_batch, exact_search_single,
 )
 from repro.core import isax
 from repro.core.search import select_len

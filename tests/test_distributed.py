@@ -1,12 +1,10 @@
 """Multi-device tests (subprocess with forced host devices, so the main
 pytest process keeps seeing exactly 1 device)."""
 
-import json
 import os
 import subprocess
 import sys
 
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

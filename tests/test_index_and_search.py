@@ -1,7 +1,6 @@
 """Index construction invariants + exact-search correctness (the paper's
 core claim: the index answers exactly, orders faster)."""
 
-import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
@@ -9,7 +8,7 @@ import pytest
 
 from repro.core import (
     PipelineBuilder, SearchConfig, SeriesSource, brute_force, build_index,
-    exact_knn, exact_search, isax, nb_exact_search, random_walk,
+    exact_knn, exact_search, isax, nb_exact_search,
 )
 from repro.core.index import validate_index
 from repro.core.classifier import KnnClassifier

@@ -1,7 +1,6 @@
 """Per-kernel validation: Pallas (interpret=True) vs the pure-jnp oracle,
 swept over shapes and dtypes, exactly as the assignment requires."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -17,7 +17,6 @@ from repro.models import Model
 from repro.models import mamba as mamba_mod
 from repro.models import rwkv as rwkv_mod
 from repro.serving.kv_cache import pad_cache_to
-from repro.training import data as data_mod
 from repro.training import optimizer as opt_mod
 from repro.training import train_step as ts_mod
 

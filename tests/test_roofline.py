@@ -63,7 +63,10 @@ def test_nested_scan_multiplies_transitively():
 
 def test_collective_bytes_and_groups(tmp_path):
     """All-reduce over an 8-device mesh: ring term 2(n-1)/n * bytes."""
-    import subprocess, sys, os, textwrap
+    import os
+    import subprocess
+    import sys
+    import textwrap
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(

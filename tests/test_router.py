@@ -1,0 +1,254 @@
+"""ShardedSearchRouter: bit-exact parity with the single-index engine,
+shard construction invariants, and admission control under saturation.
+
+Exactness argument under test: shards are file-order partitions whose
+per-series math (summarization, distances) is bitwise independent of
+which shard a series lives in, and per-shard top lists are ownership-
+disjoint — so the router's concat + k-smallest merge must reproduce the
+single-index ``exact_knn_batch``/``exact_search_batch`` answer exactly,
+for any shard count, including when S does not divide N.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    build_index, build_sharded_index, exact_knn_batch, exact_search_batch,
+)
+from repro.core.index import validate_index
+from repro.core.search import NO_POS
+from repro.serving.router import ShardedSearchRouter
+from repro.serving.search_batcher import QueueFullError, SearchRequestBatcher
+
+RNG = np.random.default_rng(1234)
+N = 2050  # deliberately not a multiple of 4: the remainder case rides along
+LENGTH = 128
+ROUND = 256
+
+
+@pytest.fixture(scope="module")
+def index():
+    raw = jnp.asarray(
+        RNG.standard_normal((N, LENGTH)).cumsum(axis=1), jnp.float32)
+    return build_index(raw)
+
+
+def _stream(q):
+    return RNG.standard_normal((q, LENGTH)).cumsum(axis=1).astype(np.float32)
+
+
+# ------------------------------------------------------------------ shards
+def test_build_sharded_index_partitions_and_validates(index):
+    for s_count in (1, 2, 4):
+        sh = build_sharded_index(index, s_count)
+        assert sh.num_shards == s_count
+        assert sh.offsets[0] == 0 and sh.offsets[-1] == N
+        sizes = np.diff(sh.offsets)
+        assert sizes.sum() == N
+        assert sizes.max() - sizes.min() <= 1  # balanced, remainder spread
+        for shard, size in zip(sh.shards, sizes):
+            assert shard.num_series == size
+            assert all(validate_index(shard).values())
+
+
+def test_shard_raw_rows_match_file_slices(index):
+    sh = build_sharded_index(index, 4)
+    full = np.asarray(index.raw)
+    for s, shard in enumerate(sh.shards):
+        lo, hi = sh.offsets[s], sh.offsets[s + 1]
+        np.testing.assert_array_equal(np.asarray(shard.raw), full[lo:hi])
+
+
+def test_build_sharded_index_validation(index):
+    with pytest.raises(ValueError):
+        build_sharded_index(index, 0)
+    with pytest.raises(ValueError):
+        build_sharded_index(index, N + 1)
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("s_count", [1, 2, 4])
+@pytest.mark.parametrize("k", [1, 8])
+def test_router_knn_parity_bit_exact(index, s_count, k):
+    qs = _stream(12)
+    want_d, want_p = exact_knn_batch(
+        index, jnp.asarray(qs), k=k, round_size=ROUND)
+    r = ShardedSearchRouter(
+        index, s_count, k=k, max_batch=5, round_size=ROUND)
+    got_d, got_p = r.search_batch(qs)
+    np.testing.assert_array_equal(got_d, np.asarray(want_d))
+    np.testing.assert_array_equal(got_p, np.asarray(want_p))
+
+
+@pytest.mark.parametrize("s_count", [1, 2, 4])
+def test_router_1nn_parity_bit_exact(index, s_count):
+    qs = _stream(9)
+    want = exact_search_batch(index, jnp.asarray(qs))
+    r = ShardedSearchRouter(index, s_count, k=None, max_batch=4)
+    got = r.search_batch(qs)
+    np.testing.assert_array_equal(got.dist_sq, np.asarray(want.dist_sq))
+    np.testing.assert_array_equal(got.position, np.asarray(want.position))
+
+
+def test_router_k_exceeds_shard_size(index):
+    # k larger than the smallest shard: sentinel slots from small shards
+    # must sink in the merge, and the global answer stays sentinel-free
+    # (the full datastore has >= k series).
+    qs = _stream(3)
+    k = 700  # > ceil(2050/4) = 513 per-shard rows
+    want_d, want_p = exact_knn_batch(
+        index, jnp.asarray(qs), k=k, round_size=ROUND)
+    r = ShardedSearchRouter(index, 4, k=k, max_batch=4, round_size=ROUND)
+    got_d, got_p = r.search_batch(qs)
+    assert (got_p >= 0).all()
+    np.testing.assert_array_equal(got_d, np.asarray(want_d))
+    np.testing.assert_array_equal(got_p, np.asarray(want_p))
+
+
+def test_router_threaded_daemon_parity(index):
+    qs = _stream(10)
+    want_d, want_p = exact_knn_batch(
+        index, jnp.asarray(qs), k=4, round_size=ROUND)
+    r = ShardedSearchRouter(
+        index, 2, k=4, max_batch=4, max_wait_ms=3.0, round_size=ROUND)
+    r.start(tick_ms=1.0)
+    try:
+        futs = [r.submit(q) for q in qs]
+        res = [f.result(timeout=60) for f in futs]
+    finally:
+        r.stop()
+    for i, (d, p) in enumerate(res):
+        np.testing.assert_array_equal(d, np.asarray(want_d[i]))
+        np.testing.assert_array_equal(p, np.asarray(want_p[i]))
+    s = r.stats()
+    assert s["answered"] == 10 * 2 and s["queued"] == 0
+
+
+# -------------------------------------------------------------- admission
+def test_batcher_reject_policy_saturated(index):
+    b = SearchRequestBatcher(
+        index, k=2, max_batch=4, max_pending=4, policy="reject",
+        inline_flush=False, round_size=ROUND)
+    qs = _stream(6)
+    futs = [b.submit(q) for q in qs[:4]]
+    with pytest.raises(QueueFullError):
+        b.submit(qs[4])
+    with pytest.raises(QueueFullError):
+        b.submit(qs[5])
+    assert b.drain() == 4
+    s = b.stats()
+    assert s["rejected"] == 2 and s["answered"] == 4
+    assert s["queue_depth_peak"] == 4
+    want_d, want_p = exact_knn_batch(
+        index, jnp.asarray(qs[:4]), k=2, round_size=ROUND)
+    for i, f in enumerate(futs):
+        d, p = f.result(timeout=1)
+        np.testing.assert_array_equal(d, np.asarray(want_d[i]))
+        np.testing.assert_array_equal(p, np.asarray(want_p[i]))
+
+
+def test_batcher_shed_oldest_policy_saturated(index):
+    b = SearchRequestBatcher(
+        index, k=2, max_batch=4, max_pending=4, policy="shed-oldest",
+        inline_flush=False, round_size=ROUND)
+    qs = _stream(7)
+    futs = [b.submit(q) for q in qs]
+    b.drain()
+    # Oldest three were shed in favor of the newest arrivals.
+    for f in futs[:3]:
+        assert isinstance(f.exception(timeout=1), QueueFullError)
+    want_d, want_p = exact_knn_batch(
+        index, jnp.asarray(qs[3:]), k=2, round_size=ROUND)
+    for i, f in enumerate(futs[3:]):
+        d, p = f.result(timeout=1)
+        np.testing.assert_array_equal(d, np.asarray(want_d[i]))
+        np.testing.assert_array_equal(p, np.asarray(want_p[i]))
+    s = b.stats()
+    assert s["shed"] == 3 and s["answered"] == 4
+
+
+def test_batcher_block_policy_timeout_and_drain(index):
+    b = SearchRequestBatcher(
+        index, k=2, max_batch=2, max_pending=2, policy="block",
+        block_timeout_ms=20.0, inline_flush=False, round_size=ROUND)
+    qs = _stream(3)
+    b.submit(qs[0])
+    b.submit(qs[1])
+    with pytest.raises(QueueFullError):  # nobody is flushing: times out
+        b.submit(qs[2])
+    s = b.stats()
+    assert s["blocked"] == 1
+    assert s["rejected"] == 1  # a timed-out block counts as turned away
+    assert b.drain() == 2
+
+
+def test_router_search_batch_block_policy_no_daemon(index):
+    # Regression: a block bound tighter than Q must not deadlock the
+    # synchronous search_batch path — full cohorts are flushed between
+    # submits when no daemon is running.
+    qs = _stream(20)
+    want_d, want_p = exact_knn_batch(
+        index, jnp.asarray(qs), k=2, round_size=ROUND)
+    r = ShardedSearchRouter(
+        index, 2, k=2, max_batch=4, max_pending=8, policy="block",
+        round_size=ROUND)
+    got_d, got_p = r.search_batch(qs)
+    np.testing.assert_array_equal(got_d, np.asarray(want_d))
+    np.testing.assert_array_equal(got_p, np.asarray(want_p))
+
+
+def test_batcher_block_policy_daemon_makes_space(index):
+    b = SearchRequestBatcher(
+        index, k=2, max_batch=2, max_pending=2, policy="block",
+        max_wait_ms=2.0, inline_flush=False, round_size=ROUND)
+    b.start(tick_ms=1.0)
+    try:
+        futs = [b.submit(q) for q in _stream(8)]  # > max_pending: blocks
+        res = [f.result(timeout=60) for f in futs]
+    finally:
+        b.stop()
+    assert len(res) == 8 and b.stats()["answered"] == 8
+
+
+def test_router_shed_fails_merged_future(index):
+    r = ShardedSearchRouter(
+        index, 2, k=2, max_batch=4, max_pending=4, policy="shed-oldest",
+        round_size=ROUND)
+    qs = _stream(6)
+    futs = [r.submit(q) for q in qs]
+    r.drain()
+    for f in futs[:2]:  # shed on every shard -> merged future errors
+        assert isinstance(f.exception(timeout=1), QueueFullError)
+    for f in futs[2:]:
+        d, p = f.result(timeout=1)
+        assert d.shape == (2,) and (p >= 0).all()
+    assert r.stats()["shed"] == 2 * 2  # per-shard counters
+
+
+def test_router_reject_raises_from_submit(index):
+    r = ShardedSearchRouter(
+        index, 2, k=2, max_batch=4, max_pending=4, policy="reject",
+        round_size=ROUND)
+    qs = _stream(5)
+    futs = [r.submit(q) for q in qs[:4]]
+    with pytest.raises(QueueFullError):
+        r.submit(qs[4])
+    r.drain()
+    assert all(f.result(timeout=1) for f in futs)
+    assert r.stats()["rejected"] >= 1
+
+
+# ------------------------------------------------------------------ misc
+def test_batcher_validation(index):
+    with pytest.raises(ValueError):
+        SearchRequestBatcher(index, policy="drop-newest")
+    with pytest.raises(ValueError):  # bound below max_batch can't fill one
+        SearchRequestBatcher(index, max_batch=8, max_pending=4)
+    with pytest.raises(ValueError):
+        ShardedSearchRouter(index)  # num_shards required
+    r = ShardedSearchRouter(index, 2, k=2)
+    with pytest.raises(ValueError):
+        r.submit(_stream(2))  # a (2, n) matrix is not a single query
+    assert int(NO_POS) == -1

@@ -2,7 +2,6 @@
 parallel build -> exact query answering -> downstream classifier, plus the
 paper's headline semantics (exactness + pruning) on one realistic run."""
 
-import os
 
 import jax.numpy as jnp
 import numpy as np
