@@ -1,0 +1,193 @@
+"""Live-ingestion benchmark: insert throughput, query latency under
+concurrent ingest, and compaction stall — plus the exactness gate.
+
+Four legs over the ``core.ingest`` + ``serving.ingest`` subsystem:
+
+  ingest_tput   — series/sec through ``IngestPipeline.append`` (Stage-2
+                  conversion + snapshot swap; no engines involved),
+  compaction    — one full compaction of the appended deltas: merge time
+                  (linear merges, runs concurrently with traffic in
+                  production) vs publish stall (the only writer-blocking
+                  window),
+  under_ingest  — per-query latency through a started ``IngestingRouter``
+                  (daemon flushers + compaction daemon) WHILE a feeder
+                  thread appends batches; includes the cold-engine
+                  compiles of freshly attached delta shards — the honest
+                  serving cost of a growing shard set,
+  idle          — the same stream after ingest settles (the floor).
+
+Parity: after all appends + compactions, ``exact_knn_batch`` over the
+mutable index AND the router's streamed answers must be bit-exact vs a
+from-scratch ``build_index`` over the concatenated data. This is the
+``--strict-parity`` verdict CI gates on.
+
+    PYTHONPATH=src:. python benchmarks/bench_ingest.py [--tiny]
+"""
+
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import dataset
+from repro.core import MutableIndex, build_index, exact_knn_batch
+from repro.core.ingest import CompactionPolicy, IngestPipeline
+from repro.serving.ingest import IngestingRouter
+
+K = 8
+ROUND_SIZE = 512
+SHARDS = 2
+
+
+def run(tiny: bool = False, impl: str = "ref"):
+    n0 = 2_000 if tiny else 16_000
+    bsz = 64 if tiny else 512
+    n_batches = 4 if tiny else 8
+    stream = 24 if tiny else 96
+    length = 256
+    n_final = n0 + bsz * n_batches
+    data = dataset(n_final + bsz, length)  # one extra batch for warmup
+    base = build_index(jnp.asarray(data[:n0]))
+    appends = [data[n0 + i * bsz: n0 + (i + 1) * bsz]
+               for i in range(n_batches)]
+    rng = np.random.default_rng(13)
+    qs = rng.standard_normal((stream, length)).cumsum(axis=1).astype(
+        np.float32)
+
+    # --- leg 1: insert throughput (no queries, no engines) ---------------
+    scratch = MutableIndex(series_length=length, impl=impl)
+    scratch.append(data[n_final:])  # pay the paa_isax compile once
+    m = MutableIndex(base, impl=impl)
+    pipe = IngestPipeline(m)
+    t0 = time.perf_counter()
+    for b in appends:
+        pipe.append(b)
+    ingest_s = time.perf_counter() - t0
+    tput = bsz * n_batches / ingest_s
+
+    # --- leg 2: compaction merge vs publish stall ------------------------
+    res = m.compact()
+    ing = m.stats()
+
+    # --- legs 3+4: query latency under concurrent ingest vs idle ---------
+    svc = IngestingRouter(
+        base, SHARDS, k=K, max_batch=32, max_wait_ms=2.0,
+        round_size=ROUND_SIZE, impl=impl,
+        compaction_policy=CompactionPolicy(max_deltas=3),
+        compact_tick_ms=5.0)
+    svc.start()
+    for q in qs[:4]:  # compile the base-shard engines off the clock
+        svc.submit(q).result()
+
+    def measure():
+        lats = []
+        for q in qs:
+            t1 = time.perf_counter()
+            svc.submit(q).result()
+            lats.append((time.perf_counter() - t1) * 1e3)
+        return np.asarray(lats)
+
+    done = threading.Event()
+
+    def feeder():
+        try:
+            for b in appends:
+                svc.append(b)
+                time.sleep(0.002)
+        finally:
+            done.set()
+
+    t = threading.Thread(target=feeder)
+    t.start()
+    lat_ingest = measure()
+    t.join()
+    svc.stop(compact=True)  # fold everything into the base
+    svc.start()
+    for q in qs[:4]:  # the compacted base's engines compile off the clock:
+        svc.submit(q).result()  # idle is the warm floor, not a cold start
+    lat_idle = measure()
+
+    # --- parity gate -----------------------------------------------------
+    ref = build_index(jnp.asarray(data[:n_final]))
+    want_d, want_p = exact_knn_batch(
+        ref, jnp.asarray(qs), k=K, round_size=ROUND_SIZE, impl=impl)
+    want_d, want_p = np.asarray(want_d), np.asarray(want_p)
+    got_d, got_p = m.exact_knn_batch(
+        jnp.asarray(qs), k=K, round_size=ROUND_SIZE, impl=impl)
+    parity_direct = (np.array_equal(want_d, got_d)
+                     and np.array_equal(want_p, got_p))
+    rd, rp = svc.search_batch(qs)
+    parity_router = (np.array_equal(want_d, np.asarray(rd))
+                     and np.array_equal(want_p, np.asarray(rp)))
+    svc.stop()
+    parity = bool(parity_direct and parity_router)
+    sstats = svc.stats()
+
+    rows = [
+        (f"ingest_{n0}_tput", ingest_s / (bsz * n_batches) * 1e6,
+         f"series_per_sec={tput:.0f} batches={n_batches}x{bsz}"),
+        (f"ingest_{n0}_compaction", res.merge_time * 1e6,
+         f"merged={ing['compacted_series']} "
+         f"merge_ms={res.merge_time * 1e3:.1f} "
+         f"publish_stall_ms={res.stall_time * 1e3:.3f}"),
+        (f"ingest_{n0}_query_under_ingest", float(np.mean(lat_ingest)) * 1e3,
+         f"lat_ms_avg={np.mean(lat_ingest):.2f} "
+         f"lat_ms_p95={np.percentile(lat_ingest, 95):.2f} "
+         f"lat_ms_max={np.max(lat_ingest):.2f} "
+         f"compactions={sstats['ingest']['compactions']}"),
+        (f"ingest_{n0}_query_idle", float(np.mean(lat_idle)) * 1e3,
+         f"lat_ms_avg={np.mean(lat_idle):.2f} "
+         f"lat_ms_max={np.max(lat_idle):.2f} "
+         f"slowdown_x={np.mean(lat_ingest) / max(np.mean(lat_idle), 1e-9):.2f} "
+         f"parity={parity}"),
+    ]
+    report = dict(
+        n_base=n0, batch=bsz, n_batches=n_batches, k=K,
+        round_size=ROUND_SIZE, shards=SHARDS, impl=impl,
+        insert_series_per_sec=tput,
+        compaction_merge_ms=res.merge_time * 1e3,
+        compaction_publish_stall_ms=res.stall_time * 1e3,
+        compaction_stall_ms_max_router=(
+            sstats["ingest"]["stall_time_max"] * 1e3),
+        query_ms_under_ingest_avg=float(np.mean(lat_ingest)),
+        query_ms_under_ingest_p95=float(np.percentile(lat_ingest, 95)),
+        query_ms_under_ingest_max=float(np.max(lat_ingest)),
+        query_ms_idle_avg=float(np.mean(lat_idle)),
+        router_compactions=sstats["ingest"]["compactions"],
+        router_retired_shards=sstats["retired_shards"],
+        results=[dict(leg="direct", parity=bool(parity_direct)),
+                 dict(leg="router", parity=bool(parity_router))],
+    )
+    return rows, report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: 2k base, 4x64 appends")
+    ap.add_argument("--impl", default="ref")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="JSON path (default: repo-root BENCH_ingest.json; "
+                         "'-' to skip)")
+    args = ap.parse_args()
+    rows, report = run(tiny=args.tiny, impl=args.impl)
+    from benchmarks.common import emit
+    emit(rows)
+    if args.json != "-":
+        import json
+        import os
+        path = args.json or os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_ingest.json")
+        with open(path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {path}")
+    if not all(e["parity"] for e in report["results"]):
+        raise SystemExit("live-ingest answers diverged from scratch build")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,10 @@ def main() -> None:
                     help="small datasets (fast smoke run)")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (e.g. query,build)")
+    ap.add_argument("--filter", default=None, metavar="SUBSTR",
+                    help="run benches whose name contains SUBSTR (CI legs "
+                         "and local runs select benches without editing the "
+                         "registry; composes with --only)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write rows + failures as a JSON report")
     ap.add_argument("--strict-parity", action="store_true",
@@ -30,8 +34,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_batch_query, bench_build, bench_classifier,
-                            bench_knn_topk, bench_lower_bound, bench_pruning,
-                            bench_query, bench_search_batcher, roofline_table)
+                            bench_ingest, bench_knn_topk, bench_lower_bound,
+                            bench_pruning, bench_query, bench_search_batcher,
+                            roofline_table)
     from benchmarks.common import emit
 
     # Each registry entry returns (rows, parity): parity is the bench's own
@@ -47,6 +52,10 @@ def main() -> None:
         rows, report = bench_knn_topk.run(tiny=quick)
         return rows, all(e["parity"] for e in report["results"])
 
+    def _ingest(quick):
+        rows, report = bench_ingest.run(tiny=quick)
+        return rows, all(e["parity"] for e in report["results"])
+
     benches = {
         "lower_bound":
             lambda quick: (bench_lower_bound.run(quick=quick), None),
@@ -55,6 +64,7 @@ def main() -> None:
         "batch_query": _batch_query,
         "knn_topk": _knn_topk,
         "search_batcher": lambda quick: bench_search_batcher.run(tiny=quick),
+        "ingest": _ingest,
         "pruning": lambda quick: (bench_pruning.run(quick=quick), None),
         "classifier": lambda quick: (bench_classifier.run(quick=quick), None),
         "roofline": lambda quick: (roofline_table.run(quick=quick), None),
@@ -65,6 +75,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if only and name not in only:
+            continue
+        if args.filter and args.filter not in name:
             continue
         t0 = time.time()
         try:

@@ -6,19 +6,22 @@ state queries the index for its nearest memorized states, whose next tokens
 form a retrieval distribution that is interpolated with the LM logits
 (Khandelwal et al.'s kNN-LM, with ParIS+ replacing the FAISS store).
 
-Serving is *streamed* and *sharded* end-to-end: the datastore is split
-into file-order shards behind a ``ShardedSearchRouter``; every decoding
-sequence submits its retrieval query to the router as it arrives. Each
-shard's batcher coalesces the stream into padded power-of-two batches and
-answers with ONE ``exact_knn_batch`` call over its partition — one fused
-(Q, N_shard) lower-bound pass and one shared RDC loop riding the k-safe
-partial-selection (``select="topk"``) path — and the router merges the
-ownership-disjoint per-shard top lists into the global exact k-NN. The
-pending queues are bounded (``shed-oldest`` admission), so a decode storm
-degrades by shedding stale retrievals instead of growing tail latency
-without bound. The retrieved (distance, next-token) lists are mixed into
-the LM logits with a single segment-max scatter over the whole (B, k)
-result.
+Serving is *streamed*, *sharded*, and — new — *ingesting*: the datastore
+lives in a ``MutableIndex`` behind an :class:`IngestingRouter`. Every
+decoding sequence submits its retrieval query to the router as it
+arrives; each shard's batcher coalesces the stream into padded
+power-of-two batches and answers with ONE ``exact_knn_batch`` call over
+its partition; the router merges the ownership-disjoint per-shard top
+lists into the global exact k-NN. And because the index is now mutable,
+the example *memorizes while it decodes*: after every step the freshly
+produced (hidden state, chosen token) pairs are appended to the
+datastore — each batch becomes a delta shard that is immediately a
+routed, queryable shard — so later steps retrieve from earlier steps of
+the same generation. A mid-stream compaction folds the accumulated
+deltas into the base with linear merges and atomically rewires the
+router; answers stay exact throughout. The pending queues are bounded
+(``shed-oldest`` admission), so a decode storm degrades by shedding
+stale retrievals instead of growing tail latency without bound.
 
     PYTHONPATH=src python examples/retrieval_serve.py
 """
@@ -32,8 +35,8 @@ import numpy as np
 from repro import configs
 from repro.core import build_index
 from repro.models import Model
+from repro.serving.ingest import IngestingRouter
 from repro.serving.kv_cache import pad_cache_to
-from repro.serving.router import ShardedSearchRouter
 from repro.training import data as data_mod
 
 NUM_SHARDS = 2
@@ -80,23 +83,31 @@ def main():
     print(f"indexed {index.num_series} (state, next-token) pairs")
 
     # --- serving pass: B sequences decode together; each step every
-    # sequence submits its own retrieval query to the sharded router,
-    # which fans it to every shard's batcher; each shard flushes the
-    # step's arrivals as one padded engine batch over its partition and
-    # the router merges the per-shard top lists into the exact global k-NN.
+    # sequence submits its retrieval query to the ingesting router, which
+    # fans it to every shard's batcher (base shards AND live delta
+    # shards); each shard flushes the step's arrivals as one padded
+    # engine batch over its partition and the router merges the per-shard
+    # top lists into the exact global k-NN. After the step, the step's
+    # own (state, token) pairs are appended — memorize-as-you-decode.
     lam, k, bsz, steps = 0.3, 8, 4, 8
-    router = ShardedSearchRouter(
+    # Admission control rides the same router knobs as before (bounded
+    # queues, shed-oldest); compaction is triggered explicitly below so
+    # the example stays deterministic (compaction_policy=None disables
+    # the background daemon).
+    svc = IngestingRouter(
         index, NUM_SHARDS, k=k, max_batch=bsz, max_wait_ms=50.0,
-        round_size=512, max_pending=4 * bsz, policy="shed-oldest")
+        round_size=512, max_pending=4 * bsz, policy="shed-oldest",
+        compaction_policy=None)
     prompts = tokens[:bsz, :8]
     logits, cache = model.prefill(params, {"tokens": prompts})
     cache = pad_cache_to(cache, 32)
     outs = [list(np.asarray(prompts[b])) for b in range(bsz)]
     last = logits[:, -1]  # (B, vocab)
+    compactions = 0
     for i in range(steps):
         qs = np.asarray(last[:, :256])  # one retrieval query per sequence
-        futs = [router.submit(qs[b]) for b in range(bsz)]
-        router.drain()  # answers every shard's queued batch at the barrier
+        futs = [svc.submit(qs[b]) for b in range(bsz)]
+        svc.drain()  # answers every shard's queued batch at the barrier
         res = [f.result() for f in futs]
         dists = jnp.asarray(np.stack([d for d, _ in res]))
         pos = np.stack([p for _, p in res])
@@ -105,20 +116,32 @@ def main():
         nxts = np.asarray(jnp.argmax(mix, axis=-1))
         for b in range(bsz):
             outs[b].append(int(nxts[b]))
+        # memorize-as-you-decode: this step's states become a delta shard
+        # (immediately queryable by step i+1) and their chosen tokens
+        # extend the value table the retrieved positions point into.
+        svc.append(qs)
+        next_tokens = np.concatenate([next_tokens, nxts.astype(
+            next_tokens.dtype)])
+        if svc.mutable.num_deltas >= 4:  # fold deltas mid-stream
+            svc.compact_now()
+            compactions += 1
         last, cache = model.decode_step(
             params, {"tokens": jnp.asarray(nxts)[:, None]}, cache,
             jnp.int32(prompts.shape[1] + i))
     for b in range(bsz):
         print(f"seq {b} prompt + generated:", outs[b])
-    s = router.stats()
+    s = svc.stats()
+    ing = s["ingest"]
     print("(retrieval hits informed every step; ParIS+ answered",
-          f"{s['answered']} streamed shard requests "
-          f"({s['answered'] // s['num_shards']} exact {k}-NN queries x "
-          f"{s['num_shards']} shards) in",
+          f"{s['answered']} streamed shard requests in",
           f"{s['batches']} batches (avg size {s['batch_size_avg']:.1f},",
           f"avg latency {s['latency_ms_avg']:.1f} ms,",
+          f"merge avg {s['merge_ms_avg']:.2f} ms,",
           f"queue depth peak {s['queue_depth_peak']}, shed {s['shed']})",
-          f"over {index.num_series} vectors)")
+          f"over a live datastore that grew {index.num_series} ->",
+          f"{svc.num_series} vectors across {ing['appends']} appends,",
+          f"{compactions} compactions ({s['retired_shards']} shards",
+          "retired) — every answer exact at its point in the stream)")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,7 @@ from repro.core.index import (
     assemble_index,
     build_index,
     build_sharded_index,
+    empty_index,
 )
 from repro.core.search import (
     SearchConfig,
@@ -19,17 +20,31 @@ from repro.core.search import (
     exact_search_batch,
     exact_search_single,
     make_batch_engine,
+    merge_top_lists,
     nb_exact_search,
 )
-from repro.core.build_pipeline import BuildStats, PipelineBuilder
+from repro.core.build_pipeline import (
+    BuildStats, PipelineBuilder, bulk_load_chunk, merge_runs,
+)
 from repro.core.datagen import SeriesSource, random_walk
+from repro.core.ingest import (
+    CompactionPolicy,
+    CompactionResult,
+    DeltaShard,
+    IngestPipeline,
+    MutableIndex,
+    build_delta_shard,
+)
 
 __all__ = [
     "ParISIndex", "ShardedIndex", "build_index", "assemble_index",
-    "build_sharded_index",
+    "build_sharded_index", "empty_index",
     "SearchConfig", "SearchResult", "approx_search", "approx_search_batch",
     "brute_force", "exact_knn", "exact_knn_batch", "exact_search",
     "exact_search_batch", "exact_search_single", "make_batch_engine",
-    "nb_exact_search",
-    "BuildStats", "PipelineBuilder", "SeriesSource", "random_walk",
+    "merge_top_lists", "nb_exact_search",
+    "BuildStats", "PipelineBuilder", "bulk_load_chunk", "merge_runs",
+    "SeriesSource", "random_walk",
+    "CompactionPolicy", "CompactionResult", "DeltaShard", "IngestPipeline",
+    "MutableIndex", "build_delta_shard",
 ]

@@ -45,7 +45,7 @@ import numpy as np
 
 from repro.core import isax
 from repro.core.datagen import SeriesSource
-from repro.core.index import assemble_index
+from repro.core.index import assemble_index, empty_index
 from repro.kernels import ops
 
 
@@ -70,6 +70,11 @@ class BuildStats:
         busy = self.cpu_time
         if busy <= 0:
             return 1.0
+        if self.total_time <= 0:
+            # Mid-build (total_time not stamped yet): the exposed-time
+            # estimate below would read as "fully hidden" — report zero
+            # overlap instead of a spuriously perfect figure.
+            return 0.0
         exposed = max(self.total_time - self.read_time - self.flush_time
                       - self.finalize_time, 0.0)
         return max(0.0, min(1.0, 1.0 - exposed / busy))
@@ -106,8 +111,17 @@ def _merge_sorted(keys_a, keys_b, payloads_a, payloads_b):
     return keys, merged
 
 
-def _merge_runs(runs):
-    """log2(k) pairwise-merge passes over (keys, [payloads...]) runs."""
+def merge_runs(runs):
+    """log2(k) pairwise-merge passes over (keys, [payloads...]) runs.
+
+    Linear merges only — the ParIS+ property the epoch finalize and the
+    live-ingest compactor (``core.ingest``) both rely on. Runs must be
+    ordered by file offset: ``_merge_sorted`` breaks key ties toward the
+    left run, so offset order makes ties resolve by original position —
+    exactly a stable sort over the concatenated input.
+    """
+    if not runs:
+        raise ValueError("merge_runs needs at least one run")
     while len(runs) > 1:
         nxt = []
         for i in range(0, len(runs) - 1, 2):
@@ -117,6 +131,44 @@ def _merge_runs(runs):
             nxt.append(runs[-1])
         runs = nxt
     return runs[0]
+
+
+_merge_runs = merge_runs  # backwards-compatible private alias
+
+
+def bulk_load_chunk(
+    chunk_np: np.ndarray,
+    offset: int,
+    *,
+    segments: int,
+    cardinality: int,
+    refine_bits: int = 4,
+    breakpoints=None,
+    impl: str = "auto",
+    presort: bool = True,
+):
+    """Stage-2 IndexBulkLoading on one chunk: (keys, sax, pos) host arrays.
+
+    The reusable core of the builder's ConvertToSAX task — znorm + the
+    paa_isax kernel + packed refine keys + (optionally) the ParIS+
+    incremental presort into leaf order. ``offset`` is the chunk's global
+    file position, baked into ``pos``. Shared by :class:`PipelineBuilder`
+    (one call per double-buffered chunk) and the live-ingest delta-shard
+    builder (``core.ingest.build_delta_shard``, one call per appended
+    batch), so both paths produce byte-identical sorted runs.
+    """
+    if breakpoints is None:
+        breakpoints = isax.gaussian_breakpoints(cardinality)
+    x = jnp.asarray(isax.znorm(jnp.asarray(chunk_np)))
+    sax, _ = ops.paa_isax(x, breakpoints, segments, impl=impl,
+                          normalize=False)
+    sax = np.asarray(jax.device_get(sax))
+    keys = _host_refine_key(sax, refine_bits, cardinality)
+    pos = np.arange(offset, offset + len(sax), dtype=np.int32)
+    if presort:
+        order = np.argsort(keys, kind="stable")
+        keys, sax, pos = keys[order], sax[order], pos[order]
+    return keys, sax, pos
 
 
 class PipelineBuilder:
@@ -149,17 +201,14 @@ class PipelineBuilder:
     # -- Stage 2 task: ConvertToSAX (+ presort in ParIS+ mode) ------------
     def _bulk_load(self, chunk_np: np.ndarray, offset: int):
         t0 = time.perf_counter()
-        x = jnp.asarray(isax.znorm(jnp.asarray(chunk_np)))
-        sax, _ = ops.paa_isax(x, self._bp, self.segments, impl=self.impl,
-                              normalize=False)
-        sax = np.asarray(jax.device_get(sax))
-        keys = _host_refine_key(sax, self.refine_bits, self.cardinality)
-        pos = np.arange(offset, offset + len(sax), dtype=np.int32)
-        if self.mode == "paris+":
-            # Incremental "tree building": the chunk is sorted into leaf
-            # order here, overlapped with the Coordinator's next read.
-            order = np.argsort(keys, kind="stable")
-            keys, sax, pos = keys[order], sax[order], pos[order]
+        # In ParIS+ mode the incremental "tree building" (presort into leaf
+        # order) happens here, overlapped with the Coordinator's next read.
+        keys, sax, pos = bulk_load_chunk(
+            chunk_np, offset,
+            segments=self.segments, cardinality=self.cardinality,
+            refine_bits=self.refine_bits, breakpoints=self._bp,
+            impl=self.impl, presort=self.mode == "paris+",
+        )
         dt = time.perf_counter() - t0
         return offset, keys, sax, pos, dt
 
@@ -188,22 +237,36 @@ class PipelineBuilder:
         stats.epochs += 1
 
     def build(self, source: SeriesSource):
-        """Run the pipeline; returns (ParISIndex, BuildStats)."""
+        """Run the pipeline; returns (ParISIndex, BuildStats).
+
+        An empty source produces an empty (zero-series) index. On failure
+        with a caller-owned ``workdir``, every epoch shard directory this
+        run created is removed — a later build into the same workdir never
+        sees partial ``e{N}`` shards.
+        """
         stats = BuildStats()
         t_start = time.perf_counter()
         workdir = self.workdir or tempfile.mkdtemp(prefix="paris_build_")
         own_workdir = self.workdir is None
         epoch_runs: List = []
-        epoch_count = 0
+        epoch_dirs: List[str] = []
         series_in_mem = 0
         mem_limit = self.mem_limit_series or (1 << 62)
         lock = threading.Lock()
+        ok = False
 
         def collect(fut: Future):
             offset, keys, sax, pos, dt = fut.result()
             with lock:
                 epoch_runs.append((offset, keys, [sax, pos]))
                 stats.convert_time += dt
+
+        def flush_epoch(runs):
+            # Record the shard dir BEFORE writing so a mid-write failure
+            # still cleans it up (caller-owned workdir, see finally).
+            d = os.path.join(workdir, f"e{len(epoch_dirs)}")
+            epoch_dirs.append(d)
+            self._construct_epoch(runs, d, stats)
 
         try:
             if self.mode == "serial":
@@ -217,11 +280,8 @@ class PipelineBuilder:
                     stats.chunks += 1
                     series_in_mem += len(chunk)
                     if series_in_mem >= mem_limit:
-                        self._construct_epoch(
-                            epoch_runs, os.path.join(workdir, f"e{epoch_count}"),
-                            stats)
+                        flush_epoch(epoch_runs)
                         epoch_runs, series_in_mem = [], 0
-                        epoch_count += 1
             else:
                 with ThreadPoolExecutor(self.n_workers) as pool:
                     pending: List[Future] = []
@@ -244,37 +304,48 @@ class PipelineBuilder:
                             pending.clear()
                             with lock:
                                 runs, epoch_runs = epoch_runs, []
-                            self._construct_epoch(
-                                runs, os.path.join(workdir, f"e{epoch_count}"),
-                                stats)
+                            flush_epoch(runs)
                             series_in_mem = 0
-                            epoch_count += 1
                     for f in pending:
                         f.result()
             if epoch_runs:
                 with lock:
                     runs, epoch_runs = epoch_runs, []
-                self._construct_epoch(
-                    runs, os.path.join(workdir, f"e{epoch_count}"), stats)
-                epoch_count += 1
+                flush_epoch(runs)
+
+            if not epoch_dirs:
+                # Empty source: no chunks were read, no epochs flushed.
+                # merge_runs([]) has nothing to return — hand back an empty
+                # index of the source's series length instead of crashing.
+                index = empty_index(source.length, self.segments,
+                                    self.cardinality)
+                stats.total_time = time.perf_counter() - t_start
+                ok = True
+                return index, stats
 
             # Finalize: merge epoch shards into the CSR index.
             t0 = time.perf_counter()
             shards = []
-            for e in range(epoch_count):
-                d = os.path.join(workdir, f"e{e}")
+            for d in epoch_dirs:
                 shards.append((
                     np.load(os.path.join(d, "keys.npy")),
                     [np.load(os.path.join(d, "sax.npy")),
                      np.load(os.path.join(d, "pos.npy"))],
                 ))
-            keys, (sax_sorted, pos_sorted) = _merge_runs(shards)
+            keys, (sax_sorted, pos_sorted) = merge_runs(shards)
             stats.finalize_time = time.perf_counter() - t0
             raw = isax.znorm(jnp.asarray(np.asarray(source.data, np.float32)))
             index = assemble_index(sax_sorted, pos_sorted, raw,
                                    self.segments, self.cardinality)
             stats.total_time = time.perf_counter() - t_start
+            ok = True
             return index, stats
         finally:
             if own_workdir:
                 shutil.rmtree(workdir, ignore_errors=True)
+            elif not ok:
+                # Caller-owned workdir + a failed run: remove the epoch
+                # shards this run created (partial or complete) so the
+                # directory is not left littered with unusable e{N} dirs.
+                for d in epoch_dirs:
+                    shutil.rmtree(d, ignore_errors=True)

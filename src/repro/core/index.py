@@ -141,6 +141,30 @@ def assemble_index(
     )
 
 
+def empty_index(
+    series_length: int,
+    segments: int = isax.DEFAULT_SEGMENTS,
+    cardinality: int = isax.DEFAULT_CARDINALITY,
+) -> ParISIndex:
+    """A structurally valid zero-series index.
+
+    The degenerate base of the live-ingest path (``core.ingest`` starts an
+    index from nothing and grows it by delta shards) and the result of
+    building from an empty :class:`~repro.core.datagen.SeriesSource`.
+    Search engines cannot run over it (there is nothing to return) —
+    callers skip zero-series components.
+    """
+    return ParISIndex(
+        sax=jnp.zeros((0, segments), jnp.uint8),
+        pos=jnp.zeros((0,), jnp.int32),
+        bucket_offsets=jnp.zeros((2 ** segments + 1,), jnp.int32),
+        raw=jnp.zeros((0, series_length), jnp.float32),
+        series_length=series_length,
+        segments=segments,
+        cardinality=cardinality,
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardedIndex:
     """S self-contained :class:`ParISIndex` shards over file-order slices.

@@ -1,0 +1,483 @@
+"""Live ingestion: delta shards, a snapshot-swapped mutable index, compaction.
+
+The builder (``core.build_pipeline``) freezes a dataset into one immutable
+:class:`~repro.core.index.ParISIndex`; everything downstream assumed that
+index never grows. This module opens the live workload — series inserted
+*while queries are in flight*, with exact answers at every point — by
+turning the frozen index into an LSM-style mutable store built entirely
+out of pieces the offline pipeline already has:
+
+  * :class:`DeltaShard` — a small immutable index over one appended batch,
+    produced by the builder's Stage-2 machinery
+    (:func:`~repro.core.build_pipeline.bulk_load_chunk`: the paa_isax
+    kernel -> packed refine keys -> ParIS+ presort into leaf order). It is
+    the same sorted-CSR layout as an epoch shard, wrapped in a
+    :class:`ParISIndex` with shard-local positions plus a global file
+    offset — exactly the :class:`~repro.core.index.ShardedIndex` shape, so
+    every downstream consumer (engines, router merge) already knows how to
+    read it.
+  * :class:`MutableIndex` — the base index plus the delta list behind an
+    atomically swapped immutable :class:`Snapshot`. Readers grab the
+    current snapshot (one attribute read — atomic under the GIL) and see a
+    consistent, complete view for the whole query; writers (append /
+    compaction publish) swap in a new snapshot under a lock. Because every
+    snapshot component is itself immutable, the per-index jitted engine
+    caches (``core.search._engine_for``) stay valid across swaps — a
+    snapshot change never invalidates a compiled engine, it only changes
+    which engines a query fans out to.
+  * compaction — :meth:`MutableIndex.compact` merges the base run and the
+    delta runs with :func:`~repro.core.build_pipeline.merge_runs`: linear
+    merges only (the ParIS+ property — every run is already in leaf order,
+    so folding deltas into the base is I/O-shaped, never a stop-the-world
+    sort). The merge runs outside any lock — queries and appends proceed
+    concurrently — and only the final snapshot swap blocks writers, for
+    microseconds. :class:`CompactionPolicy` is the size-tiered trigger
+    (compact when the delta list exceeds a count/size threshold);
+    ``serving.ingest`` runs it from a background daemon.
+
+Exactness invariant (property-tested in ``tests/test_ingest.py``): after
+ANY sequence of appends and compactions, ``exact_knn_batch`` /
+``exact_search_batch`` over the mutable index are bit-exact vs a
+from-scratch :func:`~repro.core.index.build_index` over the concatenated
+data — including snapshots taken mid-compaction. Three facts carry it:
+per-series math (znorm, PAA, SAX, distances) is independent of which
+component a series lives in; components partition the file range, so
+per-component top lists merge duplicate-free
+(:func:`~repro.core.search.merge_top_lists`, ties toward the lower file
+position — the stable-sort order); and the compactor's offset-ordered
+linear merge reproduces the stable leaf-order sort byte-for-byte.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isax
+from repro.core.build_pipeline import (
+    _host_refine_key, bulk_load_chunk, merge_runs,
+)
+from repro.core.index import ParISIndex, assemble_index, empty_index
+from repro.core.search import (
+    NO_POS, SearchConfig, SearchResult, exact_knn_batch,
+    exact_search_batch, merge_top_lists,
+)
+
+_NO_POS = int(NO_POS)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaShard:
+    """One appended batch as a small immutable leaf-ordered index.
+
+    ``index`` holds shard-local positions (0-based); the shard owns the
+    contiguous global file range ``[base, base + num_series)``. ``keys``
+    caches the sorted packed refine keys so compaction can linear-merge
+    this run without recomputing them.
+    """
+
+    index: ParISIndex
+    keys: np.ndarray  # (m,) uint64, sorted — the shard's leaf-order run
+    base: int  # global file offset of the shard's first series
+
+    @property
+    def num_series(self) -> int:
+        return self.index.num_series
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """An immutable, complete view of the mutable index at one instant.
+
+    ``components()`` lists (index, global file offset) pairs in ascending
+    offset order — the partition every reader fans out over. ``base_keys``
+    rides along so compaction never recomputes the base run's keys.
+    """
+
+    base: ParISIndex
+    base_keys: np.ndarray  # (N_base,) uint64, sorted
+    deltas: Tuple[DeltaShard, ...]
+    version: int = 0
+
+    @property
+    def num_series(self) -> int:
+        return self.base.num_series + sum(d.num_series for d in self.deltas)
+
+    def components(self) -> list:
+        out = []
+        if self.base.num_series:
+            out.append((self.base, 0))
+        out.extend((d.index, d.base) for d in self.deltas)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPolicy:
+    """Size-tiered trigger: fold deltas into the base when they pile up.
+
+    ``max_deltas``: compact once this many delta shards exist.
+    ``max_delta_series``: ... or once the deltas hold this many series
+    total (None = count-only). Either bound crossing triggers.
+    """
+
+    max_deltas: int = 4
+    max_delta_series: Optional[int] = None
+
+    def should_compact(self, snapshot: Snapshot) -> bool:
+        nd = len(snapshot.deltas)
+        if nd == 0:
+            return False
+        if nd >= self.max_deltas:
+            return True
+        if self.max_delta_series is not None:
+            return (
+                sum(d.num_series for d in snapshot.deltas)
+                >= self.max_delta_series
+            )
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionResult:
+    """What one compaction did (and what the serving layer must rewire)."""
+
+    base: ParISIndex  # the new compacted base
+    retired: Tuple[DeltaShard, ...]  # deltas folded into it
+    snapshot: Snapshot  # the published post-compaction snapshot
+    merge_time: float  # seconds spent merging (unlocked, concurrent)
+    stall_time: float  # seconds writers were blocked by the publish swap
+
+
+def _convert_batch(
+    batch: np.ndarray,
+    *,
+    segments: int,
+    cardinality: int,
+    refine_bits: int,
+    impl: str,
+) -> tuple:
+    """Stage-2 on one appended batch: (sorted keys, shard-local index).
+
+    Identical math to the builder's per-chunk task (znorm -> paa_isax ->
+    refine keys -> presort). Positions are shard-local (offset 0), so the
+    conversion needs no knowledge of where the shard will land in the
+    global file order — appenders run it OUTSIDE the snapshot lock.
+    """
+    batch = np.asarray(batch, np.float32)
+    if batch.ndim != 2 or batch.shape[0] == 0:
+        raise ValueError(
+            f"append takes a non-empty (B, n) batch, got {batch.shape}")
+    keys, sax, pos = bulk_load_chunk(
+        batch, 0, segments=segments, cardinality=cardinality,
+        refine_bits=refine_bits, impl=impl, presort=True,
+    )
+    raw = isax.znorm(jnp.asarray(batch))
+    return keys, assemble_index(sax, pos, raw, segments, cardinality)
+
+
+def build_delta_shard(
+    batch: np.ndarray,
+    base: int,
+    *,
+    segments: int = isax.DEFAULT_SEGMENTS,
+    cardinality: int = isax.DEFAULT_CARDINALITY,
+    refine_bits: int = 4,
+    impl: str = "auto",
+) -> DeltaShard:
+    """Convert one appended batch into a sorted delta shard at ``base``.
+
+    The global placement lives only in ``base``, exactly like a
+    :class:`~repro.core.index.ShardedIndex` shard.
+    """
+    keys, index = _convert_batch(
+        batch, segments=segments, cardinality=cardinality,
+        refine_bits=refine_bits, impl=impl,
+    )
+    return DeltaShard(index=index, keys=keys, base=base)
+
+
+class MutableIndex:
+    """A growing exact-search index: base + delta shards, snapshot-swapped.
+
+    Readers never lock: :meth:`snapshot` returns the current immutable
+    view and every search method runs entirely against one snapshot.
+    Writers serialize on ``_mutate`` (appends and the compaction publish);
+    at most one compaction runs at a time (``_compact``), and its merge
+    phase holds neither lock, so queries AND appends proceed while the
+    base is being rebuilt.
+
+    ``refine_bits`` must match the value the base was built with (the
+    builder's default, 4) — it defines the leaf order that compaction's
+    linear merges and a from-scratch build both produce.
+    """
+
+    def __init__(
+        self,
+        base: Optional[ParISIndex] = None,
+        *,
+        series_length: Optional[int] = None,
+        segments: int = isax.DEFAULT_SEGMENTS,
+        cardinality: int = isax.DEFAULT_CARDINALITY,
+        refine_bits: int = 4,
+        impl: str = "auto",
+    ):
+        if base is None:
+            if series_length is None:
+                raise ValueError(
+                    "series_length is required when starting empty")
+            base = empty_index(series_length, segments, cardinality)
+        self.segments = base.segments
+        self.cardinality = base.cardinality
+        self.series_length = base.series_length
+        self.refine_bits = refine_bits
+        self.impl = impl
+        base_keys = _host_refine_key(
+            np.asarray(base.sax), refine_bits, base.cardinality)
+        self._snapshot = Snapshot(base, base_keys, (), 0)
+        self._mutate = threading.Lock()
+        self._compact = threading.Lock()
+        self._stats = dict(
+            appends=0, appended_series=0, convert_time=0.0,
+            compactions=0, compacted_series=0,
+            merge_time=0.0, stall_time_max=0.0,
+        )
+
+    # ------------------------------------------------------------- readers
+    def snapshot(self) -> Snapshot:
+        """The current immutable view (atomic attribute read, no lock)."""
+        return self._snapshot
+
+    @property
+    def num_series(self) -> int:
+        return self._snapshot.num_series
+
+    @property
+    def num_deltas(self) -> int:
+        return len(self._snapshot.deltas)
+
+    # ------------------------------------------------------------- writers
+    def append(self, batch) -> DeltaShard:
+        """Insert a (B, n) batch of series; visible to queries on return.
+
+        The batch becomes one delta shard at the end of the global file
+        order. The Stage-2 conversion runs OUTSIDE the snapshot lock
+        (positions are shard-local, so it needs no offset); only the
+        offset stamp + snapshot swap are locked — concurrent appends
+        convert in parallel and the compaction publish never waits behind
+        a batch conversion.
+        """
+        t0 = time.perf_counter()
+        keys, index = _convert_batch(
+            batch, segments=self.segments, cardinality=self.cardinality,
+            refine_bits=self.refine_bits, impl=self.impl,
+        )
+        with self._mutate:
+            snap = self._snapshot
+            delta = DeltaShard(index=index, keys=keys,
+                               base=snap.num_series)
+            self._snapshot = dataclasses.replace(
+                snap, deltas=snap.deltas + (delta,),
+                version=snap.version + 1,
+            )
+            s = self._stats
+            s["appends"] += 1
+            s["appended_series"] += delta.num_series
+            s["convert_time"] += time.perf_counter() - t0
+        return delta
+
+    def compact(
+        self, on_before_publish: Optional[Callable[[], None]] = None
+    ) -> Optional[CompactionResult]:
+        """Fold every current delta into the base; linear merges only.
+
+        Grabs one snapshot, merges its runs (base + deltas, ascending
+        offset order — :func:`merge_runs` breaks key ties toward the
+        earlier run, i.e. the lower file position, reproducing the stable
+        leaf-order sort), assembles the new base, and publishes a snapshot
+        holding the new base plus whatever deltas were appended *during*
+        the merge. Queries in flight keep their old snapshot; both views
+        are complete, so exactness holds mid-compaction. Returns None when
+        there was nothing to compact.
+
+        ``on_before_publish`` is a test hook that runs after the merge but
+        before the swap — the window where "mid-compaction" is observable.
+        """
+        with self._compact:
+            snap = self._snapshot
+            m = len(snap.deltas)
+            if m == 0:
+                return None
+            t0 = time.perf_counter()
+            runs = []
+            if snap.base.num_series:
+                runs.append((snap.base_keys,
+                             [np.asarray(snap.base.sax),
+                              np.asarray(snap.base.pos)]))
+            for d in snap.deltas:
+                runs.append((d.keys,
+                             [np.asarray(d.index.sax),
+                              np.asarray(d.index.pos) + np.int32(d.base)]))
+            keys, (sax_sorted, pos_sorted) = merge_runs(runs)
+            raw = jnp.concatenate(
+                [snap.base.raw] + [d.index.raw for d in snap.deltas])
+            new_base = assemble_index(
+                sax_sorted, pos_sorted, raw, self.segments, self.cardinality)
+            merge_time = time.perf_counter() - t0
+            if on_before_publish is not None:
+                on_before_publish()
+            t1 = time.perf_counter()
+            with self._mutate:
+                cur = self._snapshot
+                # Deltas only ever append at the tail and only compaction
+                # (serialized by _compact) replaces the head, so the first
+                # m deltas of the current snapshot are exactly the ones we
+                # merged; everything after arrived during the merge and
+                # survives.
+                new_snap = Snapshot(
+                    new_base, keys, cur.deltas[m:], cur.version + 1)
+                self._snapshot = new_snap
+                stall = time.perf_counter() - t1
+                s = self._stats
+                s["compactions"] += 1
+                s["compacted_series"] += int(
+                    sum(d.num_series for d in snap.deltas))
+                s["merge_time"] += merge_time
+                s["stall_time_max"] = max(s["stall_time_max"], stall)
+            return CompactionResult(
+                base=new_base, retired=snap.deltas, snapshot=new_snap,
+                merge_time=merge_time, stall_time=stall,
+            )
+
+    def maybe_compact(
+        self, policy: CompactionPolicy
+    ) -> Optional[CompactionResult]:
+        """Compact iff ``policy`` says the delta list is due."""
+        if not policy.should_compact(self._snapshot):
+            return None
+        return self.compact()
+
+    # ------------------------------------------------------------- search
+    def exact_knn_batch(self, queries, k: int = 1, **kw) -> tuple:
+        """Exact k-NN over the live view: (Q, n) -> ((Q, k) d, (Q, k) pos).
+
+        One snapshot is fanned out over: each component answers its own
+        partition through the standard per-index engine (jitted closures
+        cached on the component, so repeated queries over an unchanged
+        component never retrace), local positions are translated by the
+        component's file offset, and the ownership-disjoint lists reduce
+        through :func:`~repro.core.search.merge_top_lists` — the same
+        protocol as the sharded router, bit-exact vs a from-scratch build
+        over the concatenated data.
+        """
+        snap = self._snapshot
+        qs = jnp.asarray(queries, jnp.float32)
+        comps = snap.components()
+        if not comps:
+            nq = qs.shape[0]
+            return (np.full((nq, k), np.float32(np.inf)),
+                    np.full((nq, k), _NO_POS, np.int32))
+        ds, ps = [], []
+        for index, off in comps:
+            d, p = exact_knn_batch(index, qs, k=k, **kw)
+            p = np.asarray(p)
+            ds.append(np.asarray(d))
+            ps.append(np.where(p >= 0, p + off, _NO_POS).astype(p.dtype))
+        return merge_top_lists(ds, ps, k)
+
+    def exact_search_batch(
+        self, queries, cfg: SearchConfig = SearchConfig()
+    ) -> SearchResult:
+        """Exact 1-NN over the live view: (Q, n) -> SearchResult of (Q,).
+
+        Per-component engines + the router's 1-NN reduction: min by
+        (distance, global position), raw reads and BSF updates summed,
+        rounds maxed.
+        """
+        snap = self._snapshot
+        qs = jnp.asarray(queries, jnp.float32)
+        comps = snap.components()
+        nq = qs.shape[0]
+        if not comps:
+            z = np.zeros((nq,), np.int32)
+            return SearchResult(
+                np.full((nq,), np.float32(np.inf)),
+                np.full((nq,), _NO_POS, np.int32), z, z, np.int32(0))
+        parts = [exact_search_batch(index, qs, cfg) for index, _ in comps]
+        best_d = np.full((nq,), np.inf, np.float32)
+        best_p = np.full((nq,), _NO_POS, np.int64)
+        for (index, off), r in zip(comps, parts):
+            d = np.asarray(r.dist_sq)
+            p = np.asarray(r.position).astype(np.int64) + off
+            better = (d < best_d) | ((d == best_d) & (p < best_p))
+            best_d = np.where(better, d, best_d)
+            best_p = np.where(better, p, best_p)
+        return SearchResult(
+            best_d,
+            best_p.astype(np.int32),
+            np.sum([np.asarray(r.raw_reads) for r in parts], axis=0),
+            np.sum([np.asarray(r.bsf_updates) for r in parts], axis=0),
+            np.max([np.asarray(r.rounds) for r in parts]),
+        )
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        with self._mutate:
+            s = dict(self._stats)
+        snap = self._snapshot
+        s.update(
+            num_series=snap.num_series,
+            num_deltas=len(snap.deltas),
+            base_series=snap.base.num_series,
+            version=snap.version,
+        )
+        return s
+
+
+@dataclasses.dataclass
+class IngestStats:
+    batches: int = 0
+    series: int = 0
+    total_time: float = 0.0
+
+    @property
+    def series_per_sec(self) -> float:
+        return self.series / max(self.total_time, 1e-9)
+
+
+class IngestPipeline:
+    """Streaming front of the mutable index: batches in, delta shards out.
+
+    The online analogue of the builder's Coordinator + Stage-2: callers
+    hand it raw (B, n) batches; ``chunk_series`` optionally re-chunks big
+    appends so each delta shard stays epoch-shard-sized (one
+    :func:`bulk_load_chunk` call per chunk, same knob as the builder's
+    double-buffer size). Tracks insert throughput for the benchmarks.
+    """
+
+    def __init__(
+        self, index: MutableIndex, *, chunk_series: Optional[int] = None
+    ):
+        if chunk_series is not None and chunk_series < 1:
+            raise ValueError("chunk_series must be >= 1")
+        self.index = index
+        self.chunk_series = chunk_series
+        self.stats = IngestStats()
+
+    def append(self, batch) -> List[DeltaShard]:
+        """Ingest one batch (re-chunked if configured); returns its shards."""
+        batch = np.asarray(batch, np.float32)
+        t0 = time.perf_counter()
+        step = self.chunk_series or max(len(batch), 1)
+        shards = [
+            self.index.append(batch[s: s + step])
+            for s in range(0, len(batch), step)
+        ]
+        self.stats.batches += 1
+        self.stats.series += len(batch)
+        self.stats.total_time += time.perf_counter() - t0
+        return shards

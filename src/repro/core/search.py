@@ -62,6 +62,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import isax
 from repro.core.index import ParISIndex
@@ -197,6 +198,30 @@ def dedup_mask(cand_pos: jax.Array, top_d: jax.Array,
         (cand_pos[:, :, None] == top_p[:, None, :])
         & (top_d[:, None, :] < INF),
         axis=2,
+    )
+
+
+def merge_top_lists(dists: list, positions: list, k: int) -> tuple:
+    """Merge ownership-disjoint (..., k_i) top lists into the global top-k.
+
+    The one merge protocol shared by every partitioned exact-search caller
+    (``serving.router.ShardedSearchRouter``, ``core.ingest.MutableIndex``):
+    per-partition result lists are concatenated along the last axis —
+    callers pass partitions in ascending file-offset order with positions
+    already translated to global file offsets — and reduced with a stable
+    ascending argsort on distance, so ties (and only ties) resolve toward
+    the lower file position and sentinel (INF, ``NO_POS``) slots sink,
+    surviving only when the whole datastore holds fewer than ``k`` series.
+    Partitions own disjoint file ranges, so the concatenation is
+    duplicate-free by construction and the k smallest entries are exactly
+    the single-index answer.
+    """
+    d = np.concatenate([np.asarray(x) for x in dists], axis=-1)
+    p = np.concatenate([np.asarray(x) for x in positions], axis=-1)
+    order = np.argsort(d, axis=-1, kind="stable")[..., :k]
+    return (
+        np.take_along_axis(d, order, axis=-1),
+        np.take_along_axis(p, order, axis=-1),
     )
 
 

@@ -5,19 +5,38 @@ Retrieval serving architecture (batcher -> router -> per-shard engines)::
     submit(query)                      one Future per request
         |
     ShardedSearchRouter                fan-out + global merge (serving/
-        |                              router.py): S file-order shards,
+        |                              router.py): file-order shards,
         |  per-shard fan-out           ownership-disjoint (k,) top lists,
-        v                              concat + k-smallest merge with
-    SearchRequestBatcher  x S          NO_POS sentinels and file-offset
-        |                              translation
-        |  bounded pending queue       admission control: block / reject /
-        |  (max_pending + policy)      shed-oldest, QueueFullError
-        v                              backpressure, depth/shed counters
-    make_batch_engine(shard)  x S      core.search engine factory: per-
-        |                              index jitted closures, pow2 query
-        v                              buckets (no per-shape retracing)
+        v                              merge_top_lists (stable k-smallest,
+    SearchRequestBatcher  x S          NO_POS sentinels, file-offset
+        |                              translation); the shard set is
+        |  bounded pending queue       DYNAMIC (add_shard / swap_shards,
+        |  (max_pending + policy)      reader-writer locked) — admission
+        v                              control: block / reject /
+    make_batch_engine(shard)  x S      shed-oldest, QueueFullError
+        |                              backpressure, depth/shed/merge-
+        v                              latency counters (stats())
     exact_*_batch RDC loop             one fused (Q, N) lower-bound pass +
                                        one shared while_loop per shard
+
+Live ingestion rides the same stack (serving/ingest.py)::
+
+    append(batch)
+        |
+    IngestingRouter                    core.ingest.MutableIndex (base +
+        |                              delta shards behind an atomically
+        |  IngestPipeline (Stage-2:    swapped snapshot) wired into the
+        |  paa_isax -> refine keys ->  router: every appended batch
+        |  presort) -> DeltaShard      becomes a delta shard AND a routed
+        v                              shard (own batcher + engine);
+    router.add_shard(delta)            queries stay exact at every point
+        |
+    compaction daemon                  size-tiered CompactionPolicy; folds
+        |                              deltas into the base with linear
+        v                              merges (merge_runs — the ParIS+
+    router.swap_shards(old -> new)     property), then rewires the router
+                                       in ONE atomic shard-set swap, so
+                                       queries never see a partial view
 
 A single-index deployment is the same stack minus the router layer: one
 ``SearchRequestBatcher`` straight over one engine. The decode-side
@@ -27,11 +46,12 @@ decode step).
 
 from repro.serving.serve_step import (
     greedy_generate, make_decode_step, make_prefill_step)
+from repro.serving.ingest import IngestingRouter
 from repro.serving.kv_cache import pad_cache_to, shard_cache
 from repro.serving.router import ShardedSearchRouter
 from repro.serving.search_batcher import (
     QueueFullError, SearchRequestBatcher)
 
 __all__ = ["greedy_generate", "make_decode_step", "make_prefill_step",
-           "pad_cache_to", "shard_cache", "QueueFullError",
-           "SearchRequestBatcher", "ShardedSearchRouter"]
+           "pad_cache_to", "shard_cache", "IngestingRouter",
+           "QueueFullError", "SearchRequestBatcher", "ShardedSearchRouter"]

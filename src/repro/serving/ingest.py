@@ -1,0 +1,222 @@
+"""Ingest-while-serving: a mutable index wired into the sharded router.
+
+``core.ingest`` gives exact search over a growing datastore;
+``serving.router`` gives streamed, admission-controlled, multi-threaded
+query answering over a dynamic shard set. :class:`IngestingRouter` is the
+production composition of the two — the ParIS+ story ("index construction
+overlaps completely with I/O") carried into serving: series are inserted
+while queries are in flight, every answer stays exact, and compaction
+never blocks either side.
+
+Data path::
+
+    append(batch)  ----->  IngestPipeline -> DeltaShard      (Stage-2:
+        |                       |                             paa_isax ->
+        |                       v                             refine keys ->
+        |                  MutableIndex snapshot swap         presort)
+        |                       |
+        +--- router.add_shard(delta.index, delta.base) ------ the delta is
+                                                              immediately a
+                                                              first-class
+                                                              routed shard
+    compaction daemon (background thread):
+        policy.should_compact(snapshot)?  -> mutable.compact()
+            merge_runs(base + deltas)        (linear merges, no locks held;
+            assemble new base                 queries/appends keep flowing)
+            publish snapshot                 (microsecond swap)
+        -> router.swap_shards(old base shards + folded delta shards,
+                              new base resharded S ways)     (atomic:
+                              every query sees a complete partition)
+
+Consistency: the router's shard set always covers exactly the series of
+some recent snapshot — appends register their delta *after* the mutable
+publish (a query racing the append sees the pre-append view; the append
+is not complete until registration returns), and the compaction rewire
+replaces old components with their compacted equivalent covering the same
+file range in one atomic swap. Exactness therefore holds at every
+instant, including mid-compaction (tested).
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.core.index import ParISIndex, build_sharded_index
+from repro.core.ingest import (
+    CompactionPolicy, CompactionResult, IngestPipeline, MutableIndex,
+)
+
+
+class IngestingRouter:
+    """A :class:`~repro.serving.router.ShardedSearchRouter` that grows.
+
+    Parameters
+    ----------
+    base:            the starting datastore — a built :class:`ParISIndex`,
+                     a :class:`MutableIndex` (possibly already holding
+                     deltas), or None with ``series_length`` to start
+                     empty.
+    num_base_shards: how many file-order shards the base index is split
+                     into (and re-split into after every compaction).
+    compaction_policy: size-tiered compaction trigger; the background daemon
+                     (``start()``) evaluates it every ``compact_tick_ms``.
+                     Pass None to disable automatic compaction
+                     (``compact_now()`` still works).
+    chunk_series:    re-chunk big appended batches into delta shards of at
+                     most this many series (None = one shard per batch).
+    series_length:   required when ``base`` is None.
+    **router_knobs:  forwarded to :class:`ShardedSearchRouter` (k,
+                     max_batch, admission control, engine knobs ...).
+
+    ``submit``/``search_batch``/``poll``/``drain``/``stats`` delegate to
+    the router; ``append`` ingests a batch and registers its delta
+    shard(s); the daemon folds deltas into the base and rewires the
+    router atomically.
+    """
+
+    def __init__(
+        self,
+        base: Union[ParISIndex, MutableIndex, None],
+        num_base_shards: int = 1,
+        *,
+        compaction_policy: Optional[CompactionPolicy] = CompactionPolicy(),
+        compact_tick_ms: float = 20.0,
+        chunk_series: Optional[int] = None,
+        series_length: Optional[int] = None,
+        **router_knobs,
+    ):
+        from repro.serving.router import ShardedSearchRouter
+
+        if num_base_shards < 1:
+            raise ValueError("num_base_shards must be >= 1")
+        if isinstance(base, MutableIndex):
+            self.mutable = base
+        else:
+            self.mutable = MutableIndex(base, series_length=series_length)
+        self.num_base_shards = num_base_shards
+        self.policy = compaction_policy
+        self.compact_tick_ms = compact_tick_ms
+        self.pipeline = IngestPipeline(self.mutable, chunk_series=chunk_series)
+        self.router = ShardedSearchRouter(None, **router_knobs)
+        # Service-level bookkeeping: which router shard ids implement the
+        # current base and each live delta. Guarded by _svc so appends and
+        # the compaction rewire never race the sid maps.
+        self._svc = threading.Lock()
+        self._base_sids: List[int] = []
+        self._delta_sids: Dict[int, int] = {}  # id(DeltaShard) -> sid
+        self._thread: Optional[threading.Thread] = None
+        self._stop_evt = threading.Event()
+        with self._svc:
+            snap = self.mutable.snapshot()
+            if snap.base.num_series:
+                self._base_sids = self._attach_base(snap.base)
+            for d in snap.deltas:
+                self._delta_sids[id(d)] = self.router.add_shard(
+                    d.index, d.base)
+
+    def _attach_base(self, base: ParISIndex) -> List[int]:
+        shards = min(self.num_base_shards, base.num_series)
+        sharded = build_sharded_index(base, shards)
+        return self.router.swap_shards(
+            (), list(zip(sharded.shards, sharded.offsets)))
+
+    # -------------------------------------------------------------- ingest
+    def append(self, batch) -> int:
+        """Ingest one (B, n) batch; series are queryable on return.
+
+        Each resulting delta shard attaches to the router with its own
+        admission-controlled batcher + engine. Returns the number of
+        series appended.
+        """
+        batch = np.asarray(batch, np.float32)
+        with self._svc:
+            for delta in self.pipeline.append(batch):
+                self._delta_sids[id(delta)] = self.router.add_shard(
+                    delta.index, delta.base)
+        return len(batch)
+
+    # ---------------------------------------------------------- compaction
+    def compact_now(self) -> Optional[CompactionResult]:
+        """Run one compaction (if any deltas exist) and rewire the router.
+
+        The merge runs without holding the service lock — appends and
+        queries proceed; only the sid-map rewire at the end is locked.
+        """
+        res = self.mutable.compact()
+        if res is None:
+            return None
+        with self._svc:
+            retire = list(self._base_sids)
+            for d in res.retired:
+                retire.append(self._delta_sids.pop(id(d)))
+            # ONE atomic swap: retiring the old components and attaching
+            # the compacted base together keeps coverage exact — two
+            # separate transitions would expose a double- or un-covered
+            # file range to queries in the window between them.
+            shards = min(self.num_base_shards, res.base.num_series)
+            sharded = build_sharded_index(res.base, shards)
+            self._base_sids = self.router.swap_shards(
+                retire, list(zip(sharded.shards, sharded.offsets)))
+        return res
+
+    def _compact_loop(self):
+        tick = max(self.compact_tick_ms, 1.0) / 1e3
+        while not self._stop_evt.wait(tick):
+            try:
+                if (self.policy is not None
+                        and self.policy.should_compact(
+                            self.mutable.snapshot())):
+                    self.compact_now()
+            except Exception:
+                # A failed compaction leaves the old (complete) view
+                # serving; the daemon must survive to retry.
+                pass
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self, tick_ms: Optional[float] = None) -> None:
+        """Start the per-shard flushers and the compaction daemon."""
+        self.router.start(tick_ms)
+        if self._thread is None and self.policy is not None:
+            self._stop_evt.clear()
+            self._thread = threading.Thread(
+                target=self._compact_loop, name="compaction", daemon=True)
+            self._thread.start()
+
+    def stop(self, drain: bool = True, compact: bool = False) -> None:
+        """Stop daemons; optionally run one final compaction."""
+        if self._thread is not None:
+            self._stop_evt.set()
+            self._thread.join()
+            self._thread = None
+        if compact:
+            self.compact_now()
+        self.router.stop(drain=drain)
+
+    # ------------------------------------------------------------- queries
+    @property
+    def num_series(self) -> int:
+        return self.mutable.num_series
+
+    def submit(self, query) -> Future:
+        return self.router.submit(query)
+
+    def search_batch(self, queries):
+        return self.router.search_batch(queries)
+
+    def poll(self) -> int:
+        return self.router.poll()
+
+    def drain(self) -> int:
+        return self.router.drain()
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """Router saturation counters + ingest/compaction figures."""
+        s = self.router.stats()
+        s["ingest"] = self.mutable.stats()
+        s["ingest"]["series_per_sec"] = self.pipeline.stats.series_per_sec
+        return s

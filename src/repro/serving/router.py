@@ -5,7 +5,7 @@ The single-host analogue of ``core.distributed.make_distributed_batch_search``
 partitioned index, and this is that shape served from threads instead of a
 ``shard_map`` mesh:
 
-  * the datastore is split into S self-contained file-order shards
+  * the datastore is split into self-contained file-order shards
     (:func:`repro.core.index.build_sharded_index`); each shard gets its own
     jitted batch engine (:func:`repro.core.search.make_batch_engine`, pow2
     query buckets so no per-shape retracing) and its own admission-
@@ -13,12 +13,22 @@ partitioned index, and this is that shape served from threads instead of a
   * ``submit(query)`` fans the query out to every shard's batcher and
     returns ONE future; when the last shard answers, the per-shard (k,)
     top lists are merged into the global answer on the answering thread —
-    the same ``NO_POS``/dedup protocol as the distributed kernel: shards
+    the shared :func:`repro.core.search.merge_top_lists` protocol: shards
     partition the file range, so per-shard lists are ownership-disjoint
-    and the merge is a plain concat + k-smallest selection with
+    and the merge is a plain concat + stable k-smallest selection with
     shard-local positions translated by the shard's file offset (sentinel
     (INF, ``NO_POS``) slots sink and survive only when the whole datastore
     holds fewer than k series);
+  * the shard set is DYNAMIC: :meth:`add_shard` attaches a new file-range
+    shard (its own batcher + engine) to a running router, and
+    :meth:`swap_shards` atomically retires shards and registers their
+    replacements — the live-ingest path (``serving.ingest``) registers
+    every fresh delta shard and swaps the old base + folded deltas for
+    the compacted base without blocking queries. Every query fans out
+    over one consistent shard-set snapshot (a reader/writer lock: submits
+    share, swaps exclude), and a retired shard answers everything it
+    accepted before it detaches, so in-flight requests always merge a
+    complete partition of some valid view;
   * thread-level parallelism comes from the per-shard daemon flushers
     (``start()``): each shard's batcher runs ``inline_flush=False``, so
     its own thread performs its engine calls — S shards search
@@ -28,7 +38,9 @@ partitioned index, and this is that shape served from threads instead of a
     as a :class:`~repro.serving.search_batcher.QueueFullError` raised from
     ``submit``, ``shed-oldest`` fails the merged future of the shed
     request, ``block`` applies backpressure to the submitter. ``stats()``
-    aggregates queue-depth peaks and shed/reject counts across shards.
+    aggregates queue depths, shed/reject counts and merge latency across
+    shards (retired shards' counters are folded in, so totals stay
+    cumulative across swaps).
 
 Exactness: every shard scans (and prunes) only its own partition, and the
 union of partitions is the datastore, so the merged k-NN list is exactly
@@ -39,29 +51,83 @@ order, with ties broken toward the lower file position.
 
 from __future__ import annotations
 
+import dataclasses
 import threading
+import time
 from concurrent.futures import Future
-from typing import List, Optional, Union
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.index import (
     ParISIndex, ShardedIndex, build_sharded_index,
 )
-from repro.core.search import NO_POS, SearchConfig, SearchResult
+from repro.core.search import (
+    NO_POS, SearchConfig, SearchResult, merge_top_lists,
+)
 from repro.serving.search_batcher import SearchRequestBatcher
 
 _NO_POS = int(NO_POS)
 
 
+class _RWLock:
+    """Tiny writer-priority reader/writer lock: submits share, swaps exclude.
+
+    Readers (submit fan-outs) may block inside the critical section on a
+    ``block``-policy batcher — the writer just waits; space is freed by
+    the batcher daemons, which never take this lock, so there is no
+    deadlock, only a delayed swap (the router keeps serving the old view
+    meanwhile). A waiting writer gates NEW readers out (writer priority):
+    a sustained stream of overlapping submits must not starve the
+    compaction rewire indefinitely.
+    """
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._readers = 0
+        self._writers_waiting = 0
+
+    def acquire_read(self):
+        with self._cond:
+            while self._writers_waiting:
+                self._cond.wait()
+            self._readers += 1
+
+    def release_read(self):
+        with self._cond:
+            self._readers -= 1
+            if self._readers == 0:
+                self._cond.notify_all()
+
+    def acquire_write(self):
+        self._cond.acquire()
+        self._writers_waiting += 1
+        while self._readers:
+            self._cond.wait()
+        self._writers_waiting -= 1
+
+    def release_write(self):
+        self._cond.notify_all()
+        self._cond.release()
+
+
+@dataclasses.dataclass
+class _RouterShard:
+    sid: int  # stable shard id (registration order)
+    offset: int  # global file offset of the shard's range
+    batcher: SearchRequestBatcher
+
+
 class ShardedSearchRouter:
-    """Fan queries out to S per-shard batch engines; merge exact answers.
+    """Fan queries out to per-shard batch engines; merge exact answers.
 
     Parameters
     ----------
     index:       a single assembled :class:`ParISIndex` (split into
-                 ``num_shards`` file-order shards here) or a prebuilt
-                 :class:`ShardedIndex`.
+                 ``num_shards`` file-order shards here), a prebuilt
+                 :class:`ShardedIndex`, or None for an initially empty
+                 router (shards attach later via :meth:`add_shard` — the
+                 live-ingest bootstrap).
     num_shards:  shard count when ``index`` is a ParISIndex (ignored for a
                  prebuilt ShardedIndex).
     k:           None -> exact 1-NN (``SearchResult`` per request with
@@ -74,12 +140,13 @@ class ShardedSearchRouter:
 
     Call ``start()`` to spawn one daemon flusher per shard (the serving
     mode: S threads search concurrently); without it, ``poll()`` or
-    ``drain()`` advance all shards from the calling thread.
+    ``drain()`` advance all shards from the calling thread. Shards added
+    later inherit the same knobs (and a daemon, if started).
     """
 
     def __init__(
         self,
-        index: Union[ParISIndex, ShardedIndex],
+        index: Union[ParISIndex, ShardedIndex, None],
         num_shards: Optional[int] = None,
         *,
         k: Optional[int] = None,
@@ -95,6 +162,32 @@ class ShardedSearchRouter:
         policy: str = "block",
         block_timeout_ms: Optional[float] = None,
     ):
+        self.k = k
+        # One knob-to-engine mapping for single-batcher and sharded
+        # deployments alike: every shard batcher (initial or dynamically
+        # added) builds its jitted engine from this same knob set.
+        self._knobs = dict(
+            k=k, max_batch=max_batch, max_wait_ms=max_wait_ms, cfg=cfg,
+            round_size=round_size, select=select, impl=impl,
+            leaf_cap=leaf_cap, min_bucket=min_bucket,
+            max_pending=max_pending, policy=policy,
+            block_timeout_ms=block_timeout_ms,
+        )
+        self._entries: List[_RouterShard] = []
+        self._next_sid = 0
+        self._shards_rw = _RWLock()
+        self._reg_lock = threading.Lock()  # serializes swaps/adds
+        self._started = False
+        self._stats_lock = threading.Lock()
+        self._merge_stats = dict(merges=0, merge_ms_sum=0.0, merge_ms_max=0.0)
+        self._retired_totals = dict(
+            shards=0, submitted=0, answered=0, batches=0, padded_queries=0,
+            rejected=0, shed=0, blocked=0, queue_depth_peak=0,
+            latency_ms_max=0.0, batch_size_sum=0,
+        )
+        self.sharded: Optional[ShardedIndex] = None
+        if index is None:
+            return
         if isinstance(index, ShardedIndex):
             self.sharded = index
         else:
@@ -102,50 +195,125 @@ class ShardedSearchRouter:
                 raise ValueError(
                     "num_shards is required when passing a single index")
             self.sharded = build_sharded_index(index, num_shards)
-        self.k = k
-        # Each shard batcher builds its own jitted engine from the shared
-        # knobs (make_batch_engine via SearchRequestBatcher.__init__) —
-        # ONE knob-to-engine mapping for single-batcher and sharded
-        # deployments alike.
-        self._batchers: List[SearchRequestBatcher] = [
-            SearchRequestBatcher(
-                shard, k=k, max_batch=max_batch, max_wait_ms=max_wait_ms,
-                cfg=cfg, round_size=round_size, select=select, impl=impl,
-                leaf_cap=leaf_cap, min_bucket=min_bucket,
-                max_pending=max_pending, policy=policy,
-                block_timeout_ms=block_timeout_ms, inline_flush=False,
-            )
-            for shard in self.sharded.shards
-        ]
-        self._started = False
+        for shard, off in zip(self.sharded.shards, self.sharded.offsets):
+            self._register(shard, off)
+
+    def _register(self, index: ParISIndex, offset: int) -> int:
+        """Create a shard entry (caller holds the write lock or __init__).
+
+        The entry list is REPLACED, never mutated in place: lock-free
+        readers (``poll``/``drain`` snapshot the reference) must always
+        see a complete list, and an in-place ``list.sort`` exposes a
+        transiently empty one.
+        """
+        b = SearchRequestBatcher(index, inline_flush=False, **self._knobs)
+        sid = self._next_sid
+        self._next_sid += 1
+        self._entries = sorted(
+            self._entries + [_RouterShard(sid, int(offset), b)],
+            key=lambda e: e.offset)
+        if self._started:
+            b.start()
+        return sid
 
     @property
     def num_shards(self) -> int:
-        return self.sharded.num_shards
+        return len(self._entries)
+
+    # --------------------------------------------------- dynamic shard set
+    def add_shard(self, index: ParISIndex, offset: int) -> int:
+        """Attach one shard owning file range [offset, offset+N) live.
+
+        The shard gets its own admission-controlled batcher + jitted
+        engine (the router's shared knob set) and, on a started router,
+        its own daemon flusher. Returns the shard id for later
+        retirement. Queries submitted after this call fan out over it.
+        """
+        return self.swap_shards((), [(index, offset)])[0]
+
+    def swap_shards(
+        self,
+        retire: Sequence[int],
+        add: Sequence[Tuple[ParISIndex, int]],
+    ) -> List[int]:
+        """Atomically retire shard ids and register replacement shards.
+
+        The compaction rewire: the old base shards + folded delta shards
+        detach and the compacted base attaches in ONE shard-set
+        transition, so every query sees either the complete old partition
+        or the complete new one — never a mix. Retired batchers stop and
+        drain *after* detaching: anything they accepted before the swap
+        is still answered, and their counters fold into the router totals
+        (``stats()`` stays cumulative). Returns the new shard ids.
+        """
+        retire = set(retire)
+        with self._reg_lock:
+            self._shards_rw.acquire_write()
+            try:
+                unknown = retire - {e.sid for e in self._entries}
+                if unknown:
+                    raise ValueError(f"unknown shard ids: {sorted(unknown)}")
+                old = [e for e in self._entries if e.sid in retire]
+                self._entries = [
+                    e for e in self._entries if e.sid not in retire]
+                new_sids = [self._register(idx, off) for idx, off in add]
+            finally:
+                self._shards_rw.release_write()
+            # Outside the write lock: joining a daemon mid-engine-call can
+            # take a while, and new-view queries must not wait on it.
+            for e in old:
+                e.batcher.stop(drain=True)
+                s = e.batcher.stats()
+                with self._stats_lock:
+                    t = self._retired_totals
+                    t["shards"] += 1
+                    for key in ("submitted", "answered", "batches",
+                                "padded_queries", "rejected", "shed",
+                                "blocked", "batch_size_sum"):
+                        t[key] += s[key]
+                    t["queue_depth_peak"] = max(
+                        t["queue_depth_peak"], s["queue_depth_peak"])
+                    t["latency_ms_max"] = max(
+                        t["latency_ms_max"], s["latency_ms_max"])
+        return new_sids
 
     # ------------------------------------------------------------- request
     def submit(self, query) -> Future:
         """Fan one (n,) query out to all shards; one Future for the merge.
 
+        The fan-out snapshots the shard set (shared lock), so a
+        concurrent ``swap_shards`` either misses this query entirely or
+        sees it on every retired shard — both give a complete partition.
         The merge runs on whichever shard thread answers last. Under
         ``reject``, saturation raises
         :class:`~repro.serving.search_batcher.QueueFullError` here; under
-        ``shed-oldest``, a shed request's merged future carries it.
+        ``shed-oldest``, a shed request's merged future carries it. On an
+        empty router (no shards yet) the answer is the empty-datastore
+        sentinel, resolved immediately.
         """
         q = np.asarray(query, np.float32)
         if q.ndim != 1:
             raise ValueError(f"submit takes one (n,) query, got {q.shape}")
         out: Future = Future()
-        shard_futs = []
+        self._shards_rw.acquire_read()
         try:
-            for b in self._batchers:
-                shard_futs.append(b.submit(q))
-        except BaseException as e:
-            # A shard turned the request away mid-fan-out: the request
-            # fails as a whole. Shards that already accepted answer into
-            # a dead callback — harmless (exact search is idempotent).
-            out.set_exception(e)
-            raise
+            entries = list(self._entries)
+            if not entries:
+                out.set_result(self._empty_result())
+                return out
+            shard_futs = []
+            try:
+                for e in entries:
+                    shard_futs.append(e.batcher.submit(q))
+            except BaseException as exc:
+                # A shard turned the request away mid-fan-out: the request
+                # fails as a whole. Shards that already accepted answer
+                # into a dead callback — harmless (exact search is
+                # idempotent).
+                out.set_exception(exc)
+                raise
+        finally:
+            self._shards_rw.release_read()
         parts: List[Optional[tuple]] = [None] * len(shard_futs)
         remaining = [len(shard_futs)]
         lock = threading.Lock()
@@ -160,54 +328,72 @@ class ShardedSearchRouter:
                     remaining[0] -= 1
                     last = remaining[0] == 0
                 if last:
-                    self._finish(out, parts)
+                    self._finish(out, parts, entries)
             return cb
 
         for s, f in enumerate(shard_futs):
             f.add_done_callback(make_cb(s))
         return out
 
-    def _finish(self, out: Future, parts: list) -> None:
+    def _empty_result(self):
+        if self.k is None:
+            z = np.int32(0)
+            return SearchResult(
+                np.float32(np.inf), np.int32(_NO_POS), z, z, z)
+        return (np.full((self.k,), np.float32(np.inf)),
+                np.full((self.k,), _NO_POS, np.int32))
+
+    def _finish(self, out: Future, parts: list, entries: list) -> None:
         err = next((e for tag, e in parts if tag == "err"), None)
         if err is not None:
             out.set_exception(err)
             return
         try:
+            t0 = time.perf_counter()
             results = [r for _, r in parts]
             if self.k is None:
-                out.set_result(self._merge_1nn(results))
+                merged = self._merge_1nn(results, entries)
             else:
-                out.set_result(self._merge_knn(results))
+                merged = self._merge_knn(results, entries)
+            dt_ms = (time.perf_counter() - t0) * 1e3
+            with self._stats_lock:
+                m = self._merge_stats
+                m["merges"] += 1
+                m["merge_ms_sum"] += dt_ms
+                m["merge_ms_max"] = max(m["merge_ms_max"], dt_ms)
+            out.set_result(merged)
         except BaseException as e:  # noqa: BLE001 — surface merge bugs
             out.set_exception(e)
 
-    def _global_pos(self, pos, s):
+    @staticmethod
+    def _global_pos(pos, entry: _RouterShard):
         """Shard-local positions -> file positions (NO_POS passes through)."""
         pos = np.asarray(pos)
-        off = self.sharded.offsets[s]
-        return np.where(pos >= 0, pos + off, _NO_POS).astype(pos.dtype)
+        return np.where(pos >= 0, pos + entry.offset, _NO_POS).astype(
+            pos.dtype)
 
-    def _merge_knn(self, results: list) -> tuple:
-        # Ownership-disjoint (k,) lists -> global k smallest. Stable sort
-        # on distance: ties (and only ties) resolve toward the earlier
-        # shard, i.e. the lower file range; sentinel INF slots sink.
-        d = np.concatenate([np.asarray(r[0]) for r in results])
-        p = np.concatenate(
-            [self._global_pos(r[1], s) for s, r in enumerate(results)])
-        order = np.argsort(d, kind="stable")[: self.k]
-        return d[order], p[order]
+    def _merge_knn(self, results: list, entries: list) -> tuple:
+        # Ownership-disjoint (k,) lists -> global k smallest, via the
+        # shared merge protocol (entries are offset-ascending, so ties —
+        # and only ties — resolve toward the lower file range; sentinel
+        # INF slots sink).
+        return merge_top_lists(
+            [r[0] for r in results],
+            [self._global_pos(r[1], e) for e, r in zip(entries, results)],
+            self.k,
+        )
 
-    def _merge_1nn(self, results: list) -> SearchResult:
+    def _merge_1nn(self, results: list, entries: list) -> SearchResult:
         dists = [float(r.dist_sq) for r in results]
         best = min(
             range(len(results)),
             key=lambda s: (dists[s], int(self._global_pos(
-                results[s].position, s))),
+                results[s].position, entries[s]))),
         )
         r = results[best]
         return SearchResult(
             np.asarray(r.dist_sq),
-            self._global_pos(r.position, best),
+            self._global_pos(r.position, entries[best]),
             np.sum([np.asarray(x.raw_reads) for x in results]),
             np.sum([np.asarray(x.bsf_updates) for x in results]),
             np.max([np.asarray(x.rounds) for x in results]),
@@ -252,23 +438,32 @@ class ShardedSearchRouter:
     # ----------------------------------------------------------- lifecycle
     def start(self, tick_ms: Optional[float] = None) -> None:
         """Spawn one daemon flusher per shard (concurrent shard search)."""
-        for b in self._batchers:
-            b.start(tick_ms)
-        self._started = True
+        self._shards_rw.acquire_read()
+        try:
+            self._started = True
+            for e in self._entries:
+                e.batcher.start(tick_ms)
+        finally:
+            self._shards_rw.release_read()
 
     def stop(self, drain: bool = True) -> None:
         """Stop all shard flushers; by default answer what is left."""
-        for b in self._batchers:
-            b.stop(drain=drain)
-        self._started = False
+        self._shards_rw.acquire_read()
+        try:
+            self._started = False
+            entries = list(self._entries)
+        finally:
+            self._shards_rw.release_read()
+        for e in entries:
+            e.batcher.stop(drain=drain)
 
     def poll(self) -> int:
         """Advance every shard's due flushes from the calling thread."""
-        return sum(b.poll() for b in self._batchers)
+        return sum(e.batcher.poll() for e in list(self._entries))
 
     def drain(self) -> int:
         """Flush every shard to empty; returns per-shard answered total."""
-        return sum(b.drain() for b in self._batchers)
+        return sum(e.batcher.drain() for e in list(self._entries))
 
     # -------------------------------------------------------------- stats
     def stats(self) -> dict:
@@ -276,27 +471,55 @@ class ShardedSearchRouter:
 
         Counts are per *shard request* (each submitted query fans out to
         ``num_shards`` shard requests); ``submitted``/``answered``/
-        ``rejected``/``shed`` therefore sum over shards. ``queue_depth_peak``
-        is the max over shards; latency figures are worst-shard.
+        ``rejected``/``shed`` therefore sum over shards — including shards
+        already retired by :meth:`swap_shards`, so totals are cumulative
+        across the router's life. ``queue_depth_peak`` is the max over
+        shards; latency figures are worst-shard. ``queue_depths`` is the
+        instantaneous per-live-shard pending depth, and ``merge_*`` time
+        the router-side global merge — together they let a caller spot
+        saturation without poking batcher internals.
         """
-        per = [b.stats() for b in self._batchers]
+        self._shards_rw.acquire_read()
+        try:
+            live = [(e.sid, e.offset, e.batcher.stats())
+                    for e in self._entries]
+        finally:
+            self._shards_rw.release_read()
+        per = [s for _, _, s in live]
+        with self._stats_lock:
+            ret = dict(self._retired_totals)
+            merge = dict(self._merge_stats)
         agg = dict(
-            num_shards=self.num_shards,
-            submitted=sum(s["submitted"] for s in per),
-            answered=sum(s["answered"] for s in per),
-            batches=sum(s["batches"] for s in per),
-            padded_queries=sum(s["padded_queries"] for s in per),
-            rejected=sum(s["rejected"] for s in per),
-            shed=sum(s["shed"] for s in per),
-            blocked=sum(s["blocked"] for s in per),
+            num_shards=len(per),
+            retired_shards=ret["shards"],
+            submitted=sum(s["submitted"] for s in per) + ret["submitted"],
+            answered=sum(s["answered"] for s in per) + ret["answered"],
+            batches=sum(s["batches"] for s in per) + ret["batches"],
+            padded_queries=(sum(s["padded_queries"] for s in per)
+                            + ret["padded_queries"]),
+            rejected=sum(s["rejected"] for s in per) + ret["rejected"],
+            shed=sum(s["shed"] for s in per) + ret["shed"],
+            blocked=sum(s["blocked"] for s in per) + ret["blocked"],
             queued=sum(s["queued"] for s in per),
-            queue_depth_peak=max(s["queue_depth_peak"] for s in per),
-            latency_ms_avg=max(s["latency_ms_avg"] for s in per),
-            latency_ms_max=max(s["latency_ms_max"] for s in per),
+            queue_depths=[s["queued"] for s in per],
+            queue_depth_peak=max(
+                [s["queue_depth_peak"] for s in per]
+                + [ret["queue_depth_peak"]], default=0),
+            latency_ms_avg=max(
+                (s["latency_ms_avg"] for s in per), default=0.0),
+            latency_ms_max=max(
+                [s["latency_ms_max"] for s in per]
+                + [ret["latency_ms_max"]], default=0.0),
             batch_size_avg=(
-                sum(s["batch_size_sum"] for s in per)
-                / max(sum(s["batches"] for s in per), 1)),
-            qps=min(s["qps"] for s in per),
+                (sum(s["batch_size_sum"] for s in per)
+                 + ret["batch_size_sum"])
+                / max(sum(s["batches"] for s in per) + ret["batches"], 1)),
+            qps=min((s["qps"] for s in per), default=0.0),
+            merges=merge["merges"],
+            merge_ms_avg=merge["merge_ms_sum"] / max(merge["merges"], 1),
+            merge_ms_max=merge["merge_ms_max"],
             per_shard=per,
+            shard_ids=[sid for sid, _, _ in live],
+            shard_offsets=[off for _, off, _ in live],
         )
         return agg
