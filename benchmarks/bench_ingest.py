@@ -1,14 +1,26 @@
-"""Live-ingestion benchmark: insert throughput, query latency under
-concurrent ingest, and compaction stall — plus the exactness gate.
+"""Live-ingestion benchmark: insert throughput, bounded leveled merges,
+fused multi-component queries, latency under ingest — plus the gate.
 
-Four legs over the ``core.ingest`` + ``serving.ingest`` subsystem:
+Seven legs over the ``core.ingest`` + ``serving.ingest`` subsystem:
 
   ingest_tput   — series/sec through ``IngestPipeline.append`` (Stage-2
                   conversion + snapshot swap; no engines involved),
+  durable_tput  — the same appends with spill + manifest commit per batch
+                  (the durability tax on the acknowledge path),
   compaction    — one full compaction of the appended deltas: merge time
                   (linear merges, runs concurrently with traffic in
                   production) vs publish stall (the only writer-blocking
                   window),
+  leveled_merge — the tentpole bound: the same insert stream under the
+                  leveled policy (minor folds only — delta tier -> run)
+                  vs the PR-4 one-big-fold policy at the same trigger
+                  cadence; reports the MAX single-merge latency of each.
+                  Leveled must stay under the big fold: sustained ingest
+                  never pays an O(total) merge,
+  fused_query   — exact k-NN over base + >=4 live delta shards: the
+                  fused multi-component sweep (one packed lower-bound
+                  pass + one RDC loop) vs the per-component engine-call
+                  loop, warm, same answers bit-for-bit,
   under_ingest  — per-query latency through a started ``IngestingRouter``
                   (daemon flushers + compaction daemon) WHILE a feeder
                   thread appends batches; includes the cold-engine
@@ -16,9 +28,10 @@ Four legs over the ``core.ingest`` + ``serving.ingest`` subsystem:
                   serving cost of a growing shard set,
   idle          — the same stream after ingest settles (the floor).
 
-Parity: after all appends + compactions, ``exact_knn_batch`` over the
-mutable index AND the router's streamed answers must be bit-exact vs a
-from-scratch ``build_index`` over the concatenated data. This is the
+Parity: after all appends + compactions — leveled, folded, fused, and
+per-component alike — ``exact_knn_batch`` over the mutable index AND the
+router's streamed answers must be bit-exact vs a from-scratch
+``build_index`` over the concatenated data. This is the
 ``--strict-parity`` verdict CI gates on.
 
     PYTHONPATH=src:. python benchmarks/bench_ingest.py [--tiny]
@@ -27,6 +40,8 @@ from-scratch ``build_index`` over the concatenated data. This is the
 from __future__ import annotations
 
 import argparse
+import shutil
+import tempfile
 import threading
 import time
 
@@ -69,9 +84,71 @@ def run(tiny: bool = False, impl: str = "ref"):
     ingest_s = time.perf_counter() - t0
     tput = bsz * n_batches / ingest_s
 
+    # --- leg 1b: durable insert path (spill + manifest per append) -------
+    wdir = tempfile.mkdtemp(prefix="paris_bench_store_")
+    md = MutableIndex(base, impl=impl, workdir=wdir)
+    t0 = time.perf_counter()
+    for b in appends:
+        md.append(b)
+    durable_s = time.perf_counter() - t0
+    durable_tput = bsz * n_batches / durable_s
+    spill_ms = md.stats()["spill_time"] * 1e3
+    shutil.rmtree(wdir, ignore_errors=True)
+
     # --- leg 2: compaction merge vs publish stall ------------------------
     res = m.compact()
     ing = m.stats()
+
+    # --- leg 2b: leveled (minor-only) vs one-big-fold merge bound --------
+    # Same insert stream, same trigger cadence (every 2 batches); the old
+    # policy folds EVERYTHING into the base each time, the leveled one
+    # folds only the delta tier into a run. The figure that matters is
+    # the max single-merge latency a sustained ingester ever pays.
+    merges = {}
+    stores = {}
+    for mode, pol in (
+        ("fold", CompactionPolicy(max_deltas=2, leveled=False)),
+        ("leveled", CompactionPolicy(max_deltas=2, max_runs=10 ** 6)),
+    ):
+        # Pass 0 pays every shape's one-time jit dispatch compiles
+        # (hundreds of ms — would swamp a 2ms minor merge); the timed
+        # passes then repeat the identical ingest+fold sequence and each
+        # merge index keeps its best rep (min over reps kills scheduler
+        # noise; the metric stays the MAX single merge of the sequence —
+        # what a sustained ingester's worst pause actually is).
+        per_rep = []
+        for rep in range(4):
+            mm = MutableIndex(base, impl=impl)
+            times = []
+            for b in appends:
+                mm.append(b)
+                r = mm.maybe_compact(pol)
+                if r is not None:
+                    times.append(r.merge_time)
+            if rep:
+                per_rep.append(times)
+        merges[mode] = [min(ts) for ts in zip(*per_rep)]
+        stores[mode] = mm
+    fold_max_ms = max(merges["fold"]) * 1e3
+    leveled_max_ms = max(merges["leveled"]) * 1e3
+    leveled_bounded = leveled_max_ms < fold_max_ms
+
+    # --- leg 2c: fused multi-component pass vs per-component engines -----
+    mf = MutableIndex(base, impl=impl)
+    for b in appends:
+        mf.append(b)  # no compaction: n_batches live deltas (>= 4)
+    qj = jnp.asarray(qs)
+    knn_kw = dict(k=K, round_size=ROUND_SIZE, impl=impl)
+    for fused in (False, True):  # warm both paths off the clock
+        mf.exact_knn_batch(qj, fused=fused, **knn_kw)
+    t0 = time.perf_counter()
+    pc_d, pc_p = mf.exact_knn_batch(qj, fused=False, **knn_kw)
+    percomp_ms = (time.perf_counter() - t0) * 1e3
+    t0 = time.perf_counter()
+    fu_d, fu_p = mf.exact_knn_batch(qj, fused=True, **knn_kw)
+    fused_ms = (time.perf_counter() - t0) * 1e3
+    parity_fused_vs_percomp = (np.array_equal(pc_d, fu_d)
+                               and np.array_equal(pc_p, fu_p))
 
     # --- legs 3+4: query latency under concurrent ingest vs idle ---------
     svc = IngestingRouter(
@@ -120,20 +197,41 @@ def run(tiny: bool = False, impl: str = "ref"):
         jnp.asarray(qs), k=K, round_size=ROUND_SIZE, impl=impl)
     parity_direct = (np.array_equal(want_d, got_d)
                      and np.array_equal(want_p, got_p))
+    lv_d, lv_p = stores["leveled"].exact_knn_batch(qj, **knn_kw)
+    parity_leveled = (np.array_equal(want_d, lv_d)
+                      and np.array_equal(want_p, lv_p))
+    parity_fused = (parity_fused_vs_percomp
+                    and np.array_equal(want_d, np.asarray(fu_d))
+                    and np.array_equal(want_p, np.asarray(fu_p)))
     rd, rp = svc.search_batch(qs)
     parity_router = (np.array_equal(want_d, np.asarray(rd))
                      and np.array_equal(want_p, np.asarray(rp)))
     svc.stop()
-    parity = bool(parity_direct and parity_router)
+    parity = bool(parity_direct and parity_leveled and parity_fused
+                  and parity_router)
     sstats = svc.stats()
 
     rows = [
         (f"ingest_{n0}_tput", ingest_s / (bsz * n_batches) * 1e6,
          f"series_per_sec={tput:.0f} batches={n_batches}x{bsz}"),
+        (f"ingest_{n0}_durable_tput", durable_s / (bsz * n_batches) * 1e6,
+         f"series_per_sec={durable_tput:.0f} spill_ms={spill_ms:.1f} "
+         f"durability_tax_x={durable_s / max(ingest_s, 1e-9):.2f}"),
         (f"ingest_{n0}_compaction", res.merge_time * 1e6,
          f"merged={ing['compacted_series']} "
          f"merge_ms={res.merge_time * 1e3:.1f} "
          f"publish_stall_ms={res.stall_time * 1e3:.3f}"),
+        (f"ingest_{n0}_leveled_merge", leveled_max_ms * 1e3,
+         f"max_merge_ms_leveled={leveled_max_ms:.2f} "
+         f"max_merge_ms_fold={fold_max_ms:.2f} "
+         f"bound_x={fold_max_ms / max(leveled_max_ms, 1e-9):.1f} "
+         f"minors={len(merges['leveled'])} folds={len(merges['fold'])} "
+         f"bounded={leveled_bounded} parity={bool(parity_leveled)}"),
+        (f"ingest_{n0}_fused_query", fused_ms * 1e3 / max(len(qs), 1),
+         f"fused_ms={fused_ms:.2f} percomp_ms={percomp_ms:.2f} "
+         f"speedup_x={percomp_ms / max(fused_ms, 1e-9):.2f} "
+         f"components={1 + n_batches} "
+         f"parity={bool(parity_fused)}"),
         (f"ingest_{n0}_query_under_ingest", float(np.mean(lat_ingest)) * 1e3,
          f"lat_ms_avg={np.mean(lat_ingest):.2f} "
          f"lat_ms_p95={np.percentile(lat_ingest, 95):.2f} "
@@ -149,18 +247,32 @@ def run(tiny: bool = False, impl: str = "ref"):
         n_base=n0, batch=bsz, n_batches=n_batches, k=K,
         round_size=ROUND_SIZE, shards=SHARDS, impl=impl,
         insert_series_per_sec=tput,
+        durable_insert_series_per_sec=durable_tput,
+        durable_spill_ms=spill_ms,
         compaction_merge_ms=res.merge_time * 1e3,
         compaction_publish_stall_ms=res.stall_time * 1e3,
         compaction_stall_ms_max_router=(
             sstats["ingest"]["stall_time_max"] * 1e3),
+        leveled_max_merge_ms=leveled_max_ms,
+        fold_max_merge_ms=fold_max_ms,
+        leveled_merge_bound_x=fold_max_ms / max(leveled_max_ms, 1e-9),
+        fused_query_ms=fused_ms,
+        per_component_query_ms=percomp_ms,
+        fused_speedup_x=percomp_ms / max(fused_ms, 1e-9),
+        live_components=1 + n_batches,
         query_ms_under_ingest_avg=float(np.mean(lat_ingest)),
         query_ms_under_ingest_p95=float(np.percentile(lat_ingest, 95)),
         query_ms_under_ingest_max=float(np.max(lat_ingest)),
         query_ms_idle_avg=float(np.mean(lat_idle)),
         router_compactions=sstats["ingest"]["compactions"],
         router_retired_shards=sstats["retired_shards"],
-        results=[dict(leg="direct", parity=bool(parity_direct)),
-                 dict(leg="router", parity=bool(parity_router))],
+        results=[
+            dict(leg="direct", parity=bool(parity_direct)),
+            dict(leg="leveled", parity=bool(parity_leveled)),
+            dict(leg="fused", parity=bool(parity_fused)),
+            dict(leg="router", parity=bool(parity_router)),
+            dict(leg="leveled_merge_bounded", parity=bool(leveled_bounded)),
+        ],
     )
     return rows, report
 
@@ -186,7 +298,10 @@ def main():
             json.dump(report, f, indent=2)
         print(f"# wrote {path}")
     if not all(e["parity"] for e in report["results"]):
-        raise SystemExit("live-ingest answers diverged from scratch build")
+        bad = [e["leg"] for e in report["results"] if not e["parity"]]
+        raise SystemExit(
+            f"live-ingest gate failed ({', '.join(bad)}): answers diverged "
+            "from the scratch build, or leveled merges were not bounded")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,121 @@
+"""Bench-regression gate: diff a ``run.py --json`` report vs a baseline.
+
+CI runs the full ``--tiny --strict-parity`` suite, then this script
+compares the fresh report against the committed tiny baseline
+(``BENCH_tiny.json``, itself a ``run.py --tiny --json`` report) and
+exits nonzero when:
+
+  * the current report carries failures (a crashed bench or a
+    ``parity=False`` leg — the parity gate, re-checked here so a report
+    produced without ``--strict-parity`` still gates),
+  * a row present in the baseline disappeared from the current run
+    (a silently dropped bench leg reads as "no regression" otherwise), or
+  * a row slowed down more than ``--threshold`` x (default 2.0) against
+    the baseline, after machine-speed normalization.
+
+Normalization: committed baselines are recorded on one machine and
+checked on another, so raw ratios confound hardware speed with real
+regressions. Per-row ratios are divided by the suite's median ratio — a
+uniformly slower runner cancels out, while a single leg regressing
+``threshold`` x relative to the rest of the suite still trips the gate.
+``--absolute`` disables this (same-machine trend comparisons, e.g. the
+nightly job diffing consecutive full-suite artifacts). Rows faster than
+``--min-us`` in the baseline are skipped as timer noise.
+
+    python benchmarks/check_regression.py --report bench-results.json \\
+        --baseline BENCH_tiny.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+
+
+def load_rows(report: dict) -> dict:
+    """{(bench, name): us_per_call} from a run.py --json report."""
+    return {(r["bench"], r["name"]): float(r["us_per_call"])
+            for r in report.get("rows", [])}
+
+
+def compare(
+    current: dict,
+    baseline: dict,
+    *,
+    threshold: float = 2.0,
+    min_us: float = 500.0,
+    absolute: bool = False,
+    exclude: tuple = (),
+) -> list:
+    """Problems (strings) found diffing two run.py reports; [] is a pass.
+
+    ``exclude`` substrings drop matching row names from the LATENCY check
+    only (rows that are inherently scheduling-dependent, e.g. the
+    query-under-ingest mean that absorbs cold compiles); presence and
+    parity are still enforced for them.
+    """
+    problems = [f"current run failure: {f}" for f in
+                current.get("failures", [])]
+    cur = load_rows(current)
+    base = load_rows(baseline)
+    missing = sorted(set(base) - set(cur))
+    problems += [
+        f"baseline row {b}/{n} missing from current run" for b, n in missing]
+    shared = {
+        k: (cur[k], base[k]) for k in set(cur) & set(base)
+        if base[k] >= min_us
+        and not any(sub in k[1] for sub in exclude)
+    }
+    if not shared:
+        return problems
+    ratios = {k: c / b for k, (c, b) in shared.items()}
+    norm = 1.0 if absolute else statistics.median(ratios.values())
+    for (bench, name), ratio in sorted(ratios.items()):
+        rel = ratio / max(norm, 1e-9)
+        if rel > threshold:
+            c, b = shared[(bench, name)]
+            problems.append(
+                f"{bench}/{name}: {c:.0f}us vs baseline {b:.0f}us "
+                f"({rel:.2f}x relative slowdown, suite norm {norm:.2f}x, "
+                f"threshold {threshold}x)")
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", required=True,
+                    help="fresh run.py --json report")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline report (e.g. BENCH_tiny.json)")
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="max allowed normalized slowdown (default 2.0)")
+    ap.add_argument("--min-us", type=float, default=500.0,
+                    help="skip rows faster than this in the baseline")
+    ap.add_argument("--absolute", action="store_true",
+                    help="skip machine-speed normalization")
+    ap.add_argument("--exclude", action="append", default=[],
+                    metavar="SUBSTR",
+                    help="drop rows whose name contains SUBSTR from the "
+                         "latency check (repeatable); parity and presence "
+                         "still apply to them")
+    args = ap.parse_args()
+    with open(args.report) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    problems = compare(current, baseline, threshold=args.threshold,
+                       min_us=args.min_us, absolute=args.absolute,
+                       exclude=tuple(args.exclude))
+    for p in problems:
+        print(f"BENCH-REGRESSION: {p}", file=sys.stderr)
+    if problems:
+        raise SystemExit(1)
+    n = len(set(load_rows(current)) & set(load_rows(baseline)))
+    print(f"# bench-regression gate: {n} shared rows within "
+          f"{args.threshold}x of baseline, no parity breaks")
+
+
+if __name__ == "__main__":
+    main()

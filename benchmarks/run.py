@@ -70,14 +70,25 @@ def main() -> None:
         "roofline": lambda quick: (roofline_table.run(quick=quick), None),
     }
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        # A typo'd name inside a multi-name --only must not be silently
+        # dropped: the remaining benches would run, --strict-parity would
+        # pass, and the missing bench's gate would be vacuous.
+        unknown = only - set(benches)
+        if unknown:
+            print(f"# --only names not registered: {sorted(unknown)}; "
+                  f"known: {','.join(benches)}", file=sys.stderr)
+            raise SystemExit(2)
     all_rows = []
     failures = []
+    selected = 0
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if only and name not in only:
             continue
         if args.filter and args.filter not in name:
             continue
+        selected += 1
         t0 = time.time()
         try:
             rows, parity = fn(args.quick)
@@ -97,6 +108,14 @@ def main() -> None:
             failures.append(f"{name}: {type(e).__name__}: {e}")
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
 
+    if selected == 0:
+        # A selection that matches nothing must NOT look like a clean run:
+        # with --strict-parity an empty run would silently "pass" the CI
+        # gate (e.g. a typo'd --filter after a bench rename).
+        print(f"# selection (--only={args.only!r} --filter={args.filter!r})"
+              f" matched no registered bench; known: "
+              f"{','.join(benches)}", file=sys.stderr)
+        raise SystemExit(2)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(dict(quick=args.quick, rows=all_rows,

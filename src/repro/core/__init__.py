@@ -9,6 +9,7 @@ from repro.core.index import (
     empty_index,
 )
 from repro.core.search import (
+    PackedComponents,
     SearchConfig,
     SearchResult,
     approx_search,
@@ -16,12 +17,15 @@ from repro.core.search import (
     brute_force,
     exact_knn,
     exact_knn_batch,
+    exact_knn_batch_packed,
     exact_search,
     exact_search_batch,
+    exact_search_batch_packed,
     exact_search_single,
     make_batch_engine,
     merge_top_lists,
     nb_exact_search,
+    pack_components,
 )
 from repro.core.build_pipeline import (
     BuildStats, PipelineBuilder, bulk_load_chunk, merge_runs,
@@ -39,10 +43,11 @@ from repro.core.ingest import (
 __all__ = [
     "ParISIndex", "ShardedIndex", "build_index", "assemble_index",
     "build_sharded_index", "empty_index",
-    "SearchConfig", "SearchResult", "approx_search", "approx_search_batch",
-    "brute_force", "exact_knn", "exact_knn_batch", "exact_search",
-    "exact_search_batch", "exact_search_single", "make_batch_engine",
-    "merge_top_lists", "nb_exact_search",
+    "PackedComponents", "SearchConfig", "SearchResult", "approx_search",
+    "approx_search_batch", "brute_force", "exact_knn", "exact_knn_batch",
+    "exact_knn_batch_packed", "exact_search", "exact_search_batch",
+    "exact_search_batch_packed", "exact_search_single", "make_batch_engine",
+    "merge_top_lists", "nb_exact_search", "pack_components",
     "BuildStats", "PipelineBuilder", "bulk_load_chunk", "merge_runs",
     "SeriesSource", "random_walk",
     "CompactionPolicy", "CompactionResult", "DeltaShard", "IngestPipeline",

@@ -1,4 +1,4 @@
-"""Live ingestion: delta shards, a snapshot-swapped mutable index, compaction.
+"""Live ingestion: a leveled, durable, snapshot-swapped mutable index.
 
 The builder (``core.build_pipeline``) freezes a dataset into one immutable
 :class:`~repro.core.index.ParISIndex`; everything downstream assumed that
@@ -16,41 +16,64 @@ out of pieces the offline pipeline already has:
     offset — exactly the :class:`~repro.core.index.ShardedIndex` shape, so
     every downstream consumer (engines, router merge) already knows how to
     read it.
-  * :class:`MutableIndex` — the base index plus the delta list behind an
-    atomically swapped immutable :class:`Snapshot`. Readers grab the
-    current snapshot (one attribute read — atomic under the GIL) and see a
-    consistent, complete view for the whole query; writers (append /
-    compaction publish) swap in a new snapshot under a lock. Because every
-    snapshot component is itself immutable, the per-index jitted engine
-    caches (``core.search._engine_for``) stay valid across swaps — a
-    snapshot change never invalidates a compiled engine, it only changes
-    which engines a query fans out to.
-  * compaction — :meth:`MutableIndex.compact` merges the base run and the
-    delta runs with :func:`~repro.core.build_pipeline.merge_runs`: linear
-    merges only (the ParIS+ property — every run is already in leaf order,
-    so folding deltas into the base is I/O-shaped, never a stop-the-world
-    sort). The merge runs outside any lock — queries and appends proceed
-    concurrently — and only the final snapshot swap blocks writers, for
-    microseconds. :class:`CompactionPolicy` is the size-tiered trigger
-    (compact when the delta list exceeds a count/size threshold);
-    ``serving.ingest`` runs it from a background daemon.
+  * :class:`MutableIndex` — base + run + delta tiers behind an atomically
+    swapped immutable :class:`Snapshot`. Readers grab the current snapshot
+    (one attribute read — atomic under the GIL) and see a consistent,
+    complete view for the whole query; writers (append / compaction
+    publish) swap in a new snapshot under a lock. Because every snapshot
+    component is itself immutable, per-component jitted engine caches
+    (``core.search._engine_for``) and the per-snapshot packed view stay
+    valid for exactly as long as they can be used.
+  * leveled compaction — two tiers instead of one unbounded fold:
 
-Exactness invariant (property-tested in ``tests/test_ingest.py``): after
-ANY sequence of appends and compactions, ``exact_knn_batch`` /
+        deltas --(minor: fold delta tier -> one run)--> runs
+        base + runs --(major: fold run tier into the base)--> base
+
+    Every merge is a linear :func:`~repro.core.build_pipeline.merge_runs`
+    pass (the ParIS+ property — runs are already leaf-ordered) BOUNDED by
+    its tier: a minor merge touches only the live deltas (never the
+    base), so sustained ingest pays O(delta tier) per fold instead of the
+    PR-4 O(total); a major merge folds the accumulated runs into the base
+    and is triggered orders of magnitude less often
+    (:class:`CompactionPolicy` holds both tiers' thresholds and
+    :meth:`CompactionPolicy.plan` picks the due tier). ``tier="full"``
+    keeps the old everything-into-the-base fold (the benchmark baseline
+    and the shutdown path). Merges run outside all locks — queries and
+    appends proceed — and only the final snapshot swap blocks writers.
+  * durability (``core.durable``) — with a ``workdir``, every component
+    spills to an epoch-style ``e{N}`` dir (the builder's epoch-shard
+    format + raw + meta) and every acknowledged state transition commits
+    a versioned manifest atomically BEFORE the in-memory snapshot swap:
+    spill -> manifest commit -> publish -> GC retired dirs.
+    :meth:`MutableIndex.recover` reloads a crashed store to the exact
+    last-committed snapshot — bit-exact answers over every acknowledged
+    append — and sweeps orphan dirs from interrupted spills.
+  * fused search — with several live components, the per-component
+    engine-call loop is collapsed into ONE fused multi-component pass
+    (:func:`~repro.core.search.pack_components` +
+    ``ops.lower_bound_sq_multi``): a single (Q, N_total) lower-bound
+    sweep with a component-offset table and one shared RDC loop, instead
+    of an engine dispatch + merge per delta. ``fused="auto"`` picks it
+    whenever a snapshot holds 2+ components.
+
+Exactness invariant (property-tested in ``tests/test_ingest.py`` and
+``tests/test_durability.py``): after ANY sequence of appends, minor/major
+compactions, crashes and recoveries, ``exact_knn_batch`` /
 ``exact_search_batch`` over the mutable index are bit-exact vs a
 from-scratch :func:`~repro.core.index.build_index` over the concatenated
-data — including snapshots taken mid-compaction. Three facts carry it:
-per-series math (znorm, PAA, SAX, distances) is independent of which
-component a series lives in; components partition the file range, so
-per-component top lists merge duplicate-free
-(:func:`~repro.core.search.merge_top_lists`, ties toward the lower file
-position — the stable-sort order); and the compactor's offset-ordered
-linear merge reproduces the stable leaf-order sort byte-for-byte.
+acknowledged data — including snapshots taken mid-compaction. Three facts
+carry it: per-series math (znorm, PAA, SAX, distances) is independent of
+which component a series lives in; components partition the file range,
+so per-component (or fused, position-tagged) top lists merge
+duplicate-free; and every compaction's offset-ordered linear merge
+reproduces the stable leaf-order sort byte-for-byte, tier by tier.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
+import shutil
 import threading
 import time
 from typing import Callable, List, Optional, Tuple
@@ -58,14 +81,15 @@ from typing import Callable, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import isax
+from repro.core import durable, isax
 from repro.core.build_pipeline import (
     _host_refine_key, bulk_load_chunk, merge_runs,
 )
 from repro.core.index import ParISIndex, assemble_index, empty_index
 from repro.core.search import (
     NO_POS, SearchConfig, SearchResult, exact_knn_batch,
-    exact_search_batch, merge_top_lists,
+    exact_knn_batch_packed, exact_search_batch, exact_search_batch_packed,
+    merge_top_lists, pack_components,
 )
 
 _NO_POS = int(NO_POS)
@@ -73,17 +97,21 @@ _NO_POS = int(NO_POS)
 
 @dataclasses.dataclass(frozen=True)
 class DeltaShard:
-    """One appended batch as a small immutable leaf-ordered index.
+    """One immutable leaf-ordered component above the base.
 
+    Both non-base tiers use this shape: a freshly appended batch (delta
+    tier) and a minor-compacted fold of several deltas (run tier).
     ``index`` holds shard-local positions (0-based); the shard owns the
     contiguous global file range ``[base, base + num_series)``. ``keys``
     caches the sorted packed refine keys so compaction can linear-merge
-    this run without recomputing them.
+    this run without recomputing them. ``dir`` is the component's epoch
+    dir name when the store is durable (None in memory-only mode).
     """
 
     index: ParISIndex
     keys: np.ndarray  # (m,) uint64, sorted — the shard's leaf-order run
     base: int  # global file offset of the shard's first series
+    dir: Optional[str] = None  # e{N} dir under the store's workdir
 
     @property
     def num_series(self) -> int:
@@ -94,63 +122,99 @@ class DeltaShard:
 class Snapshot:
     """An immutable, complete view of the mutable index at one instant.
 
-    ``components()`` lists (index, global file offset) pairs in ascending
-    offset order — the partition every reader fans out over. ``base_keys``
-    rides along so compaction never recomputes the base run's keys.
+    The three tiers in ascending file-offset order: ``base`` covers
+    ``[0, base.num_series)``, ``runs`` (minor-compaction output) cover the
+    next contiguous ranges, ``deltas`` (raw appends) the newest ranges at
+    the tail — runs are always older, therefore lower, than every live
+    delta. ``components()`` lists (index, offset) pairs in that order —
+    the partition every reader fans out over (or packs into one fused
+    sweep). ``base_keys`` rides along so compaction never recomputes the
+    base run's keys.
     """
 
     base: ParISIndex
     base_keys: np.ndarray  # (N_base,) uint64, sorted
-    deltas: Tuple[DeltaShard, ...]
+    runs: Tuple[DeltaShard, ...] = ()
+    deltas: Tuple[DeltaShard, ...] = ()
     version: int = 0
 
     @property
     def num_series(self) -> int:
-        return self.base.num_series + sum(d.num_series for d in self.deltas)
+        return (self.base.num_series
+                + sum(r.num_series for r in self.runs)
+                + sum(d.num_series for d in self.deltas))
 
     def components(self) -> list:
         out = []
         if self.base.num_series:
             out.append((self.base, 0))
+        out.extend((r.index, r.base) for r in self.runs)
         out.extend((d.index, d.base) for d in self.deltas)
         return out
 
 
 @dataclasses.dataclass(frozen=True)
 class CompactionPolicy:
-    """Size-tiered trigger: fold deltas into the base when they pile up.
+    """Two-tier trigger: which fold (if any) a snapshot is due for.
 
-    ``max_deltas``: compact once this many delta shards exist.
-    ``max_delta_series``: ... or once the deltas hold this many series
-    total (None = count-only). Either bound crossing triggers.
+    Delta tier (minor trigger — fold deltas into ONE run, base untouched):
+    ``max_deltas`` shards or ``max_delta_series`` total series.
+    Run tier (major trigger — fold base + runs into a new base):
+    ``max_runs`` runs or ``max_run_series`` total run series.
+    ``leveled=False`` restores the PR-4 behavior: the delta trigger folds
+    EVERYTHING into the base (one unbounded merge) — kept as the
+    benchmark baseline the leveled scheme is measured against.
     """
 
     max_deltas: int = 4
     max_delta_series: Optional[int] = None
+    max_runs: int = 4
+    max_run_series: Optional[int] = None
+    leveled: bool = True
+
+    def plan(self, snapshot: Snapshot) -> Optional[str]:
+        """The due fold: "minor", "major", "full", or None (not due)."""
+        nd = len(snapshot.deltas)
+        delta_due = nd > 0 and (
+            nd >= self.max_deltas
+            or (self.max_delta_series is not None
+                and sum(d.num_series for d in snapshot.deltas)
+                >= self.max_delta_series))
+        if not self.leveled:
+            return "full" if delta_due else None
+        nr = len(snapshot.runs)
+        run_due = nr > 0 and (
+            nr >= self.max_runs
+            or (self.max_run_series is not None
+                and sum(r.num_series for r in snapshot.runs)
+                >= self.max_run_series))
+        if run_due:
+            return "major"
+        if delta_due:
+            return "minor"
+        return None
 
     def should_compact(self, snapshot: Snapshot) -> bool:
-        nd = len(snapshot.deltas)
-        if nd == 0:
-            return False
-        if nd >= self.max_deltas:
-            return True
-        if self.max_delta_series is not None:
-            return (
-                sum(d.num_series for d in snapshot.deltas)
-                >= self.max_delta_series
-            )
-        return False
+        return self.plan(snapshot) is not None
 
 
 @dataclasses.dataclass(frozen=True)
 class CompactionResult:
     """What one compaction did (and what the serving layer must rewire)."""
 
-    base: ParISIndex  # the new compacted base
-    retired: Tuple[DeltaShard, ...]  # deltas folded into it
+    tier: str  # "minor" | "major" | "full"
+    base: Optional[ParISIndex]  # new base ("major"/"full"), else None
+    run: Optional[DeltaShard]  # new run ("minor"), else None
+    retired_runs: Tuple[DeltaShard, ...]
+    retired_deltas: Tuple[DeltaShard, ...]
     snapshot: Snapshot  # the published post-compaction snapshot
     merge_time: float  # seconds spent merging (unlocked, concurrent)
     stall_time: float  # seconds writers were blocked by the publish swap
+
+    @property
+    def retired(self) -> Tuple[DeltaShard, ...]:
+        """Every folded component, offset-ascending (compat helper)."""
+        return self.retired_runs + self.retired_deltas
 
 
 def _convert_batch(
@@ -202,14 +266,22 @@ def build_delta_shard(
 
 
 class MutableIndex:
-    """A growing exact-search index: base + delta shards, snapshot-swapped.
+    """A growing exact-search index: leveled tiers, snapshot-swapped.
 
     Readers never lock: :meth:`snapshot` returns the current immutable
     view and every search method runs entirely against one snapshot.
     Writers serialize on ``_mutate`` (appends and the compaction publish);
     at most one compaction runs at a time (``_compact``), and its merge
-    phase holds neither lock, so queries AND appends proceed while the
-    base is being rebuilt.
+    phase holds neither lock, so queries AND appends proceed while a tier
+    is being folded.
+
+    ``workdir`` makes the store durable: components spill to ``e{N}``
+    dirs and every acknowledged transition commits a versioned manifest
+    before it publishes (see ``core.durable``); durable writers
+    additionally serialize on ``_disk`` so manifests commit in snapshot
+    order. ``fault`` is the crash-injection hook (tests only) — once a
+    fault fires, the in-memory object must be abandoned and the store
+    reopened with :meth:`recover`, exactly like a real crash.
 
     ``refine_bits`` must match the value the base was built with (the
     builder's default, 4) — it defines the leaf order that compaction's
@@ -225,6 +297,9 @@ class MutableIndex:
         cardinality: int = isax.DEFAULT_CARDINALITY,
         refine_bits: int = 4,
         impl: str = "auto",
+        workdir: Optional[str] = None,
+        fault: durable.Fault = None,
+        pack_block: int = 128,
     ):
         if base is None:
             if series_length is None:
@@ -236,16 +311,140 @@ class MutableIndex:
         self.series_length = base.series_length
         self.refine_bits = refine_bits
         self.impl = impl
+        self.pack_block = pack_block
         base_keys = _host_refine_key(
             np.asarray(base.sax), refine_bits, base.cardinality)
-        self._snapshot = Snapshot(base, base_keys, (), 0)
+        self._snapshot = Snapshot(base, base_keys)
+        self._init_runtime()
+        self.workdir = workdir
+        self._fault = fault
+        self._next_epoch = 0
+        self._base_ref: Optional[durable.ComponentRef] = None
+        if workdir is not None:
+            os.makedirs(workdir, exist_ok=True)
+            if durable.read_manifest(workdir) is not None:
+                raise ValueError(
+                    f"{workdir} already holds a durable store; open it "
+                    "with MutableIndex.recover() instead")
+            if base.num_series:
+                self._base_ref = durable.spill_component(
+                    workdir, self._alloc_epoch(), base_keys,
+                    np.asarray(base.sax), np.asarray(base.pos),
+                    np.asarray(base.raw), base=0,
+                    series_length=self.series_length, fault=fault)
+            durable.write_manifest(
+                workdir, self._manifest_for(self._snapshot), fault)
+
+    def _init_runtime(self) -> None:
         self._mutate = threading.Lock()
         self._compact = threading.Lock()
+        self._disk = threading.Lock()
         self._stats = dict(
             appends=0, appended_series=0, convert_time=0.0,
             compactions=0, compacted_series=0,
             merge_time=0.0, stall_time_max=0.0,
+            spills=0, spill_time=0.0,
         )
+
+    # ---------------------------------------------------------- durability
+    @property
+    def durable(self) -> bool:
+        return self.workdir is not None
+
+    def _alloc_epoch(self) -> str:
+        """Next ``e{N}`` dir name (caller holds ``_disk`` once running)."""
+        name = f"e{self._next_epoch}"
+        self._next_epoch += 1
+        return name
+
+    def _manifest_for(self, snap: Snapshot) -> durable.Manifest:
+        def ref(s: DeltaShard) -> durable.ComponentRef:
+            assert s.dir is not None, "durable component without a dir"
+            return durable.ComponentRef(s.dir, s.base, s.num_series)
+
+        return durable.Manifest(
+            version=snap.version,
+            next_epoch=self._next_epoch,
+            series_length=self.series_length,
+            segments=self.segments,
+            cardinality=self.cardinality,
+            refine_bits=self.refine_bits,
+            base=self._base_ref,
+            runs=tuple(ref(r) for r in snap.runs),
+            deltas=tuple(ref(d) for d in snap.deltas),
+        )
+
+    def _spill_shard(
+        self, name: str, keys: np.ndarray, index: ParISIndex, offset: int
+    ) -> None:
+        t0 = time.perf_counter()
+        durable.spill_component(
+            self.workdir, name, keys, np.asarray(index.sax),
+            np.asarray(index.pos), np.asarray(index.raw), base=offset,
+            series_length=self.series_length, fault=self._fault)
+        dt = time.perf_counter() - t0
+        with self._mutate:
+            self._stats["spills"] += 1
+            self._stats["spill_time"] += dt
+
+    @classmethod
+    def recover(
+        cls,
+        workdir: str,
+        *,
+        impl: str = "auto",
+        fault: durable.Fault = None,
+        pack_block: int = 128,
+    ) -> "MutableIndex":
+        """Reopen a durable store at its last committed manifest.
+
+        The reloaded snapshot is bit-exact: every array round-trips
+        through ``.npy`` losslessly and bucket offsets / engines are
+        rebuilt deterministically, so search answers equal a from-scratch
+        build over every acknowledged append. Orphan ``e{N}`` dirs (an
+        interrupted spill or GC) are swept; the store then resumes normal
+        durable operation from ``next_epoch``.
+        """
+        man = durable.read_manifest(workdir)
+        if man is None:
+            raise ValueError(f"{workdir} holds no durable store manifest")
+        self = cls.__new__(cls)
+        self.segments = man.segments
+        self.cardinality = man.cardinality
+        self.series_length = man.series_length
+        self.refine_bits = man.refine_bits
+        self.impl = impl
+        self.pack_block = pack_block
+        self.workdir = workdir
+        self._fault = fault
+        self._next_epoch = man.next_epoch
+        self._base_ref = man.base
+        if man.base is not None:
+            base_keys, sax, pos, raw = durable.load_component(
+                workdir, man.base)
+            base = assemble_index(sax, pos, jnp.asarray(raw),
+                                  man.segments, man.cardinality)
+        else:
+            base = empty_index(man.series_length, man.segments,
+                               man.cardinality)
+            base_keys = np.zeros((0,), np.uint64)
+
+        def shard(ref: durable.ComponentRef) -> DeltaShard:
+            keys, sax, pos, raw = durable.load_component(workdir, ref)
+            return DeltaShard(
+                index=assemble_index(sax, pos, jnp.asarray(raw),
+                                     man.segments, man.cardinality),
+                keys=keys, base=ref.base, dir=ref.dir)
+
+        self._snapshot = Snapshot(
+            base, base_keys,
+            tuple(shard(r) for r in man.runs),
+            tuple(shard(d) for d in man.deltas),
+            man.version,
+        )
+        self._init_runtime()
+        durable.gc_orphans(workdir, man, fault)
+        return self
 
     # ------------------------------------------------------------- readers
     def snapshot(self) -> Snapshot:
@@ -260,119 +459,258 @@ class MutableIndex:
     def num_deltas(self) -> int:
         return len(self._snapshot.deltas)
 
+    @property
+    def num_runs(self) -> int:
+        return len(self._snapshot.runs)
+
     # ------------------------------------------------------------- writers
     def append(self, batch) -> DeltaShard:
         """Insert a (B, n) batch of series; visible to queries on return.
 
         The batch becomes one delta shard at the end of the global file
-        order. The Stage-2 conversion runs OUTSIDE the snapshot lock
-        (positions are shard-local, so it needs no offset); only the
-        offset stamp + snapshot swap are locked — concurrent appends
-        convert in parallel and the compaction publish never waits behind
-        a batch conversion.
+        order. The Stage-2 conversion runs OUTSIDE all locks (positions
+        are shard-local, so it needs no offset); only the offset stamp +
+        snapshot swap are locked. A durable store additionally spills the
+        shard and commits the manifest BEFORE the swap — the append is
+        acknowledged only once it would survive a crash. Durable appends
+        hold ``_disk`` across spill+commit+swap, i.e. durability is
+        single-writer: manifests must land in offset order, and a
+        spill-outside-the-lock scheme needs a commit ticket queue
+        (ROADMAP) — a concurrent compaction publish can therefore stall
+        behind one in-flight batch spill.
         """
         t0 = time.perf_counter()
         keys, index = _convert_batch(
             batch, segments=self.segments, cardinality=self.cardinality,
             refine_bits=self.refine_bits, impl=self.impl,
         )
-        with self._mutate:
+        if not self.durable:
+            with self._mutate:
+                snap = self._snapshot
+                delta = DeltaShard(index=index, keys=keys,
+                                   base=snap.num_series)
+                self._publish_append(snap, delta, t0)
+            return delta
+        with self._disk:
             snap = self._snapshot
+            name = self._alloc_epoch()
             delta = DeltaShard(index=index, keys=keys,
-                               base=snap.num_series)
-            self._snapshot = dataclasses.replace(
+                               base=snap.num_series, dir=name)
+            self._spill_shard(name, keys, index, delta.base)
+            new_snap = dataclasses.replace(
                 snap, deltas=snap.deltas + (delta,),
-                version=snap.version + 1,
-            )
-            s = self._stats
-            s["appends"] += 1
-            s["appended_series"] += delta.num_series
-            s["convert_time"] += time.perf_counter() - t0
+                version=snap.version + 1)
+            durable.write_manifest(
+                self.workdir, self._manifest_for(new_snap), self._fault)
+            with self._mutate:
+                self._snapshot = new_snap
+                self._count_append(delta, t0)
         return delta
 
-    def compact(
-        self, on_before_publish: Optional[Callable[[], None]] = None
-    ) -> Optional[CompactionResult]:
-        """Fold every current delta into the base; linear merges only.
+    def _publish_append(self, snap: Snapshot, delta: DeltaShard,
+                        t0: float) -> None:
+        self._snapshot = dataclasses.replace(
+            snap, deltas=snap.deltas + (delta,), version=snap.version + 1)
+        self._count_append(delta, t0)
 
-        Grabs one snapshot, merges its runs (base + deltas, ascending
-        offset order — :func:`merge_runs` breaks key ties toward the
-        earlier run, i.e. the lower file position, reproducing the stable
-        leaf-order sort), assembles the new base, and publishes a snapshot
-        holding the new base plus whatever deltas were appended *during*
-        the merge. Queries in flight keep their old snapshot; both views
-        are complete, so exactness holds mid-compaction. Returns None when
-        there was nothing to compact.
+    def _count_append(self, delta: DeltaShard, t0: float) -> None:
+        s = self._stats
+        s["appends"] += 1
+        s["appended_series"] += delta.num_series
+        s["convert_time"] += time.perf_counter() - t0
+
+    def compact(
+        self,
+        tier: str = "full",
+        on_before_publish: Optional[Callable[[], None]] = None,
+    ) -> Optional[CompactionResult]:
+        """Fold one tier; linear merges only, bounded by the tier's size.
+
+        ``tier="minor"`` folds the current delta shards into ONE run (the
+        base is never touched — the merge is O(delta tier), the bound that
+        keeps sustained ingest from ever paying a full fold);
+        ``tier="major"`` folds the base + the accumulated runs into a new
+        base (deltas untouched); ``tier="full"`` folds everything — the
+        PR-4 behavior, kept for shutdown and as the benchmark baseline.
+
+        Grabs one snapshot, merges its runs in ascending offset order
+        (:func:`merge_runs` breaks key ties toward the earlier run, i.e.
+        the lower file position, reproducing the stable leaf-order sort),
+        and publishes a snapshot that keeps every component appended
+        *during* the merge. Queries in flight keep their old snapshot;
+        both views are complete, so exactness holds mid-compaction. On a
+        durable store the merged component spills and the manifest
+        commits before the swap, and the retired components' dirs are
+        GC'd only after. Returns None when the tier has nothing to fold.
 
         ``on_before_publish`` is a test hook that runs after the merge but
         before the swap — the window where "mid-compaction" is observable.
         """
+        if tier not in ("minor", "major", "full"):
+            raise ValueError(f"unknown compaction tier {tier!r}")
         with self._compact:
             snap = self._snapshot
-            m = len(snap.deltas)
-            if m == 0:
+            fold_runs = snap.runs if tier in ("major", "full") else ()
+            fold_deltas = snap.deltas if tier in ("minor", "full") else ()
+            with_base = tier in ("major", "full")
+            if not fold_runs and not fold_deltas:
                 return None
             t0 = time.perf_counter()
-            runs = []
-            if snap.base.num_series:
-                runs.append((snap.base_keys,
-                             [np.asarray(snap.base.sax),
-                              np.asarray(snap.base.pos)]))
-            for d in snap.deltas:
-                runs.append((d.keys,
-                             [np.asarray(d.index.sax),
-                              np.asarray(d.index.pos) + np.int32(d.base)]))
-            keys, (sax_sorted, pos_sorted) = merge_runs(runs)
-            raw = jnp.concatenate(
-                [snap.base.raw] + [d.index.raw for d in snap.deltas])
-            new_base = assemble_index(
-                sax_sorted, pos_sorted, raw, self.segments, self.cardinality)
+            parts = []
+            if with_base and snap.base.num_series:
+                parts.append((snap.base_keys,
+                              [np.asarray(snap.base.sax),
+                               np.asarray(snap.base.pos)]))
+            shards = list(fold_runs) + list(fold_deltas)
+            for s in shards:
+                parts.append((s.keys,
+                              [np.asarray(s.index.sax),
+                               np.asarray(s.index.pos)
+                               + np.int32(s.base)]))
+            keys, (sax_sorted, pos_sorted) = merge_runs(parts)
+            offset = 0 if with_base else shards[0].base
+            raws = ([snap.base.raw] if with_base and snap.base.num_series
+                    else []) + [s.index.raw for s in shards]
+            raw = jnp.concatenate(raws) if len(raws) > 1 else raws[0]
+            merged = assemble_index(
+                sax_sorted, pos_sorted - np.int32(offset), raw,
+                self.segments, self.cardinality)
+            merged_shard = None
+            name = None
+            if self.durable:
+                with self._disk:
+                    name = self._alloc_epoch()
+                # Spill OUTSIDE _disk: the dir is an orphan until a
+                # manifest references it, so appends keep committing.
+                self._spill_shard(name, keys, merged, offset)
             merge_time = time.perf_counter() - t0
             if on_before_publish is not None:
                 on_before_publish()
             t1 = time.perf_counter()
+            result, old_base_dir = self._publish_compaction(
+                tier, snap, merged, keys, name, len(fold_deltas),
+                fold_runs, fold_deltas, merge_time, t1)
+            if self.durable:
+                # GC after the commit made the retirees unreferenced; a
+                # crash mid-GC leaves orphans the next recovery sweeps.
+                gone = [old_base_dir] if old_base_dir else []
+                gone += [s.dir for s in shards if s.dir]
+                for d in gone:
+                    durable._fire(self._fault, f"gc:{d}")
+                    shutil.rmtree(os.path.join(self.workdir, d),
+                                  ignore_errors=True)
+            return result
+
+    def _publish_compaction(
+        self, tier, snap, merged, keys, name, n_deltas_folded,
+        fold_runs, fold_deltas, merge_time, t1,
+    ) -> tuple:
+        """Swap in the post-fold snapshot (and commit it, when durable).
+
+        Deltas only ever append at the tail and only compaction
+        (serialized by ``_compact``) replaces runs or the base, so the
+        first ``n_deltas_folded`` deltas of the *current* snapshot are
+        exactly the ones merged; everything after arrived during the
+        merge and survives. Runs cannot change during a merge at all.
+        """
+        old_base_dir = None
+        locks = [self._disk] if self.durable else []
+        for lk in locks:
+            lk.acquire()
+        try:
             with self._mutate:
                 cur = self._snapshot
-                # Deltas only ever append at the tail and only compaction
-                # (serialized by _compact) replaces the head, so the first
-                # m deltas of the current snapshot are exactly the ones we
-                # merged; everything after arrived during the merge and
-                # survives.
-                new_snap = Snapshot(
-                    new_base, keys, cur.deltas[m:], cur.version + 1)
+                if tier == "minor":
+                    new_run = DeltaShard(index=merged, keys=keys,
+                                         base=fold_deltas[0].base, dir=name)
+                    new_snap = Snapshot(
+                        snap.base, snap.base_keys,
+                        cur.runs + (new_run,),
+                        cur.deltas[n_deltas_folded:], cur.version + 1)
+                    new_base = None
+                else:
+                    new_run = None
+                    new_base = merged
+                    new_snap = Snapshot(
+                        merged, keys, (),
+                        cur.deltas[n_deltas_folded:], cur.version + 1)
+                if self.durable:
+                    if tier != "minor":
+                        old_base_dir = (
+                            self._base_ref.dir if self._base_ref else None)
+                        self._base_ref = (durable.ComponentRef(
+                            name, 0, merged.num_series)
+                            if merged.num_series else None)
+                    durable.write_manifest(
+                        self.workdir, self._manifest_for(new_snap),
+                        self._fault)
                 self._snapshot = new_snap
                 stall = time.perf_counter() - t1
                 s = self._stats
                 s["compactions"] += 1
                 s["compacted_series"] += int(
-                    sum(d.num_series for d in snap.deltas))
+                    sum(x.num_series for x in fold_runs + fold_deltas))
                 s["merge_time"] += merge_time
                 s["stall_time_max"] = max(s["stall_time_max"], stall)
-            return CompactionResult(
-                base=new_base, retired=snap.deltas, snapshot=new_snap,
-                merge_time=merge_time, stall_time=stall,
-            )
+        finally:
+            for lk in locks:
+                lk.release()
+        return CompactionResult(
+            tier=tier, base=new_base, run=new_run,
+            retired_runs=fold_runs, retired_deltas=fold_deltas,
+            snapshot=new_snap, merge_time=merge_time, stall_time=stall,
+        ), old_base_dir
 
     def maybe_compact(
         self, policy: CompactionPolicy
     ) -> Optional[CompactionResult]:
-        """Compact iff ``policy`` says the delta list is due."""
-        if not policy.should_compact(self._snapshot):
+        """Run the fold ``policy`` says is due (if any)."""
+        tier = policy.plan(self._snapshot)
+        if tier is None:
             return None
-        return self.compact()
+        return self.compact(tier=tier)
 
     # ------------------------------------------------------------- search
-    def exact_knn_batch(self, queries, k: int = 1, **kw) -> tuple:
+    def _packed_view(self, snap: Snapshot):
+        """The snapshot's fused multi-component view, built lazily once.
+
+        Cached on the (immutable) snapshot object, like the per-index
+        engine cache — a racing duplicate build is idempotent. NOTE: the
+        build is an O(total) repack, paid by the FIRST fused query after
+        each snapshot change (appends/compactions never pay it);
+        incremental in-place growth is a ROADMAP item.
+        """
+        packed = getattr(snap, "_packed", None)
+        if packed is None:
+            packed = pack_components(snap.components(),
+                                     block=self.pack_block)
+            object.__setattr__(snap, "_packed", packed)
+        return packed
+
+    @staticmethod
+    def _use_fused(fused, comps: list, sort: bool) -> bool:
+        if not sort:  # the ADS+-style serial scan has no packed variant
+            return False
+        if isinstance(fused, bool):
+            return fused
+        if fused != "auto":
+            raise ValueError(f"fused must be bool or 'auto', got {fused!r}")
+        return len(comps) >= 2
+
+    def exact_knn_batch(
+        self, queries, k: int = 1, fused="auto", **kw
+    ) -> tuple:
         """Exact k-NN over the live view: (Q, n) -> ((Q, k) d, (Q, k) pos).
 
-        One snapshot is fanned out over: each component answers its own
-        partition through the standard per-index engine (jitted closures
-        cached on the component, so repeated queries over an unchanged
-        component never retrace), local positions are translated by the
-        component's file offset, and the ownership-disjoint lists reduce
-        through :func:`~repro.core.search.merge_top_lists` — the same
-        protocol as the sharded router, bit-exact vs a from-scratch build
-        over the concatenated data.
+        ``fused=True`` (or ``"auto"`` with 2+ live components) answers
+        from ONE fused multi-component pass over the snapshot's packed
+        view — a single (Q, N_total) lower-bound sweep + one RDC loop —
+        instead of one engine call per component; positions come back
+        global, no merge needed. The per-component path (``fused=False``,
+        or any snapshot with a lone component) keeps the PR-4 fan-out:
+        per-index engines, offsets translated, lists reduced through
+        :func:`~repro.core.search.merge_top_lists`. Both are bit-exact vs
+        a from-scratch build over the concatenated data.
         """
         snap = self._snapshot
         qs = jnp.asarray(queries, jnp.float32)
@@ -381,6 +719,25 @@ class MutableIndex:
             nq = qs.shape[0]
             return (np.full((nq, k), np.float32(np.inf)),
                     np.full((nq, k), _NO_POS, np.int32))
+        if self._use_fused(fused, comps, kw.get("sort", True)):
+            # Same kwarg surface as core.exact_knn_batch: an unknown key
+            # must fail here exactly like the per-component path would —
+            # never silently change behavior with the component count.
+            unknown = set(kw) - {"round_size", "impl", "select", "sort",
+                                 "leaf_cap", "stats"}
+            if unknown:
+                raise TypeError(
+                    f"unexpected keyword arguments: {sorted(unknown)}")
+            out = exact_knn_batch_packed(
+                self._packed_view(snap), qs, k=k,
+                round_size=kw.get("round_size", 4096),
+                impl=kw.get("impl", "auto"),
+                select=kw.get("select", "topk"),
+                stats=kw.get("stats", False),
+            )
+            if kw.get("stats", False):
+                return tuple(np.asarray(x) for x in out)
+            return np.asarray(out[0]), np.asarray(out[1])
         ds, ps = [], []
         for index, off in comps:
             d, p = exact_knn_batch(index, qs, k=k, **kw)
@@ -390,13 +747,14 @@ class MutableIndex:
         return merge_top_lists(ds, ps, k)
 
     def exact_search_batch(
-        self, queries, cfg: SearchConfig = SearchConfig()
+        self, queries, cfg: SearchConfig = SearchConfig(), fused="auto"
     ) -> SearchResult:
         """Exact 1-NN over the live view: (Q, n) -> SearchResult of (Q,).
 
-        Per-component engines + the router's 1-NN reduction: min by
-        (distance, global position), raw reads and BSF updates summed,
-        rounds maxed.
+        Fused single-sweep by default with 2+ components (see
+        :meth:`exact_knn_batch`); otherwise per-component engines + the
+        router's 1-NN reduction: min by (distance, global position), raw
+        reads and BSF updates summed, rounds maxed.
         """
         snap = self._snapshot
         qs = jnp.asarray(queries, jnp.float32)
@@ -407,6 +765,9 @@ class MutableIndex:
             return SearchResult(
                 np.full((nq,), np.float32(np.inf)),
                 np.full((nq,), _NO_POS, np.int32), z, z, np.int32(0))
+        if self._use_fused(fused, comps, cfg.sort):
+            return exact_search_batch_packed(self._packed_view(snap), qs,
+                                             cfg)
         parts = [exact_search_batch(index, qs, cfg) for index, _ in comps]
         best_d = np.full((nq,), np.inf, np.float32)
         best_p = np.full((nq,), _NO_POS, np.int64)
@@ -432,8 +793,10 @@ class MutableIndex:
         s.update(
             num_series=snap.num_series,
             num_deltas=len(snap.deltas),
+            num_runs=len(snap.runs),
             base_series=snap.base.num_series,
             version=snap.version,
+            durable=self.durable,
         )
         return s
 

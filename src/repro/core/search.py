@@ -179,6 +179,7 @@ def select_len(n: int, round_size: int) -> int:
 
 
 NO_POS = jnp.int32(-1)  # sentinel position of an unfilled k-NN result slot
+_NP_NO_POS = int(NO_POS)  # host-side value (np packing code, no tracing)
 
 
 def dedup_mask(cand_pos: jax.Array, top_d: jax.Array,
@@ -440,6 +441,332 @@ def _batch_engine_core(
         r = r + r2
 
     return top_d, top_p, reads, updates, r
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedComponents:
+    """A multi-component store (base + runs + deltas) packed for ONE sweep.
+
+    Each component's leaf-sorted SAX rows are padded to a ``block``
+    multiple and concatenated in ascending file-offset order, so the fused
+    lower-bound kernel (:func:`ops.lower_bound_sq_multi`) covers the whole
+    store in one (Q, N_pad) pass. The block alignment means appending a
+    component only APPENDS blocks — earlier components' rows never move —
+    though today's maintenance is still rebuild-on-first-use per snapshot
+    (``core.ingest`` caches one view per immutable snapshot; growing the
+    buffers in place is a ROADMAP item). ``gpos`` maps packed
+    rows to *global* file positions (:data:`NO_POS` at pad rows, so a pad
+    that survives to a result list is already the sentinel), ``block_len``
+    is the kernel's per-block validity table, and ``raw`` is the full
+    file-order raw array (components cover contiguous, adjacent file
+    ranges, so their concatenation IS the datastore) — candidate gathers
+    index it directly by global position.
+    """
+
+    sax: jax.Array  # (N_pad, w) uint8, per-component leaf order
+    gpos: jax.Array  # (N_pad,) int32 global file positions; NO_POS at pads
+    block_len: jax.Array  # (N_pad // block,) int32 valid rows per block
+    raw: jax.Array  # (N_total, n) f32, file order
+    num_series: int  # real rows (N_total)
+    block: int
+    series_length: int
+    segments: int
+    cardinality: int
+
+
+def pack_components(components, block: int = 128) -> PackedComponents:
+    """Pack (index, file offset) components for the fused multi-sweep.
+
+    ``components`` must come in ascending offset order and cover
+    contiguous, adjacent file ranges starting at 0 — exactly what
+    ``core.ingest.Snapshot.components()`` yields. Zero-series components
+    are skipped.
+    """
+    comps = [(ix, off) for ix, off in components if ix.num_series]
+    if not comps:
+        raise ValueError("pack_components needs at least one nonempty "
+                         "component")
+    expect = 0
+    for ix, off in comps:
+        if off != expect:
+            raise ValueError(
+                f"components not contiguous: offset {off}, expected "
+                f"{expect}")
+        expect += ix.num_series
+    sax_parts, gpos_parts, len_parts = [], [], []
+    for ix, off in comps:
+        m = ix.num_series
+        pad = (-m) % block
+        sax = np.asarray(ix.sax)
+        gp = np.asarray(ix.pos, np.int32) + np.int32(off)
+        if pad:
+            sax = np.concatenate(
+                [sax, np.zeros((pad, sax.shape[1]), np.uint8)])
+            gp = np.concatenate([gp, np.full((pad,), _NP_NO_POS, np.int32)])
+        bl = np.full(((m + pad) // block,), block, np.int32)
+        if pad:
+            bl[-1] = block - pad
+        sax_parts.append(sax)
+        gpos_parts.append(gp)
+        len_parts.append(bl)
+    first = comps[0][0]
+    return PackedComponents(
+        sax=jnp.asarray(np.concatenate(sax_parts)),
+        gpos=jnp.asarray(np.concatenate(gpos_parts)),
+        block_len=jnp.asarray(np.concatenate(len_parts)),
+        raw=jnp.concatenate([ix.raw for ix, _ in comps]),
+        num_series=expect,
+        block=block,
+        series_length=first.series_length,
+        segments=first.segments,
+        cardinality=first.cardinality,
+    )
+
+
+def _packed_engine_core(
+    packed: PackedComponents,
+    queries: jax.Array,
+    *,
+    k: int,
+    round_size: int,
+    select: str,
+    impl: str,
+) -> tuple:
+    """The fused multi-component RDC loop: one sweep over base+runs+deltas.
+
+    The multi-component analogue of :func:`_batch_engine_core`: ONE masked
+    lower-bound pass over the packed SAX buffer replaces the per-component
+    engine calls, candidate positions are already global (``packed.gpos``),
+    and raw gathers hit the file-order concatenation directly. Pad rows
+    carry (+inf, :data:`NO_POS`), so they can never pass a round mask and,
+    if the store holds fewer than ``k`` series' worth of finite distances,
+    they ARE the sentinel slots. The BSF starts at +inf (no approx seed —
+    a packed buffer has no global bucket structure), which costs a few
+    extra raw reads but changes no answer: exactness comes from the same
+    sorted-candidate / fallback-scan protocol as the single-index engine.
+    """
+    if not 1 <= k <= packed.num_series:
+        raise ValueError(f"k={k} outside [1, {packed.num_series}]")
+    n_pad = packed.sax.shape[0]
+    n_q = queries.shape[0]
+    rs = round_size
+    qs = isax.znorm(queries)
+    qps = isax.paa(qs, packed.segments)
+    bpp = isax.padded_breakpoints(packed.cardinality)
+
+    top_d0 = jnp.full((n_q, k), INF)
+    top_p0 = jnp.full((n_q, k), NO_POS)
+    reads0 = jnp.zeros((n_q,), jnp.int32)
+
+    # --- LBC: ONE fused (Q, N_pad) masked pass over every component. ---
+    lb = ops.lower_bound_sq_multi(
+        qps, packed.sax, bpp, packed.series_length, packed.block_len,
+        impl=impl, block_n=packed.block,
+    )
+
+    if select == "topk":
+        sel_len = select_len(n_pad, rs)
+    else:
+        sel_len = n_pad
+    neg, order = jax.lax.top_k(-lb, sel_len)
+    order = order.astype(jnp.int32)
+    lb_sel = -neg
+
+    n_rounds = -(-sel_len // rs)
+    padded = n_rounds * rs
+    lb_sel_p = _pad_cols(lb_sel, padded, INF)
+    order_p = _pad_cols(order, padded, 0)
+
+    def _euclid_rows(raws):
+        return jax.vmap(
+            lambda q, rw: ops.euclid_sq(q, rw, impl=impl)
+        )(qs, raws)
+
+    def _euclid_shared(raws):
+        return jax.vmap(lambda q: ops.euclid_sq(q, raws, impl=impl))(qs)
+
+    def merge(top_d, top_p, cand_pos, d):
+        if k == 1:
+            j = jnp.argmin(d, axis=1)
+            dj = jnp.take_along_axis(d, j[:, None], axis=1)
+            pj = jnp.take_along_axis(cand_pos, j[:, None], axis=1)
+            better = dj < top_d
+            return (
+                jnp.where(better, dj, top_d),
+                jnp.where(better, pj, top_p),
+            )
+        d = jnp.where(dedup_mask(cand_pos, top_d, top_p), INF, d)
+        md = jnp.concatenate([top_d, d], axis=1)
+        mp = jnp.concatenate([top_p, cand_pos], axis=1)
+        neg_d, sel = jax.lax.top_k(-md, k)
+        return -neg_d, jnp.take_along_axis(mp, sel, axis=1)
+
+    def cond(st):
+        r, top_d, *_ = st
+        head = jax.lax.dynamic_slice_in_dim(
+            lb_sel_p, r * rs, 1, axis=1)[:, 0]
+        return (r < n_rounds) & jnp.any(head < top_d[:, -1])
+
+    def body(st):
+        r, top_d, top_p, reads, updates = st
+        kth = top_d[:, -1]
+        lbs = jax.lax.dynamic_slice_in_dim(lb_sel_p, r * rs, rs, axis=1)
+        idx = jax.lax.dynamic_slice_in_dim(order_p, r * rs, rs, axis=1)
+        cand_pos = jnp.take(packed.gpos, idx, axis=0)  # (Q, rs), global
+        # Pad rows carry NO_POS; clipping the gather to row 0 is harmless
+        # because their +inf lower bound keeps them out of every mask.
+        raws = jnp.take(packed.raw, cand_pos, axis=0, mode="clip")
+        d = _euclid_rows(raws)
+        mask = lbs < kth[:, None]
+        d = jnp.where(mask, d, INF)
+        improved = jnp.min(d, axis=1) < kth
+        top_d, top_p = merge(top_d, top_p, cand_pos, d)
+        return (
+            r + 1,
+            top_d,
+            top_p,
+            reads + jnp.sum(mask, axis=1, dtype=jnp.int32),
+            updates + improved.astype(jnp.int32),
+        )
+
+    st0 = (jnp.int32(0), top_d0, top_p0, reads0,
+           jnp.zeros((n_q,), jnp.int32))
+    r, top_d, top_p, reads, updates = jax.lax.while_loop(cond, body, st0)
+
+    if select == "topk" and sel_len < n_pad:
+        # Same exactness-fallback protocol as the single-index engine: a
+        # query whose K-th selected bound still beats its BSF scans the
+        # remaining packed rows (pads stay +inf and are never needed).
+        kth_bound = lb_sel[:, -1]
+        all_rounds = -(-n_pad // rs)
+        pad_all = all_rounds * rs
+
+        def run_fallback(st):
+            idx_all = _pad_to(
+                jnp.arange(n_pad, dtype=jnp.int32), pad_all, 0)
+            lb_all = _pad_cols(lb, pad_all, INF)
+
+            def fcond(fst):
+                r2, top_d, *_ = fst
+                return (r2 < all_rounds) & jnp.any(kth_bound < top_d[:, -1])
+
+            def fbody(fst):
+                r2, top_d, top_p, reads, updates = fst
+                kth = top_d[:, -1]
+                need = kth_bound < kth
+                lbs = jax.lax.dynamic_slice_in_dim(
+                    lb_all, r2 * rs, rs, axis=1)
+                idx = jax.lax.dynamic_slice_in_dim(idx_all, r2 * rs, rs)
+                pos1 = jnp.take(packed.gpos, idx, axis=0)  # (rs,)
+                raws = jnp.take(packed.raw, pos1, axis=0, mode="clip")
+                d = _euclid_shared(raws)
+                mask = (
+                    (lbs < kth[:, None])
+                    & (lbs >= kth_bound[:, None])
+                    & need[:, None]
+                )
+                d = jnp.where(mask, d, INF)
+                improved = jnp.min(d, axis=1) < kth
+                cand_pos = jnp.broadcast_to(pos1[None, :], (n_q, rs))
+                top_d, top_p = merge(top_d, top_p, cand_pos, d)
+                return (
+                    r2 + 1,
+                    top_d,
+                    top_p,
+                    reads + jnp.sum(mask, axis=1, dtype=jnp.int32),
+                    updates + improved.astype(jnp.int32),
+                )
+
+            return jax.lax.while_loop(fcond, fbody, st)
+
+        st1 = (jnp.int32(0), top_d, top_p, reads, updates)
+        need0 = jnp.any(kth_bound < top_d[:, -1])
+        r2, top_d, top_p, reads, updates = jax.lax.cond(
+            need0, run_fallback, lambda st: st, st1
+        )
+        r = r + r2
+
+    return top_d, top_p, reads, updates, r
+
+
+def _packed_engine_for(packed: PackedComponents, statics: tuple):
+    """Per-packed-view jitted closures, cached on the view (same idiom —
+    and same lifetime argument — as the per-index ``_engine_for`` cache)."""
+    cache = getattr(packed, "_engines", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(packed, "_engines", cache)
+    fn = cache.get(statics)
+    if fn is not None:
+        return fn
+    k, round_size, select, impl = statics
+
+    @jax.jit
+    def fn(queries):
+        return _packed_engine_core(
+            packed, queries,
+            k=k, round_size=round_size, select=select, impl=impl,
+        )
+
+    cache[statics] = fn
+    return fn
+
+
+def exact_knn_batch_packed(
+    packed: PackedComponents,
+    queries: jax.Array,
+    k: int = 1,
+    round_size: int = 4096,
+    impl: str = "auto",
+    select: str = "topk",
+    stats: bool = False,
+) -> tuple:
+    """Batched exact k-NN over a packed multi-component store.
+
+    One fused lower-bound pass + one RDC loop for base + runs + deltas
+    together (vs one engine call per component); positions are global file
+    offsets. Same clamp/sentinel protocol as :func:`exact_knn_batch`, and
+    bit-exact vs a from-scratch single-index build over the concatenated
+    data (property-tested in ``tests/test_ingest.py``).
+    """
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    k_eff = min(k, packed.num_series)
+    fn = _packed_engine_for(packed, (k_eff, round_size, select, impl))
+    top_d, top_p, reads, updates, rounds = fn(
+        jnp.asarray(queries, jnp.float32))
+    if k_eff < k:
+        n_q = top_d.shape[0]
+        top_d = jnp.concatenate(
+            [top_d, jnp.full((n_q, k - k_eff), INF)], axis=1)
+        top_p = jnp.concatenate(
+            [top_p, jnp.full((n_q, k - k_eff), NO_POS)], axis=1)
+    if stats:
+        return top_d, top_p, reads, updates, rounds
+    return top_d, top_p
+
+
+def exact_search_batch_packed(
+    packed: PackedComponents,
+    queries: jax.Array,
+    cfg: SearchConfig = SearchConfig(),
+) -> SearchResult:
+    """Batched exact 1-NN over a packed multi-component store.
+
+    Only the sorted-candidate engine exists for the packed layout:
+    ``cfg.sort=False`` (the ADS+-style serial scan) is refused rather
+    than silently answered by the wrong algorithm — callers wanting that
+    baseline go through the per-component engines.
+    """
+    if not cfg.sort:
+        raise ValueError(
+            "the packed engine has no sort=False (serial-scan) mode; use "
+            "the per-component path")
+    fn = _packed_engine_for(
+        packed, (1, cfg.round_size, cfg.select, cfg.impl))
+    top_d, top_p, reads, updates, rounds = fn(
+        jnp.asarray(queries, jnp.float32))
+    return SearchResult(top_d[:, 0], top_p[:, 0], reads, updates, rounds)
 
 
 # Per-index jitted engines. Closing over the index arrays (instead of

@@ -74,6 +74,95 @@ def _lb_kernel_batch(q_ref, bl_ref, bu_ref, sax_ref, o_ref, *, scale: float):
     o_ref[...] = scale * acc
 
 
+def _lb_kernel_batch_masked(
+    q_ref, bl_ref, bu_ref, sax_ref, len_ref, o_ref, *, scale: float
+):
+    """Batched tile over a *packed multi-component* SAX array.
+
+    Same algebra as ``_lb_kernel_batch``, plus a per-block validity count:
+    the packed layout (``core.search.pack_components``) pads every
+    component's leaf-sorted run to a block_n multiple so an append can
+    extend the buffer without moving earlier components' rows, and
+    ``len_ref`` carries how many lanes of THIS block are real rows. Pad
+    lanes come back +inf, so no
+    downstream selection (top_k, round masks, fallback scan) can ever pick
+    one — the kernel, not the caller, owns the component boundaries.
+    """
+    sym = sax_ref[...].astype(jnp.int32)  # (w, bn)
+    bl = bl_ref[...][0]
+    bu = bu_ref[...][0]
+    lo = jnp.take(bl, sym, axis=0)  # hoisted, query-independent
+    hi = jnp.take(bu, sym, axis=0)
+    q = q_ref[...]  # (bq, w)
+    w = q.shape[-1]
+    acc = jnp.zeros((q.shape[0], sym.shape[1]), jnp.float32)
+    for j in range(w):
+        qj = q[:, j][:, None]
+        d = jnp.maximum(
+            jnp.maximum(qj - hi[j][None, :], lo[j][None, :] - qj), 0.0)
+        acc = acc + d * d
+    lane = jax.lax.broadcasted_iota(jnp.int32, acc.shape, 1)
+    o_ref[...] = jnp.where(
+        lane < len_ref[0, 0], scale * acc, jnp.float32(jnp.inf))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("series_length", "block_q", "block_n", "interpret"),
+)
+def lower_bound_sq_multi_pallas(
+    query_paa: jax.Array,
+    sax_t: jax.Array,
+    bp_padded: jax.Array,
+    series_length: int,
+    block_len: jax.Array,
+    *,
+    block_q: int = 8,
+    block_n: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """(Q, w) PAA batch x (w, N_pad) packed sax -> (Q, N_pad) lower bounds.
+
+    The fused multi-component sweep: ``sax_t`` concatenates every live
+    component (base + runs + deltas) with each component independently
+    padded to a ``block_n`` multiple, and ``block_len`` (N_pad/block_n,)
+    gives the valid-row count per block. One grid pass covers the whole
+    store — no per-component kernel launches — and pad lanes are masked to
+    +inf inside the kernel. Q must divide ``block_q`` exactly (ops.py pads).
+    """
+    nq, w = query_paa.shape
+    w2, n = sax_t.shape
+    if w != w2:
+        raise ValueError(f"query w={w} != sax w={w2}")
+    if nq % block_q or n % block_n:
+        raise ValueError(
+            f"(Q={nq}, N={n}) not multiples of ({block_q}, {block_n})"
+        )
+    if block_len.shape != (n // block_n,):
+        raise ValueError(
+            f"block_len {block_len.shape} != ({n // block_n},)")
+    scale = float(series_length) / float(w)
+    card1 = bp_padded.shape[0] - 1
+    bl = bp_padded[:-1][None, :]
+    bu = bp_padded[1:][None, :]
+    len2d = block_len.astype(jnp.int32)[None, :]  # (1, n_blocks)
+    grid = (nq // block_q, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_lb_kernel_batch_masked, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, card1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, card1), lambda i, j: (0, 0)),
+            pl.BlockSpec((w, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq, n), jnp.float32),
+        interpret=interpret,
+    )(query_paa.astype(jnp.float32), bl, bu, sax_t, len2d)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("series_length", "block_q", "block_n", "interpret"),

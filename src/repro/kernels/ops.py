@@ -104,6 +104,53 @@ def lower_bound_sq_batch(
     return out[:n_q, :n]
 
 
+def lower_bound_sq_multi(
+    query_paa: jax.Array,
+    sax: jax.Array,
+    bp_padded: jax.Array,
+    series_length: int,
+    block_len: jax.Array,
+    *,
+    impl: str = "auto",
+    block_q: int = 8,
+    block_n: int = 128,
+) -> jax.Array:
+    """(Q, w) PAA x (N_pad, w) PACKED multi-component sax -> (Q, N_pad).
+
+    The fused form of one lower-bound pass over a whole live store (base +
+    runs + delta shards) instead of one engine call per component: the
+    caller packs each component's leaf-sorted SAX rows padded to a
+    ``block_n`` multiple (``core.search.pack_components`` — the block
+    alignment lets an append extend the buffer without moving earlier
+    components' rows) and ``block_len[j]`` counts the valid rows of block
+    ``j``. Pad rows are +inf in the result, so downstream candidate
+    selection can never pick one.
+    """
+    n = sax.shape[0]
+    if n % block_n:
+        raise ValueError(f"packed N={n} not a multiple of block_n={block_n}")
+    if block_len.shape[0] != n // block_n:
+        raise ValueError(
+            f"block_len has {block_len.shape[0]} entries for "
+            f"{n // block_n} blocks")
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        valid = (
+            jnp.arange(block_n, dtype=jnp.int32)[None, :]
+            < jnp.asarray(block_len, jnp.int32)[:, None]
+        ).reshape(-1)
+        return _ref.lower_bound_sq_batch_multi(
+            query_paa, sax, bp_padded, series_length, valid
+        )
+    n_q = query_paa.shape[0]
+    q_p, _ = _pad_rows(query_paa, block_q, 0.0)
+    out = _lb.lower_bound_sq_multi_pallas(
+        q_p, sax.T, bp_padded, series_length,
+        jnp.asarray(block_len, jnp.int32),
+        block_q=block_q, block_n=block_n, interpret=not _on_tpu(),
+    )
+    return out[:n_q]
+
+
 def paa_isax(
     series: jax.Array,
     breakpoints: jax.Array,

@@ -57,6 +57,24 @@ def lower_bound_sq_batch(
     return (series_length / w) * acc
 
 
+def lower_bound_sq_batch_multi(
+    query_paa: jax.Array,
+    sax: jax.Array,
+    bp_padded: jax.Array,
+    series_length: int,
+    valid: jax.Array,
+) -> jax.Array:
+    """(Q, w) PAA batch x (N_pad, w) packed multi-component sax -> (Q, N_pad).
+
+    Oracle of the fused multi-component sweep: ``sax`` concatenates every
+    live component (base + runs + deltas), each padded to a block multiple
+    (``core.search.pack_components``); ``valid`` is the (N_pad,) bool row
+    mask. Pad rows come back +inf so no selection can pick them.
+    """
+    lb = lower_bound_sq_batch(query_paa, sax, bp_padded, series_length)
+    return jnp.where(valid[None, :], lb, jnp.float32(jnp.inf))
+
+
 def paa_isax(
     series: jax.Array,
     segments: int,

@@ -24,19 +24,52 @@ Live ingestion rides the same stack (serving/ingest.py)::
     append(batch)
         |
     IngestingRouter                    core.ingest.MutableIndex (base +
-        |                              delta shards behind an atomically
-        |  IngestPipeline (Stage-2:    swapped snapshot) wired into the
-        |  paa_isax -> refine keys ->  router: every appended batch
-        |  presort) -> DeltaShard      becomes a delta shard AND a routed
-        v                              shard (own batcher + engine);
+        |                              run + delta tiers behind an
+        |  IngestPipeline (Stage-2:    atomically swapped snapshot) wired
+        |  paa_isax -> refine keys ->  into the router: every appended
+        |  presort) -> DeltaShard      batch becomes a delta shard AND a
+        v                              routed shard (own batcher+engine);
     router.add_shard(delta)            queries stay exact at every point
         |
-    compaction daemon                  size-tiered CompactionPolicy; folds
-        |                              deltas into the base with linear
-        v                              merges (merge_runs — the ParIS+
-    router.swap_shards(old -> new)     property), then rewires the router
-                                       in ONE atomic shard-set swap, so
+    compaction daemon                  leveled CompactionPolicy.plan:
+        |                                minor: delta tier -> ONE run
+        v                                major: base + runs -> new base
+    router.swap_shards(old -> new)     linear merges only (merge_runs —
+                                       the ParIS+ property), each fold
+                                       bounded by its tier and rewired in
+                                       ONE atomic shard-set swap, so
                                        queries never see a partial view
+
+Tier lifecycle: an appended batch is born a *delta* shard; once
+``max_deltas``/``max_delta_series`` trip, a minor fold linear-merges the
+live deltas into one *run* shard (the base never participates — merge
+cost is bounded by the delta tier, not the store); once
+``max_runs``/``max_run_series`` trip, a major fold merges base + runs
+into a new *base* resharded S ways. ``tier="full"`` (shutdown, or
+``CompactionPolicy(leveled=False)``) is the old everything-at-once fold.
+
+Durability (core/durable.py, enabled by ``workdir=``): every component
+spills to an epoch dir and every acknowledged transition commits a
+versioned manifest BEFORE it publishes::
+
+    workdir/
+      MANIFEST.json          {format, version, next_epoch, series_length,
+                              segments, cardinality, refine_bits,
+                              base: {dir, base, num_series} | null,
+                              runs: [{dir, base, num_series}, ...],
+                              deltas: [...]}   <- tmp + atomic rename
+      e{N}/                  one immutable component (epoch) each:
+        keys.npy sax.npy pos.npy   the builder's epoch-shard format
+        raw.npy                    znormed raw, component file order
+        meta.json                  {num_series, base, series_length}
+
+    spill e{N} -> commit manifest -> publish snapshot -> GC retired dirs
+
+A crash at any point leaves either the old manifest (plus orphan dirs an
+interrupted spill/GC left behind) or the new one with every referenced
+dir complete; ``MutableIndex.recover(workdir)`` reloads the committed
+snapshot bit-exactly and sweeps the orphans (property-tested with
+randomized kill points in tests/test_durability.py).
 
 A single-index deployment is the same stack minus the router layer: one
 ``SearchRequestBatcher`` straight over one engine. The decode-side

@@ -13,25 +13,29 @@ Data path::
     append(batch)  ----->  IngestPipeline -> DeltaShard      (Stage-2:
         |                       |                             paa_isax ->
         |                       v                             refine keys ->
-        |                  MutableIndex snapshot swap         presort)
-        |                       |
+        |                  MutableIndex snapshot swap         presort; spill
+        |                       |                             + manifest
+        |                       |                             commit when
+        |                       |                             durable)
         +--- router.add_shard(delta.index, delta.base) ------ the delta is
                                                               immediately a
                                                               first-class
                                                               routed shard
     compaction daemon (background thread):
-        policy.should_compact(snapshot)?  -> mutable.compact()
-            merge_runs(base + deltas)        (linear merges, no locks held;
-            assemble new base                 queries/appends keep flowing)
+        policy.plan(snapshot)?  -> mutable.compact(tier=...)
+            minor: merge_runs(delta tier)    (linear merges, no locks held;
+                -> ONE run shard              queries/appends keep flowing;
+            major: merge_runs(base + runs)    merge cost bounded by the
+                -> new base                   folded tier, never O(total))
             publish snapshot                 (microsecond swap)
-        -> router.swap_shards(old base shards + folded delta shards,
-                              new base resharded S ways)     (atomic:
-                              every query sees a complete partition)
+        -> router.swap_shards(...)           (atomic, one per tier fold:
+            minor: folded delta shards out, the run shard in
+            major: old base shards + run shards out, resharded base in)
 
 Consistency: the router's shard set always covers exactly the series of
 some recent snapshot — appends register their delta *after* the mutable
 publish (a query racing the append sees the pre-append view; the append
-is not complete until registration returns), and the compaction rewire
+is not complete until registration returns), and each compaction rewire
 replaces old components with their compacted equivalent covering the same
 file range in one atomic swap. Exactness therefore holds at every
 instant, including mid-compaction (tested).
@@ -62,20 +66,25 @@ class IngestingRouter:
                      empty.
     num_base_shards: how many file-order shards the base index is split
                      into (and re-split into after every compaction).
-    compaction_policy: size-tiered compaction trigger; the background daemon
-                     (``start()``) evaluates it every ``compact_tick_ms``.
+    compaction_policy: leveled compaction trigger; the background daemon
+                     (``start()``) evaluates ``policy.plan`` every
+                     ``compact_tick_ms`` and runs the due tier fold.
                      Pass None to disable automatic compaction
                      (``compact_now()`` still works).
     chunk_series:    re-chunk big appended batches into delta shards of at
                      most this many series (None = one shard per batch).
     series_length:   required when ``base`` is None.
+    workdir:         make the underlying store durable (``e{N}`` spill +
+                     versioned manifest — see ``core.durable``); recover a
+                     crashed service by passing
+                     ``MutableIndex.recover(workdir)`` as ``base``.
     **router_knobs:  forwarded to :class:`ShardedSearchRouter` (k,
                      max_batch, admission control, engine knobs ...).
 
     ``submit``/``search_batch``/``poll``/``drain``/``stats`` delegate to
     the router; ``append`` ingests a batch and registers its delta
-    shard(s); the daemon folds deltas into the base and rewires the
-    router atomically.
+    shard(s); the daemon folds the due tier (deltas into a run, or base +
+    runs into a new base) and rewires the router atomically per fold.
     """
 
     def __init__(
@@ -87,6 +96,7 @@ class IngestingRouter:
         compact_tick_ms: float = 20.0,
         chunk_series: Optional[int] = None,
         series_length: Optional[int] = None,
+        workdir: Optional[str] = None,
         **router_knobs,
     ):
         from repro.serving.router import ShardedSearchRouter
@@ -94,19 +104,28 @@ class IngestingRouter:
         if num_base_shards < 1:
             raise ValueError("num_base_shards must be >= 1")
         if isinstance(base, MutableIndex):
+            if workdir is not None:
+                # Silently dropping workdir would leave the operator
+                # believing appends are durable when nothing spills.
+                raise ValueError(
+                    "workdir cannot be combined with a MutableIndex base "
+                    "— construct the store with workdir= (or "
+                    "MutableIndex.recover) and pass it in")
             self.mutable = base
         else:
-            self.mutable = MutableIndex(base, series_length=series_length)
+            self.mutable = MutableIndex(base, series_length=series_length,
+                                        workdir=workdir)
         self.num_base_shards = num_base_shards
         self.policy = compaction_policy
         self.compact_tick_ms = compact_tick_ms
         self.pipeline = IngestPipeline(self.mutable, chunk_series=chunk_series)
         self.router = ShardedSearchRouter(None, **router_knobs)
         # Service-level bookkeeping: which router shard ids implement the
-        # current base and each live delta. Guarded by _svc so appends and
-        # the compaction rewire never race the sid maps.
+        # current base and each live run/delta component. Guarded by _svc
+        # so appends and the compaction rewire never race the sid maps.
         self._svc = threading.Lock()
         self._base_sids: List[int] = []
+        self._run_sids: Dict[int, int] = {}  # id(run DeltaShard) -> sid
         self._delta_sids: Dict[int, int] = {}  # id(DeltaShard) -> sid
         self._thread: Optional[threading.Thread] = None
         self._stop_evt = threading.Event()
@@ -114,6 +133,9 @@ class IngestingRouter:
             snap = self.mutable.snapshot()
             if snap.base.num_series:
                 self._base_sids = self._attach_base(snap.base)
+            for r in snap.runs:
+                self._run_sids[id(r)] = self.router.add_shard(
+                    r.index, r.base)
             for d in snap.deltas:
                 self._delta_sids[id(d)] = self.router.add_shard(
                     d.index, d.base)
@@ -140,23 +162,34 @@ class IngestingRouter:
         return len(batch)
 
     # ---------------------------------------------------------- compaction
-    def compact_now(self) -> Optional[CompactionResult]:
-        """Run one compaction (if any deltas exist) and rewire the router.
+    def compact_now(self, tier: str = "full") -> Optional[CompactionResult]:
+        """Run one tier fold (if it has anything) and rewire the router.
 
         The merge runs without holding the service lock — appends and
         queries proceed; only the sid-map rewire at the end is locked.
+        Each fold is ONE atomic shard-set swap: retiring the folded
+        components and attaching their replacement together keeps
+        coverage exact — two separate transitions would expose a double-
+        or un-covered file range to queries in the window between them.
+        A minor fold swaps the folded delta shards for the new run shard
+        (the base shards never move); a major/full fold swaps the base
+        shards + folded run/delta shards for the resharded new base.
         """
-        res = self.mutable.compact()
+        res = self.mutable.compact(tier=tier)
         if res is None:
             return None
         with self._svc:
+            if res.tier == "minor":
+                retire = [self._delta_sids.pop(id(d))
+                          for d in res.retired_deltas]
+                sid = self.router.swap_shards(
+                    retire, [(res.run.index, res.run.base)])[0]
+                self._run_sids[id(res.run)] = sid
+                return res
             retire = list(self._base_sids)
-            for d in res.retired:
-                retire.append(self._delta_sids.pop(id(d)))
-            # ONE atomic swap: retiring the old components and attaching
-            # the compacted base together keeps coverage exact — two
-            # separate transitions would expose a double- or un-covered
-            # file range to queries in the window between them.
+            retire += [self._run_sids.pop(id(r)) for r in res.retired_runs]
+            retire += [self._delta_sids.pop(id(d))
+                       for d in res.retired_deltas]
             shards = min(self.num_base_shards, res.base.num_series)
             sharded = build_sharded_index(res.base, shards)
             self._base_sids = self.router.swap_shards(
@@ -167,10 +200,10 @@ class IngestingRouter:
         tick = max(self.compact_tick_ms, 1.0) / 1e3
         while not self._stop_evt.wait(tick):
             try:
-                if (self.policy is not None
-                        and self.policy.should_compact(
-                            self.mutable.snapshot())):
-                    self.compact_now()
+                if self.policy is not None:
+                    tier = self.policy.plan(self.mutable.snapshot())
+                    if tier is not None:
+                        self.compact_now(tier=tier)
             except Exception:
                 # A failed compaction leaves the old (complete) view
                 # serving; the daemon must survive to retry.

@@ -5,6 +5,23 @@ single real CPU device; multi-device tests spawn subprocesses that set
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import HealthCheck, settings
+
+    # CI profile (selected with --hypothesis-profile=ci): fewer examples,
+    # no deadline — jit compiles inside property bodies blow any per-case
+    # deadline, and the tier-1 job must stay under its 45-minute budget as
+    # the property suites (isax, search, durability) grow. Local runs keep
+    # the hypothesis default profile.
+    settings.register_profile(
+        "ci",
+        max_examples=20,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+except ImportError:  # hypothesis is optional, like in the test modules
+    pass
+
 
 @pytest.fixture(scope="session")
 def walk_20k():

@@ -1,0 +1,119 @@
+"""Benchmark harness: selection bugfix + the bench-regression gate logic.
+
+The ``--filter``/``--only`` zero-match case used to exit 0, which made
+the CI parity gate pass vacuously (e.g. a typo'd filter after a bench
+rename) — the subprocess tests pin the nonzero exit. The
+``check_regression`` tests drive the gate's compare() on synthetic
+reports (no benches actually run, so the whole module stays fast).
+"""
+
+import os
+import subprocess
+import sys
+
+from benchmarks.check_regression import compare, load_rows
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_py(args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), ROOT,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    return subprocess.run(
+        [sys.executable, os.path.join("benchmarks", "run.py"), *args],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=120)
+
+
+def test_filter_matching_zero_benches_exits_nonzero():
+    r = _run_py(["--tiny", "--strict-parity", "--filter",
+                 "no_such_bench_name"])
+    assert r.returncode == 2, (r.returncode, r.stderr)
+    assert "matched no registered bench" in r.stderr
+
+
+def test_only_matching_zero_benches_exits_nonzero():
+    r = _run_py(["--tiny", "--only", "nope"])
+    assert r.returncode == 2
+    assert "not registered" in r.stderr
+
+
+def test_only_with_one_typod_name_exits_nonzero():
+    # A valid name plus a typo must NOT silently run only the valid one —
+    # that would leave the typo'd bench's parity gate vacuously green.
+    r = _run_py(["--tiny", "--strict-parity", "--only",
+                 "lower_bound,no_such_bench"])
+    assert r.returncode == 2
+    assert "no_such_bench" in r.stderr
+
+
+def _report(rows, failures=()):
+    return dict(
+        rows=[dict(bench=b, name=n, us_per_call=us, derived="")
+              for b, n, us in rows],
+        failures=list(failures),
+    )
+
+
+def test_regression_gate_passes_identical_reports():
+    rep = _report([("ingest", "tput", 1000.0), ("query", "q64", 2000.0)])
+    assert compare(rep, rep) == []
+
+
+def test_regression_gate_fails_on_parity_break():
+    base = _report([("ingest", "tput", 1000.0)])
+    cur = _report([("ingest", "tput", 1000.0)],
+                  failures=["ingest: non-exact parity"])
+    problems = compare(cur, base)
+    assert problems and "parity" in problems[0]
+
+
+def test_regression_gate_fails_on_relative_slowdown():
+    base = _report([("a", "x", 1000.0), ("b", "y", 1000.0),
+                    ("c", "z", 1000.0)])
+    cur = _report([("a", "x", 1000.0), ("b", "y", 1000.0),
+                   ("c", "z", 5000.0)])  # one leg regressed 5x
+    problems = compare(cur, base, threshold=2.0)
+    assert len(problems) == 1 and "c/z" in problems[0]
+
+
+def test_regression_gate_normalizes_uniform_machine_speed():
+    base = _report([("a", "x", 1000.0), ("b", "y", 2000.0),
+                    ("c", "z", 3000.0)])
+    # a uniformly 3x slower runner is NOT a regression...
+    cur = _report([("a", "x", 3000.0), ("b", "y", 6000.0),
+                   ("c", "z", 9000.0)])
+    assert compare(cur, base, threshold=2.0) == []
+    # ... but with --absolute it is
+    assert len(compare(cur, base, threshold=2.0, absolute=True)) == 3
+
+
+def test_regression_gate_exclude_skips_latency_not_presence():
+    base = _report([("ingest", "q_under_ingest", 1000.0),
+                    ("a", "x", 1000.0), ("b", "y", 1000.0)])
+    cur = _report([("ingest", "q_under_ingest", 9000.0),
+                   ("a", "x", 1000.0), ("b", "y", 1000.0)])
+    assert len(compare(cur, base, threshold=2.0)) == 1
+    assert compare(cur, base, threshold=2.0, exclude=("under_ingest",)) == []
+    # excluded rows still must exist and still carry the parity gate
+    gone = _report([("a", "x", 1000.0), ("b", "y", 1000.0)])
+    assert len(compare(gone, base, exclude=("under_ingest",))) == 1
+
+
+def test_regression_gate_fails_on_dropped_row():
+    base = _report([("a", "x", 1000.0), ("b", "y", 1000.0)])
+    cur = _report([("a", "x", 1000.0)])
+    problems = compare(cur, base)
+    assert problems and "missing" in problems[0]
+
+
+def test_regression_gate_skips_noise_rows():
+    base = _report([("a", "x", 10.0), ("b", "y", 1000.0)])
+    cur = _report([("a", "x", 90.0), ("b", "y", 1000.0)])  # 9x on 10us row
+    assert compare(cur, base, min_us=500.0) == []
+
+
+def test_load_rows_shape():
+    rep = _report([("a", "x", 5.0)])
+    assert load_rows(rep) == {("a", "x"): 5.0}

@@ -1,0 +1,260 @@
+"""Durable live-ingest store: e{N} spill, manifest commit, crash recovery.
+
+The invariant under test (the tentpole property): kill the store at ANY
+point of its spill -> manifest-commit -> publish -> GC protocol, reopen
+it with ``MutableIndex.recover(workdir)``, and search answers are
+bit-exact vs a from-scratch ``build_index`` over a valid op-boundary
+prefix that contains every *acknowledged* append. (An append whose
+manifest replace landed just before the crash may survive unacknowledged
+— standard atomic-commit semantics — so the recovered prefix can extend
+past the last acknowledgement, never fall short of it.)
+"""
+
+import os
+import shutil
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import MutableIndex, build_index, exact_knn_batch
+from repro.core import durable
+from repro.core.durable import FaultError, fail_at
+from repro.core.ingest import CompactionPolicy
+
+try:  # only the randomized property test needs hypothesis; the
+    import hypothesis  # deterministic kill-point sweep always runs
+    from hypothesis import strategies as st
+except ImportError:
+    hypothesis = None
+
+RNG = np.random.default_rng(99)
+LENGTH = 64
+ROUND = 128
+RAW = RNG.standard_normal((360, LENGTH)).cumsum(axis=1).astype(np.float32)
+QUERIES = jnp.asarray(
+    RNG.standard_normal((4, LENGTH)).cumsum(axis=1), jnp.float32)
+
+
+@pytest.fixture()
+def workdir(tmp_path):
+    return str(tmp_path / "store")
+
+
+def _assert_prefix_parity(m, n, k=4):
+    ref = build_index(jnp.asarray(RAW[:n]))
+    want_d, want_p = exact_knn_batch(ref, QUERIES, k=k, round_size=ROUND)
+    got_d, got_p = m.exact_knn_batch(QUERIES, k=k, round_size=ROUND)
+    np.testing.assert_array_equal(np.asarray(want_p), np.asarray(got_p))
+    np.testing.assert_array_equal(np.asarray(want_d), np.asarray(got_d))
+
+
+# ------------------------------------------------------------ happy paths
+def test_recover_is_bit_exact_across_tiers(workdir):
+    m = MutableIndex(build_index(jnp.asarray(RAW[:150])), workdir=workdir)
+    o = 150
+    for sz in (40, 30):
+        m.append(RAW[o: o + sz])
+        o += sz
+    m.compact(tier="minor")
+    m.append(RAW[o: o + 25])
+    o += 25
+    r = MutableIndex.recover(workdir)
+    assert r.num_series == o and r.num_runs == 1 and r.num_deltas == 1
+    # components reload byte-identically, not just answer-identically
+    snap, rsnap = m.snapshot(), r.snapshot()
+    np.testing.assert_array_equal(
+        np.asarray(snap.base.sax), np.asarray(rsnap.base.sax))
+    np.testing.assert_array_equal(
+        np.asarray(snap.base.raw), np.asarray(rsnap.base.raw))
+    np.testing.assert_array_equal(snap.base_keys, rsnap.base_keys)
+    np.testing.assert_array_equal(
+        np.asarray(snap.runs[0].index.pos),
+        np.asarray(rsnap.runs[0].index.pos))
+    _assert_prefix_parity(r, o)
+
+
+def test_recovered_store_continues_durably(workdir):
+    m = MutableIndex(series_length=LENGTH, workdir=workdir)
+    m.append(RAW[:50])
+    r = MutableIndex.recover(workdir)
+    r.append(RAW[50:80])
+    r.compact(tier="minor")
+    r.append(RAW[80:95])
+    r.compact(tier="full")
+    r2 = MutableIndex.recover(workdir)
+    assert r2.num_series == 95
+    assert r2.num_runs == 0 and r2.num_deltas == 0
+    _assert_prefix_parity(r2, 95)
+
+
+def test_manifest_versions_track_snapshots(workdir):
+    m = MutableIndex(series_length=LENGTH, workdir=workdir)
+    assert durable.read_manifest(workdir).version == 0
+    m.append(RAW[:10])
+    m.append(RAW[10:20])
+    assert durable.read_manifest(workdir).version == m.snapshot().version
+    m.compact(tier="minor")
+    man = durable.read_manifest(workdir)
+    assert man.version == m.snapshot().version
+    assert len(man.runs) == 1 and not man.deltas and man.base is None
+    assert man.num_series == 20
+
+
+def test_recover_requires_manifest(tmp_path):
+    with pytest.raises(ValueError, match="no durable store"):
+        MutableIndex.recover(str(tmp_path))
+
+
+def test_init_refuses_existing_store(workdir):
+    MutableIndex(series_length=LENGTH, workdir=workdir)
+    with pytest.raises(ValueError, match="recover"):
+        MutableIndex(series_length=LENGTH, workdir=workdir)
+
+
+def test_recover_sweeps_orphans(workdir):
+    m = MutableIndex(series_length=LENGTH, workdir=workdir)
+    m.append(RAW[:30])
+    # residue of an interrupted spill and an interrupted manifest commit
+    os.makedirs(os.path.join(workdir, "e77"))
+    np.save(os.path.join(workdir, "e77", "keys.npy"), np.zeros(3))
+    open(os.path.join(workdir, durable.MANIFEST_TMP), "w").close()
+    r = MutableIndex.recover(workdir)
+    assert not os.path.exists(os.path.join(workdir, "e77"))
+    assert not os.path.exists(os.path.join(workdir, durable.MANIFEST_TMP))
+    assert r.num_series == 30
+    _assert_prefix_parity(r, 30)
+
+
+def test_compaction_gc_removes_retired_dirs(workdir):
+    m = MutableIndex(build_index(jnp.asarray(RAW[:100])), workdir=workdir)
+    m.append(RAW[100:140])
+    m.append(RAW[140:170])
+    before = {d for d in os.listdir(workdir) if d.startswith("e")}
+    m.compact(tier="full")
+    after = {d for d in os.listdir(workdir) if d.startswith("e")}
+    assert len(after) == 1 and not (after & before)  # one fresh base dir
+    _assert_prefix_parity(MutableIndex.recover(workdir), 170)
+
+
+# -------------------------------------------------------- crash injection
+def _run_killable(workdir, crash_at):
+    """One fixed op sequence under a fault hook; returns acked boundaries."""
+    hook = fail_at(crash_at)
+    acked = 0
+    boundaries = {0}
+    try:
+        m = MutableIndex(build_index(jnp.asarray(RAW[:120])),
+                         workdir=workdir, fault=hook)
+        acked = 120
+        boundaries.add(120)
+        for sz in (40, 30, 35):
+            boundaries.add(acked + sz)
+            m.append(RAW[acked: acked + sz])
+            acked += sz
+        m.compact(tier="minor")
+        boundaries.add(acked + 25)
+        m.append(RAW[acked: acked + 25])
+        acked += 25
+        m.compact(tier="full")
+    except FaultError:
+        pass
+    return acked, boundaries
+
+
+@pytest.mark.parametrize("crash_at", range(0, 56, 4))
+def test_kill_and_recover_at_fixed_points(workdir, crash_at):
+    """The spill->commit->publish->GC protocol survives a kill anywhere."""
+    acked, boundaries = _run_killable(workdir, crash_at)
+    man = durable.read_manifest(workdir)
+    if man is None:
+        assert acked == 0  # crashed before anything was acknowledged
+        return
+    r = MutableIndex.recover(workdir)
+    n = r.num_series
+    assert n >= acked and n in boundaries, (n, acked)
+    _assert_prefix_parity(r, n)
+    # no residue: every e{N} dir on disk is referenced by the manifest
+    man = durable.read_manifest(workdir)
+    live = {c.dir for c in man.runs + man.deltas}
+    if man.base:
+        live.add(man.base.dir)
+    on_disk = {d for d in os.listdir(workdir) if d.startswith("e")}
+    assert on_disk == live
+
+
+def _randomized_crash_case(data):
+    """Property body: a random op sequence killed at a random protocol
+    point recovers to a bit-exact acknowledged-prefix snapshot."""
+    ops = data.draw(st.lists(
+        st.sampled_from(["append", "minor", "major", "full"]),
+        min_size=1, max_size=5))
+    crash_at = data.draw(st.integers(0, 50))
+    workdir = tempfile.mkdtemp(prefix="paris_crash_")
+    try:
+        hook = fail_at(crash_at)
+        acked = 0
+        boundaries = {0}
+        try:
+            m = MutableIndex(series_length=LENGTH, workdir=workdir,
+                             fault=hook)
+            for op in ops:
+                if op == "append":
+                    sz = data.draw(st.integers(1, 40))
+                    boundaries.add(acked + sz)
+                    m.append(RAW[acked: acked + sz])
+                    acked += sz
+                else:
+                    m.compact(tier=op)
+        except FaultError:
+            pass
+        man = durable.read_manifest(workdir)
+        if man is None:
+            assert acked == 0
+            return
+        r = MutableIndex.recover(workdir)
+        n = r.num_series
+        assert n >= acked and n in boundaries, (n, acked)
+        if n:
+            _assert_prefix_parity(r, n)
+        # the recovered store must accept (and persist) new appends
+        r.append(RAW[n: n + 10])
+        assert MutableIndex.recover(workdir).num_series == n + 10
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+if hypothesis is not None:
+    test_randomized_crash_recovery = hypothesis.settings(
+        max_examples=12, deadline=None)(
+        hypothesis.given(data=st.data())(_randomized_crash_case))
+else:  # keep a visible skip when hypothesis is absent locally
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_randomized_crash_recovery():
+        pass
+
+
+def test_router_refuses_workdir_with_mutable_base(workdir):
+    from repro.serving.ingest import IngestingRouter
+    m = MutableIndex(series_length=LENGTH, workdir=workdir)
+    with pytest.raises(ValueError, match="workdir"):
+        IngestingRouter(m, 1, workdir=workdir + "-other")
+
+
+def test_maybe_compact_runs_leveled_plan_durably(workdir):
+    pol = CompactionPolicy(max_deltas=2, max_runs=2)
+    m = MutableIndex(series_length=LENGTH, workdir=workdir)
+    o = 0
+    for sz in (20, 20, 20, 20):
+        m.append(RAW[o: o + sz])
+        o += sz
+        m.maybe_compact(pol)
+    assert m.num_runs == 2 and m.num_deltas == 0  # two minor folds so far
+    res = m.maybe_compact(pol)  # 2 runs: the next tick trips the major
+    assert res is not None and res.tier == "major"
+    assert m.num_runs == 0 and m.num_deltas == 0
+    assert m.snapshot().base.num_series == o
+    r = MutableIndex.recover(workdir)
+    _assert_prefix_parity(r, o)

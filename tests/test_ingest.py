@@ -16,8 +16,10 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core import (
-    MutableIndex, build_index, exact_knn_batch, exact_search_batch,
+    MutableIndex, SearchConfig, build_index, exact_knn_batch,
+    exact_search_batch,
 )
+from repro.core.build_pipeline import _host_refine_key
 from repro.core.index import validate_index
 from repro.core.ingest import CompactionPolicy, build_delta_shard
 from repro.serving.ingest import IngestingRouter
@@ -223,6 +225,181 @@ def test_randomized_op_sequences(raw, queries):
             continue
         ref = build_index(jnp.asarray(raw[:o]))
         _assert_knn_parity(m, ref, queries, 4)
+
+
+# ------------------------------------------------- leveled (two-tier) path
+def test_minor_compaction_folds_deltas_not_base(raw, queries, ref_indices):
+    m, n = _grown(raw)
+    base_before = m.snapshot().base
+    res = m.compact(tier="minor")
+    assert res is not None and res.tier == "minor"
+    assert res.base is None and res.run is not None
+    assert res.retired_deltas and not res.retired_runs
+    # the base tier never participates in a minor fold — same object
+    assert m.snapshot().base is base_before
+    assert m.num_runs == 1 and m.num_deltas == 0
+    assert m.snapshot().runs[0].base == N_BASE
+    assert m.num_series == n
+    _assert_knn_parity(m, ref_indices[n], queries, 4)
+
+
+def test_minor_run_is_byte_identical_to_fresh_build_of_slice(raw):
+    m, n = _grown(raw)
+    m.compact(tier="minor")
+    run = m.snapshot().runs[0]
+    ref = build_index(jnp.asarray(raw[N_BASE:n]))
+    np.testing.assert_array_equal(
+        np.asarray(run.index.sax), np.asarray(ref.sax))
+    np.testing.assert_array_equal(
+        np.asarray(run.index.pos), np.asarray(ref.pos))
+    np.testing.assert_array_equal(
+        run.keys, _host_refine_key(np.asarray(ref.sax), 4, ref.cardinality))
+    assert all(validate_index(run.index).values())
+
+
+def test_major_folds_base_and_runs_not_deltas(raw, queries, ref_indices):
+    m, n2 = _grown(raw, 2)
+    m.compact(tier="minor")
+    m.append(raw[n2: n2 + APPENDS[2]])
+    n = n2 + APPENDS[2]
+    res = m.compact(tier="major")
+    assert res.tier == "major" and res.retired_runs and not res.retired_deltas
+    assert m.num_runs == 0 and m.num_deltas == 1  # the delta survived
+    base = m.snapshot().base
+    assert base.num_series == n2
+    ref2 = ref_indices[n2]
+    np.testing.assert_array_equal(np.asarray(base.sax), np.asarray(ref2.sax))
+    np.testing.assert_array_equal(np.asarray(base.pos), np.asarray(ref2.pos))
+    _assert_knn_parity(m, ref_indices[n], queries, 4)
+
+
+def test_major_with_no_runs_is_noop(raw):
+    m, _ = _grown(raw, 1)
+    assert m.compact(tier="major") is None
+    assert m.num_deltas == 1  # deltas untouched
+
+
+def test_full_fold_after_minor_takes_runs_and_deltas(raw, queries,
+                                                     ref_indices):
+    m, n2 = _grown(raw, 2)
+    m.compact(tier="minor")
+    m.append(raw[n2: n2 + APPENDS[2]])
+    n = n2 + APPENDS[2]
+    res = m.compact(tier="full")
+    assert res.tier == "full" and res.retired_runs and res.retired_deltas
+    assert m.num_runs == 0 and m.num_deltas == 0
+    assert m.snapshot().base.num_series == n
+    _assert_knn_parity(m, ref_indices[n], queries, 8)
+
+
+def test_policy_plans_tiers(raw):
+    pol = CompactionPolicy(max_deltas=2, max_runs=2)
+    m = MutableIndex(series_length=LENGTH)
+    assert pol.plan(m.snapshot()) is None
+    m.append(raw[:10])
+    assert pol.plan(m.snapshot()) is None
+    m.append(raw[10:20])
+    assert pol.plan(m.snapshot()) == "minor"
+    m.maybe_compact(pol)
+    assert m.num_runs == 1 and pol.plan(m.snapshot()) is None
+    m.append(raw[20:30])
+    m.append(raw[30:40])
+    m.maybe_compact(pol)
+    assert m.num_runs == 2
+    assert pol.plan(m.snapshot()) == "major"
+    res = m.maybe_compact(pol)
+    assert res.tier == "major" and m.num_runs == 0
+    # series-count triggers and the unleveled fallback
+    sized = CompactionPolicy(max_deltas=100, max_delta_series=10)
+    m.append(raw[40:52])
+    assert sized.plan(m.snapshot()) == "minor"
+    flat = CompactionPolicy(max_deltas=1, leveled=False)
+    assert flat.plan(m.snapshot()) == "full"
+
+
+def test_mid_minor_compaction_append_survives(raw, queries, ref_indices):
+    """An append racing a minor fold's publish lands after the new run."""
+    m, n = _grown(raw, 2)
+    tail = raw[n: n + APPENDS[2]]
+
+    def hook():
+        _assert_knn_parity(m, ref_indices[n], queries, 4)
+        m.append(tail)
+
+    res = m.compact(tier="minor", on_before_publish=hook)
+    assert res is not None
+    assert m.num_runs == 1 and m.num_deltas == 1
+    snap = m.snapshot()
+    assert snap.runs[0].base < snap.deltas[0].base
+    _assert_knn_parity(m, ref_indices[n + APPENDS[2]], queries, 4)
+
+
+# ------------------------------------------------------ fused multi-sweep
+@pytest.mark.parametrize("k", [1, 4, 8])
+def test_fused_and_per_component_paths_agree(raw, queries, ref_indices, k):
+    m, n = _grown(raw)
+    m.compact(tier="minor")
+    # re-append rows already in the base: exact duplicate distances stress
+    # the tie protocol — both paths must still agree bit-for-bit
+    m.append(raw[:10])
+    want_d, want_p = m.exact_knn_batch(queries, k=k, round_size=ROUND,
+                                       fused=False)
+    got_d, got_p = m.exact_knn_batch(queries, k=k, round_size=ROUND,
+                                     fused=True)
+    np.testing.assert_array_equal(want_p, got_p)
+    np.testing.assert_array_equal(want_d, got_d)
+
+
+def test_fused_is_the_default_with_multiple_components(raw, queries,
+                                                       ref_indices):
+    """fused='auto' over base+run+deltas is bit-exact vs the oracle."""
+    m, n = _grown(raw, 2)
+    m.compact(tier="minor")
+    m.append(raw[n: n + APPENDS[2]])
+    n += APPENDS[2]
+    assert len(m.snapshot().components()) == 3
+    _assert_knn_parity(m, ref_indices[n], queries, 4)  # fused by default
+    want = exact_search_batch(ref_indices[n], queries,
+                              SearchConfig(round_size=ROUND))
+    got = m.exact_search_batch(queries, SearchConfig(round_size=ROUND))
+    np.testing.assert_array_equal(
+        np.asarray(want.position), np.asarray(got.position))
+    np.testing.assert_array_equal(
+        np.asarray(want.dist_sq), np.asarray(got.dist_sq))
+
+
+def test_fused_select_sort_matches_topk(raw, queries):
+    m, n = _grown(raw)
+    ref = build_index(jnp.asarray(raw[:n]))
+    want_d, want_p = exact_knn_batch(ref, queries, k=4, round_size=ROUND)
+    got_d, got_p = m.exact_knn_batch(queries, k=4, round_size=ROUND,
+                                     fused=True, select="sort")
+    np.testing.assert_array_equal(np.asarray(want_p), got_p)
+    np.testing.assert_array_equal(np.asarray(want_d), got_d)
+
+
+def test_fused_kwarg_surface_matches_per_component(raw, queries):
+    """A typo'd kwarg must fail identically whatever the component count."""
+    m, _ = _grown(raw)
+    with pytest.raises(TypeError):
+        m.exact_knn_batch(queries, k=4, round_sized=64)  # typo'd key
+    out = m.exact_knn_batch(queries, k=4, round_size=ROUND, fused=True,
+                            stats=True)
+    assert len(out) == 5  # (d, p, reads, updates, rounds)
+    with pytest.raises(ValueError, match="serial-scan"):
+        from repro.core import exact_search_batch_packed
+        exact_search_batch_packed(
+            m._packed_view(m.snapshot()), queries,
+            SearchConfig(sort=False))
+
+
+def test_fused_k_exceeds_live_series(raw, queries):
+    m = MutableIndex(series_length=LENGTH)
+    m.append(raw[:3])
+    m.append(raw[3:5])
+    d, p = m.exact_knn_batch(queries, k=8, round_size=ROUND, fused=True)
+    assert np.all(p[:, 5:] == -1) and np.all(np.isinf(d[:, 5:]))
+    assert np.all(p[:, :5] >= 0)
 
 
 # --------------------------------------------------------- router serving

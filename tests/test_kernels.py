@@ -63,6 +63,65 @@ def test_lower_bound_batch_pallas_vs_ref(n_rows, n_q, w):
                                rtol=1e-5, atol=1e-4)
 
 
+@pytest.mark.parametrize("parts", [(64,), (170, 130), (60, 1, 300, 7)])
+@pytest.mark.parametrize("block", [128, 256])
+def test_lower_bound_multi_pallas_vs_ref(parts, block):
+    """Fused multi-component sweep: packed components, pad lanes -> +inf."""
+    length, w, card = 256, 16, 256
+    n = sum(parts)
+    series = _series(n, length)
+    bp = isax.gaussian_breakpoints(card)
+    bpp = isax.padded_breakpoints(card)
+    sax, _ = ref.paa_isax(series, w, bp)
+    saxn = np.asarray(sax)
+    # pack each "component" padded to a block multiple, like
+    # core.search.pack_components does for base + runs + deltas
+    packed, lens, real = [], [], []
+    lo = off = 0
+    for m in parts:
+        pad = (-m) % block
+        packed.append(np.concatenate(
+            [saxn[lo: lo + m], np.zeros((pad, w), np.uint8)]))
+        bl = np.full(((m + pad) // block,), block, np.int32)
+        if pad:
+            bl[-1] = block - pad
+        lens.append(bl)
+        real.extend(range(off, off + m))  # packed rows holding real series
+        lo += m
+        off += m + pad
+    sax_packed = jnp.asarray(np.concatenate(packed))
+    block_len = jnp.asarray(np.concatenate(lens))
+    real = np.asarray(real)
+    qs = isax.znorm(_series(5, length))
+    qps = isax.paa(qs, w)
+    want = ref.lower_bound_sq_batch(qps, sax, bpp, length)
+    got_ref = ops.lower_bound_sq_multi(
+        qps, sax_packed, bpp, length, block_len, impl="ref", block_n=block)
+    got_pl = ops.lower_bound_sq_multi(
+        qps, sax_packed, bpp, length, block_len, impl="pallas",
+        block_n=block)
+    for got in (got_ref, got_pl):
+        got = np.asarray(got)
+        np.testing.assert_allclose(got[:, real], np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+        pad_rows = np.setdiff1d(np.arange(got.shape[1]), real)
+        assert np.all(np.isinf(got[:, pad_rows]))
+
+
+def test_lower_bound_multi_rejects_bad_table():
+    length, w, card = 256, 16, 256
+    series = _series(128, length)
+    bpp = isax.padded_breakpoints(card)
+    sax, _ = ref.paa_isax(series, w, isax.gaussian_breakpoints(card))
+    qs = isax.paa(isax.znorm(_series(2, length)), w)
+    with pytest.raises(ValueError):  # N not a block multiple
+        ops.lower_bound_sq_multi(qs, sax[:100], bpp, length,
+                                 jnp.ones((1,), jnp.int32), block_n=128)
+    with pytest.raises(ValueError):  # wrong table length
+        ops.lower_bound_sq_multi(qs, sax, bpp, length,
+                                 jnp.ones((2,), jnp.int32), block_n=128)
+
+
 def test_lower_bound_sisd_matches():
     series = _series(96, 128)
     bp = isax.gaussian_breakpoints(256)
