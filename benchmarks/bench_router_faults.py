@@ -1,0 +1,167 @@
+"""Tail latency under a degraded replica: hedged vs unhedged fan-out.
+
+The fault-tolerance bench (ISSUE 6 acceptance): a 2-shard router with
+R=2 replica groups serves a burst stream while ONE replica of shard 0 is
+made ~10x slower than the healthy per-request latency (injected flush
+delay — the "limping but not dead" failure mode that defines p99 in real
+fleets, which no breaker catches). Three replays:
+
+  healthy   — no faults: the baseline per-request latency distribution,
+  unhedged  — slow replica, hedging off: every sub-query the placement
+              puts on the limping replica rides it to the end; the slow
+              replica's delay shows up directly in the stream's p99,
+  hedged    — same fault, hedging on: after ``hedge_ms`` the router
+              re-issues an unanswered sub-query on the sibling and takes
+              the first answer, so the limping replica stops defining
+              the tail. Hedges spend from the budget
+              (``hedge_budget`` x sub-queries + burst) — the bench
+              asserts the issued-hedge count respects that bound.
+
+Per-request latency is measured submit -> merged-future resolution
+(queue wait included), p50/p99 over the stream, median-of-3 replays.
+Parity for the gate: every answer in every mode is bit-exact vs the
+direct batch call, the hedge count stays inside the budget, and the
+hedged p99 beats the unhedged p99 (the row the acceptance criterion
+names). The p99 figures themselves are scheduling-dependent, so CI
+excludes these rows from the cross-machine latency diff (parity and
+presence still gate).
+
+    PYTHONPATH=src:. python benchmarks/bench_router_faults.py [--tiny]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import dataset
+from repro.core import build_index, build_sharded_index, exact_knn_batch
+from repro.serving.faults import FaultInjector
+from repro.serving.router import ShardedSearchRouter
+
+ROUND_SIZE = 512
+K = 8
+SHARDS = 2
+REPLICAS = 2
+HEDGE_BUDGET = 0.5
+HEDGE_BURST = 4
+REPLAYS = 3
+
+
+def _percentile(lat_us: np.ndarray, q: float) -> float:
+    return float(np.percentile(lat_us, q))
+
+
+def run(tiny: bool = False, impl: str = "ref"):
+    n = 2_000 if tiny else 20_000
+    stream = 32 if tiny else 128
+    max_batch = 8 if tiny else 16
+    raw = jnp.asarray(dataset(n, 256))
+    index = build_index(raw)
+    sharded = build_sharded_index(index, SHARDS)
+    rng = np.random.default_rng(7)
+    qs = rng.standard_normal((stream, 256)).cumsum(axis=1).astype(np.float32)
+    want_d, want_p = exact_knn_batch(
+        index, jnp.asarray(qs), k=K, round_size=ROUND_SIZE, impl=impl)
+    want_d, want_p = np.asarray(want_d), np.asarray(want_p)
+
+    def make_router(inj=None, **kw):
+        r = ShardedSearchRouter(
+            sharded, k=K, replicas=REPLICAS, max_batch=max_batch,
+            max_wait_ms=1.0, round_size=ROUND_SIZE, impl=impl,
+            fault_injector=inj, **kw)
+        r.start()
+        return r
+
+    def replay(router):
+        """Burst the stream; per-request submit->resolution latency."""
+        lat = []
+        futs = []
+        for q in qs:
+            t0 = time.perf_counter()
+            f = router.submit(q)
+            f.add_done_callback(
+                lambda fut, t0=t0: lat.append(time.perf_counter() - t0))
+            futs.append(f)
+        res = [f.result(timeout=120) for f in futs]
+        exact = all(
+            np.array_equal(np.asarray(res[i][0]), want_d[i])
+            and np.array_equal(np.asarray(res[i][1]), want_p[i])
+            for i in range(stream))
+        return exact, np.asarray(lat) * 1e6
+
+    def measure(router):
+        """Median-of-REPLAYS p50/p99 (us); AND of exactness verdicts."""
+        p50s, p99s, exact = [], [], True
+        for _ in range(REPLAYS):
+            ok, lat = replay(router)
+            exact = exact and ok
+            p50s.append(_percentile(lat, 50))
+            p99s.append(_percentile(lat, 99))
+        return exact, float(np.median(p50s)), float(np.median(p99s))
+
+    # Healthy baseline (also the jit warm-up for the shared shard engines).
+    healthy = make_router()
+    replay(healthy)  # compile flush engines outside the measurement
+    h_exact, h_p50, h_p99 = measure(healthy)
+    healthy.stop()
+    slow_ms = max(10.0 * h_p50 / 1e3, 5.0)  # the "10x-slow" replica
+    hedge_ms = max(2.0 * h_p50 / 1e3, 2.0)  # trigger: well past normal
+
+    # Unhedged: the limping replica defines the tail.
+    inj_u = FaultInjector()
+    unhedged = make_router(inj_u)
+    replay(unhedged)  # warm before the fault bites the measurement
+    inj_u.slow_replica(0, 0, ms=slow_ms)
+    u_exact, u_p50, u_p99 = measure(unhedged)
+    unhedged.stop()
+
+    # Hedged: same fault, sibling re-issue after hedge_ms.
+    inj_h = FaultInjector()
+    hedged = make_router(inj_h, hedge_ms=hedge_ms,
+                         hedge_budget=HEDGE_BUDGET, hedge_burst=HEDGE_BURST)
+    replay(hedged)
+    inj_h.slow_replica(0, 0, ms=slow_ms)
+    g_exact, g_p50, g_p99 = measure(hedged)
+    s = hedged.stats()
+    hedged.stop()
+
+    budget_ok = s["hedges"] <= HEDGE_BUDGET * s["shard_requests"] + HEDGE_BURST
+    hedge_rate = s["hedges"] / max(s["shard_requests"], 1)
+    cut = u_p99 / max(g_p99, 1e-9)
+    parity = (h_exact and u_exact and g_exact and budget_ok
+              and g_p99 < u_p99)
+
+    rows = [
+        (f"router_faults_{n}_healthy", h_p99,
+         f"p50_ms={h_p50 / 1e3:.2f} p99_ms={h_p99 / 1e3:.2f} "
+         f"R={REPLICAS}"),
+        (f"router_faults_{n}_unhedged", u_p99,
+         f"p50_ms={u_p50 / 1e3:.2f} p99_ms={u_p99 / 1e3:.2f} "
+         f"slow_ms={slow_ms:.1f} parity={u_exact}"),
+        (f"router_faults_{n}_hedged", g_p99,
+         f"p50_ms={g_p50 / 1e3:.2f} p99_ms={g_p99 / 1e3:.2f} "
+         f"p99_cut={cut:.2f}x hedges={s['hedges']} "
+         f"hedges_won={s['hedges_won']} rate={hedge_rate:.2f} "
+         f"budget_ok={budget_ok} parity={parity}"),
+    ]
+    return rows, parity
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: 2k series, 32-query stream")
+    ap.add_argument("--impl", default="ref")
+    args = ap.parse_args()
+    rows, parity = run(tiny=args.tiny, impl=args.impl)
+    from benchmarks.common import emit
+    emit(rows)
+    print(f"# parity={parity}")
+
+
+if __name__ == "__main__":
+    main()

@@ -35,8 +35,8 @@ def main() -> None:
 
     from benchmarks import (bench_batch_query, bench_build, bench_classifier,
                             bench_ingest, bench_knn_topk, bench_lower_bound,
-                            bench_pruning, bench_query, bench_search_batcher,
-                            roofline_table)
+                            bench_pruning, bench_query, bench_router_faults,
+                            bench_search_batcher, roofline_table)
     from benchmarks.common import emit
 
     # Each registry entry returns (rows, parity): parity is the bench's own
@@ -64,6 +64,7 @@ def main() -> None:
         "batch_query": _batch_query,
         "knn_topk": _knn_topk,
         "search_batcher": lambda quick: bench_search_batcher.run(tiny=quick),
+        "router_faults": lambda quick: bench_router_faults.run(tiny=quick),
         "ingest": _ingest,
         "pruning": lambda quick: (bench_pruning.run(quick=quick), None),
         "classifier": lambda quick: (bench_classifier.run(quick=quick), None),

@@ -71,6 +71,46 @@ dir complete; ``MutableIndex.recover(workdir)`` reloads the committed
 snapshot bit-exactly and sweeps the orphans (property-tested with
 randomized kill points in tests/test_durability.py).
 
+Fault model (serving/health.py, serving/faults.py; chaos-tested in
+tests/test_chaos.py)::
+
+    submit(query, deadline_ms=...)     end-to-end budget: rides into every
+        |                              replica queue (shedding drops by
+        |                              time-to-deadline, expired requests
+        |                              fail instead of searching) and arms
+        v                              a router-side reaper
+    replica shard group  x R           R interchangeable replicas per
+        |                              shard (same immutable index +
+        |  placement: health-gated     shared jitted engine, own batcher
+        |  least-queue-depth with      + daemon). ReplicaHealth = EWMA
+        |  power-of-two choices        answer latency + consecutive-
+        v                              failure breaker with half-open
+    hedged / retried fan-out           probing (down_after, probe_after_ms)
+        |
+        |  typed sub-query failure ->  retried ONCE on a sibling (never a
+        |  slow sub-query          ->  shed — that re-amplifies overload);
+        |                              hedged after hedge_ms (or an EWMA-
+        |                              scaled trigger), first answer wins;
+        v                              hedges capped by hedge_budget
+    failure taxonomy                   QueueFullError (admission, names
+                                       the losing shard; RequestShedError
+                                       for evictions) | DeadlineExceeded-
+                                       Error (budget blown, never a hang)
+                                       | ShardFailedError (.sid names the
+                                       shard, __cause__ the replica error)
+
+Because replicas of a shard serve the SAME immutable index, which replica
+answers (primary, retry, or hedge) cannot change a bit of the result:
+under any fault schedule, an answer is bit-exact or a typed error —
+never a silent truncation, never a hung future. ``FaultInjector``
+(serving/faults.py) drives that contract in tests: per-replica fail /
+delay / blackhole rules on the flush path, compaction-daemon kills at
+the ``tick`` and fold-to-rewire ``swap`` points (the rewire reconciles
+and self-heals), and crash-restart via ``core.durable`` ``fail_at``
+hooks. The compaction daemon survives failures with capped exponential
+backoff and surfaces ``compaction_failures`` / ``last_compaction_error``
+in ``stats()``.
+
 A single-index deployment is the same stack minus the router layer: one
 ``SearchRequestBatcher`` straight over one engine. The decode-side
 analogue is ``SlotBatcher`` (decode requests -> slots of one compiled
@@ -79,12 +119,18 @@ decode step).
 
 from repro.serving.serve_step import (
     greedy_generate, make_decode_step, make_prefill_step)
+from repro.serving.faults import FaultInjector, InjectedFaultError
+from repro.serving.health import ReplicaHealth, choose_replica
 from repro.serving.ingest import IngestingRouter
 from repro.serving.kv_cache import pad_cache_to, shard_cache
-from repro.serving.router import ShardedSearchRouter
+from repro.serving.router import ShardedSearchRouter, ShardFailedError
 from repro.serving.search_batcher import (
-    QueueFullError, SearchRequestBatcher)
+    DeadlineExceededError, QueueFullError, RequestShedError,
+    SearchRequestBatcher)
 
 __all__ = ["greedy_generate", "make_decode_step", "make_prefill_step",
-           "pad_cache_to", "shard_cache", "IngestingRouter",
-           "QueueFullError", "SearchRequestBatcher", "ShardedSearchRouter"]
+           "pad_cache_to", "shard_cache", "FaultInjector",
+           "InjectedFaultError", "ReplicaHealth", "choose_replica",
+           "IngestingRouter", "DeadlineExceededError", "QueueFullError",
+           "RequestShedError", "SearchRequestBatcher",
+           "ShardedSearchRouter", "ShardFailedError"]

@@ -28,27 +28,46 @@ Data path::
             major: merge_runs(base + runs)    merge cost bounded by the
                 -> new base                   folded tier, never O(total))
             publish snapshot                 (microsecond swap)
-        -> router.swap_shards(...)           (atomic, one per tier fold:
-            minor: folded delta shards out, the run shard in
-            major: old base shards + run shards out, resharded base in)
+        -> reconcile router vs snapshot      (diff the attached components
+            minor: folded delta shards out,   against the published
+                   the run shard in           snapshot; apply the whole
+            major: old base + run shards out, diff as ONE atomic
+                   resharded base in)         swap_shards transition)
 
 Consistency: the router's shard set always covers exactly the series of
 some recent snapshot — appends register their delta *after* the mutable
 publish (a query racing the append sees the pre-append view; the append
-is not complete until registration returns), and each compaction rewire
-replaces old components with their compacted equivalent covering the same
-file range in one atomic swap. Exactness therefore holds at every
-instant, including mid-compaction (tested).
+is not complete until registration returns), and the compaction rewire is
+a *reconciliation*: it diffs the live snapshot's components against the
+attached shard ids and applies the difference in one atomic swap. That
+makes the rewire idempotent and self-healing — if the daemon dies between
+a finished fold and the swap (chaos-tested via the ``"swap"`` fault
+point), the old components keep serving the same file ranges (still
+exact) and the NEXT tick's reconcile completes the rewire; nothing is
+double-attached and no range is ever uncovered. Exactness therefore
+holds at every instant, including mid-compaction and across a daemon
+kill (tested).
+
+Fault model: the daemon survives any compaction failure with capped
+exponential backoff (a persistently failing store degrades to
+delta-serving, it does not spin), and ``stats()`` surfaces
+``compaction_failures`` / ``last_compaction_error`` so the operator sees
+a sick compactor instead of a silently growing delta tier. A
+crash-restart resumes from the last committed manifest: constructing an
+:class:`IngestingRouter` over an existing durable ``workdir`` recovers
+the store (``MutableIndex.recover``) and serves it immediately — every
+acknowledged (manifest-committed) append survives.
 """
 
 from __future__ import annotations
 
 import threading
 from concurrent.futures import Future
-from typing import Dict, List, Optional, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.core import durable
 from repro.core.index import ParISIndex, build_sharded_index
 from repro.core.ingest import (
     CompactionPolicy, CompactionResult, IngestPipeline, MutableIndex,
@@ -71,20 +90,32 @@ class IngestingRouter:
                      ``compact_tick_ms`` and runs the due tier fold.
                      Pass None to disable automatic compaction
                      (``compact_now()`` still works).
+    compact_backoff_cap_ms: ceiling for the daemon's exponential backoff
+                     after a failed compaction (the retry delay doubles
+                     from ``compact_tick_ms`` per consecutive failure,
+                     capped here; one success resets it).
     chunk_series:    re-chunk big appended batches into delta shards of at
                      most this many series (None = one shard per batch).
-    series_length:   required when ``base`` is None.
+    series_length:   required when ``base`` is None and ``workdir`` holds
+                     no recoverable store.
     workdir:         make the underlying store durable (``e{N}`` spill +
-                     versioned manifest — see ``core.durable``); recover a
-                     crashed service by passing
-                     ``MutableIndex.recover(workdir)`` as ``base``.
+                     versioned manifest — see ``core.durable``). If the
+                     directory already holds a committed manifest and
+                     ``base`` is None, the store is RECOVERED and served
+                     as-is (crash-restart resume: every acknowledged
+                     append is queryable again on construction).
+    fault_injector:  a :class:`~repro.serving.faults.FaultInjector`
+                     shared with the router; its compaction rules bite
+                     the daemon tick (``"tick"``) and the window between
+                     a finished fold and the router rewire (``"swap"``).
     **router_knobs:  forwarded to :class:`ShardedSearchRouter` (k,
-                     max_batch, admission control, engine knobs ...).
+                     replicas, hedging, max_batch, admission control,
+                     engine knobs ...).
 
     ``submit``/``search_batch``/``poll``/``drain``/``stats`` delegate to
     the router; ``append`` ingests a batch and registers its delta
     shard(s); the daemon folds the due tier (deltas into a run, or base +
-    runs into a new base) and rewires the router atomically per fold.
+    runs into a new base) and reconciles the router atomically per fold.
     """
 
     def __init__(
@@ -94,9 +125,11 @@ class IngestingRouter:
         *,
         compaction_policy: Optional[CompactionPolicy] = CompactionPolicy(),
         compact_tick_ms: float = 20.0,
+        compact_backoff_cap_ms: float = 5000.0,
         chunk_series: Optional[int] = None,
         series_length: Optional[int] = None,
         workdir: Optional[str] = None,
+        fault_injector=None,
         **router_knobs,
     ):
         from repro.serving.router import ShardedSearchRouter
@@ -112,53 +145,112 @@ class IngestingRouter:
                     "— construct the store with workdir= (or "
                     "MutableIndex.recover) and pass it in")
             self.mutable = base
+        elif (base is None and workdir is not None
+              and durable.read_manifest(workdir) is not None):
+            # Crash-restart resume: the workdir already holds a committed
+            # store — reopen it at the last manifest and serve it, rather
+            # than refusing (the operator's restart command should not
+            # differ from the cold-start command).
+            self.mutable = MutableIndex.recover(workdir)
         else:
+            if base is not None and workdir is not None \
+                    and durable.read_manifest(workdir) is not None:
+                raise ValueError(
+                    f"{workdir} already holds a durable store; pass "
+                    "base=None to recover and serve it, or a fresh "
+                    "workdir to start over")
             self.mutable = MutableIndex(base, series_length=series_length,
                                         workdir=workdir)
         self.num_base_shards = num_base_shards
         self.policy = compaction_policy
         self.compact_tick_ms = compact_tick_ms
+        self.compact_backoff_cap_ms = compact_backoff_cap_ms
+        self._injector = fault_injector
         self.pipeline = IngestPipeline(self.mutable, chunk_series=chunk_series)
-        self.router = ShardedSearchRouter(None, **router_knobs)
+        self.router = ShardedSearchRouter(
+            None, fault_injector=fault_injector, **router_knobs)
         # Service-level bookkeeping: which router shard ids implement the
         # current base and each live run/delta component. Guarded by _svc
         # so appends and the compaction rewire never race the sid maps.
+        # Values keep a strong ref to the component: the maps are keyed
+        # by id(), and a collected component's id could be reused.
         self._svc = threading.Lock()
+        self._base_obj: Optional[ParISIndex] = None
         self._base_sids: List[int] = []
-        self._run_sids: Dict[int, int] = {}  # id(run DeltaShard) -> sid
-        self._delta_sids: Dict[int, int] = {}  # id(DeltaShard) -> sid
+        self._runs: Dict[int, Tuple[object, int]] = {}  # id(run) -> (run, sid)
+        self._deltas: Dict[int, Tuple[object, int]] = {}
+        self._daemon_lock = threading.Lock()
+        self._compaction_failures = 0
+        self._last_compaction_error: Optional[str] = None
         self._thread: Optional[threading.Thread] = None
         self._stop_evt = threading.Event()
+        self._reconcile()
+
+    # ------------------------------------------------------------- rewire
+    def _reconcile(self) -> None:
+        """Make the router's shard set match the live snapshot (atomic).
+
+        Diffs the published snapshot's components (base / runs / deltas)
+        against what is attached and applies the whole difference in ONE
+        ``swap_shards`` transition — retiring folded components and
+        attaching their replacement together keeps coverage exact; two
+        separate transitions would expose a double- or un-covered file
+        range in the window between them. A no-diff call does nothing,
+        so the daemon runs this every tick as self-healing: a rewire the
+        previous cycle missed (killed mid-swap) completes here.
+        """
         with self._svc:
             snap = self.mutable.snapshot()
-            if snap.base.num_series:
-                self._base_sids = self._attach_base(snap.base)
-            for r in snap.runs:
-                self._run_sids[id(r)] = self.router.add_shard(
-                    r.index, r.base)
-            for d in snap.deltas:
-                self._delta_sids[id(d)] = self.router.add_shard(
-                    d.index, d.base)
-
-    def _attach_base(self, base: ParISIndex) -> List[int]:
-        shards = min(self.num_base_shards, base.num_series)
-        sharded = build_sharded_index(base, shards)
-        return self.router.swap_shards(
-            (), list(zip(sharded.shards, sharded.offsets)))
+            want_runs = {id(r): r for r in snap.runs}
+            want_deltas = {id(d): d for d in snap.deltas}
+            retire: List[int] = []
+            for key in [k for k in self._runs if k not in want_runs]:
+                retire.append(self._runs.pop(key)[1])
+            for key in [k for k in self._deltas if k not in want_deltas]:
+                retire.append(self._deltas.pop(key)[1])
+            new_runs = [r for k, r in want_runs.items()
+                        if k not in self._runs]
+            new_deltas = [d for k, d in want_deltas.items()
+                          if k not in self._deltas]
+            base_changed = snap.base is not self._base_obj
+            base_pairs: List[Tuple[ParISIndex, int]] = []
+            if base_changed:
+                retire += self._base_sids
+                if snap.base.num_series:
+                    shards = min(self.num_base_shards, snap.base.num_series)
+                    sharded = build_sharded_index(snap.base, shards)
+                    base_pairs = list(zip(sharded.shards, sharded.offsets))
+            add = (base_pairs
+                   + [(r.index, r.base) for r in new_runs]
+                   + [(d.index, d.base) for d in new_deltas])
+            if not retire and not add:
+                return
+            sids = self.router.swap_shards(retire, add)
+            nb = len(base_pairs)
+            nr = len(new_runs)
+            if base_changed:
+                self._base_obj = snap.base
+                self._base_sids = sids[:nb]
+            for r, sid in zip(new_runs, sids[nb:nb + nr]):
+                self._runs[id(r)] = (r, sid)
+            for d, sid in zip(new_deltas, sids[nb + nr:]):
+                self._deltas[id(d)] = (d, sid)
 
     # -------------------------------------------------------------- ingest
     def append(self, batch) -> int:
         """Ingest one (B, n) batch; series are queryable on return.
 
         Each resulting delta shard attaches to the router with its own
-        admission-controlled batcher + engine. Returns the number of
-        series appended.
+        admission-controlled replica group + engine. Returns the number
+        of series appended.
         """
         batch = np.asarray(batch, np.float32)
         with self._svc:
             for delta in self.pipeline.append(batch):
-                self._delta_sids[id(delta)] = self.router.add_shard(
-                    delta.index, delta.base)
+                if id(delta) not in self._deltas:
+                    self._deltas[id(delta)] = (
+                        delta,
+                        self.router.add_shard(delta.index, delta.base))
         return len(batch)
 
     # ---------------------------------------------------------- compaction
@@ -166,52 +258,53 @@ class IngestingRouter:
         """Run one tier fold (if it has anything) and rewire the router.
 
         The merge runs without holding the service lock — appends and
-        queries proceed; only the sid-map rewire at the end is locked.
-        Each fold is ONE atomic shard-set swap: retiring the folded
-        components and attaching their replacement together keeps
-        coverage exact — two separate transitions would expose a double-
-        or un-covered file range to queries in the window between them.
-        A minor fold swaps the folded delta shards for the new run shard
+        queries proceed; only the reconcile at the end is locked. A
+        minor fold swaps the folded delta shards for the new run shard
         (the base shards never move); a major/full fold swaps the base
         shards + folded run/delta shards for the resharded new base.
         """
         res = self.mutable.compact(tier=tier)
         if res is None:
             return None
-        with self._svc:
-            if res.tier == "minor":
-                retire = [self._delta_sids.pop(id(d))
-                          for d in res.retired_deltas]
-                sid = self.router.swap_shards(
-                    retire, [(res.run.index, res.run.base)])[0]
-                self._run_sids[id(res.run)] = sid
-                return res
-            retire = list(self._base_sids)
-            retire += [self._run_sids.pop(id(r)) for r in res.retired_runs]
-            retire += [self._delta_sids.pop(id(d))
-                       for d in res.retired_deltas]
-            shards = min(self.num_base_shards, res.base.num_series)
-            sharded = build_sharded_index(res.base, shards)
-            self._base_sids = self.router.swap_shards(
-                retire, list(zip(sharded.shards, sharded.offsets)))
+        if self._injector is not None:
+            # The nastiest window: the fold is published (and, durable,
+            # committed) but the router still serves the old components.
+            self._injector.on_compaction("swap")
+        self._reconcile()
         return res
 
     def _compact_loop(self):
         tick = max(self.compact_tick_ms, 1.0) / 1e3
-        while not self._stop_evt.wait(tick):
+        cap = max(self.compact_backoff_cap_ms / 1e3, tick)
+        streak = 0
+        wait = tick
+        while not self._stop_evt.wait(wait):
             try:
+                if self._injector is not None:
+                    self._injector.on_compaction("tick")
+                # Self-healing first: finish any rewire a previous cycle
+                # died in the middle of before planning new work.
+                self._reconcile()
                 if self.policy is not None:
                     tier = self.policy.plan(self.mutable.snapshot())
                     if tier is not None:
                         self.compact_now(tier=tier)
-            except Exception:
+                streak = 0
+                wait = tick
+            except Exception as e:  # noqa: BLE001 — daemon must survive
                 # A failed compaction leaves the old (complete) view
-                # serving; the daemon must survive to retry.
-                pass
+                # serving; back off exponentially (capped) so a
+                # persistently failing store does not spin the core,
+                # and surface the failure in stats().
+                with self._daemon_lock:
+                    self._compaction_failures += 1
+                    self._last_compaction_error = repr(e)
+                streak += 1
+                wait = min(tick * (2.0 ** streak), cap)
 
     # ----------------------------------------------------------- lifecycle
     def start(self, tick_ms: Optional[float] = None) -> None:
-        """Start the per-shard flushers and the compaction daemon."""
+        """Start the per-replica flushers and the compaction daemon."""
         self.router.start(tick_ms)
         if self._thread is None and self.policy is not None:
             self._stop_evt.clear()
@@ -234,8 +327,8 @@ class IngestingRouter:
     def num_series(self) -> int:
         return self.mutable.num_series
 
-    def submit(self, query) -> Future:
-        return self.router.submit(query)
+    def submit(self, query, *, deadline_ms: Optional[float] = None) -> Future:
+        return self.router.submit(query, deadline_ms=deadline_ms)
 
     def search_batch(self, queries):
         return self.router.search_batch(queries)
@@ -252,4 +345,7 @@ class IngestingRouter:
         s = self.router.stats()
         s["ingest"] = self.mutable.stats()
         s["ingest"]["series_per_sec"] = self.pipeline.stats.series_per_sec
+        with self._daemon_lock:
+            s["compaction_failures"] = self._compaction_failures
+            s["last_compaction_error"] = self._last_compaction_error
         return s

@@ -1,60 +1,82 @@
-"""Sharded multi-index search router: one host, S shards, exact answers.
+"""Fault-tolerant sharded search router: replicas, deadlines, hedging.
 
 The single-host analogue of ``core.distributed.make_distributed_batch_search``
 — ParIS+'s query answering distributes exact search across workers over a
-partitioned index, and this is that shape served from threads instead of a
-``shard_map`` mesh:
+partitioned index, and this is that shape served from threads — hardened
+into a serving *fabric* that survives the failures parallelism multiplies
+(a dead engine, a slow thread, a full queue must degrade one sub-query,
+not the fleet):
 
   * the datastore is split into self-contained file-order shards
-    (:func:`repro.core.index.build_sharded_index`); each shard gets its own
-    jitted batch engine (:func:`repro.core.search.make_batch_engine`, pow2
-    query buckets so no per-shape retracing) and its own admission-
-    controlled :class:`~repro.serving.search_batcher.SearchRequestBatcher`;
-  * ``submit(query)`` fans the query out to every shard's batcher and
-    returns ONE future; when the last shard answers, the per-shard (k,)
-    top lists are merged into the global answer on the answering thread —
-    the shared :func:`repro.core.search.merge_top_lists` protocol: shards
-    partition the file range, so per-shard lists are ownership-disjoint
-    and the merge is a plain concat + stable k-smallest selection with
-    shard-local positions translated by the shard's file offset (sentinel
-    (INF, ``NO_POS``) slots sink and survive only when the whole datastore
-    holds fewer than k series);
+    (:func:`repro.core.index.build_sharded_index`); each shard is served
+    by a **replica group** of R interchangeable replicas — same immutable
+    shard index (the jitted engine is shared through the per-index cache),
+    but each replica has its own admission-controlled
+    :class:`~repro.serving.search_batcher.SearchRequestBatcher` and its
+    own daemon flusher. Placement is least-queue-depth with
+    power-of-two-choices sampling over the replicas the per-replica
+    health breaker (``serving.health``) considers live, so a dead or
+    degraded replica is routed *around* instead of failing the query;
+  * ``submit(query, deadline_ms=...)`` fans the query out to ONE replica
+    per shard and returns ONE future; when the last shard resolves, the
+    per-shard (k,) top lists are merged into the global answer on the
+    answering thread (the shared :func:`repro.core.search.merge_top_lists`
+    protocol over ownership-disjoint partitions — concat + stable
+    k-smallest, positions translated by shard offsets);
+  * **end-to-end deadlines**: ``deadline_ms`` rides into every replica
+    queue (deadline-aware shedding drops by time-to-deadline, not queue
+    age; an expired request is failed, not searched) and a router-side
+    reaper fails the merged future with
+    :class:`~repro.serving.search_batcher.DeadlineExceededError` the
+    instant the deadline passes — a blackholed replica produces a typed
+    error at the deadline, never a hang;
+  * **hedged / retried fan-out**: a sub-query that fails with a typed
+    replica fault is re-issued once on a sibling replica (never for a
+    shed — re-amplifying shed load melts an overloaded fleet), and a
+    sub-query that is merely *slow* is hedged: after ``hedge_ms`` (or an
+    EWMA-scaled trigger with ``hedge_ms="auto"``) the router re-issues it
+    on a sibling and takes whichever answer lands first, so one slow
+    replica stops defining p99. Hedges spend from a budget
+    (``hedge_budget`` x sub-queries + ``hedge_burst``) so hedging cannot
+    double the load on a fleet that is slow because it is saturated;
+  * failure taxonomy (what a merged future can carry):
+    :class:`~repro.serving.search_batcher.QueueFullError` — admission
+    turned the request away (the message names the losing shard;
+    door-step rejects are retried once on a sibling first);
+    :class:`~repro.serving.search_batcher.DeadlineExceededError` — the
+    end-to-end deadline passed; :class:`ShardFailedError` — every attempt
+    at one shard failed (``.sid`` names it, ``__cause__`` keeps the last
+    replica error). Anything else is a router bug, surfaced loudly;
   * the shard set is DYNAMIC: :meth:`add_shard` attaches a new file-range
-    shard (its own batcher + engine) to a running router, and
+    shard (a whole replica group) to a running router, and
     :meth:`swap_shards` atomically retires shards and registers their
-    replacements — the live-ingest path (``serving.ingest``) registers
-    every fresh delta shard and swaps the old base + folded deltas for
-    the compacted base without blocking queries. Every query fans out
-    over one consistent shard-set snapshot (a reader/writer lock: submits
-    share, swaps exclude), and a retired shard answers everything it
-    accepted before it detaches, so in-flight requests always merge a
-    complete partition of some valid view;
-  * thread-level parallelism comes from the per-shard daemon flushers
-    (``start()``): each shard's batcher runs ``inline_flush=False``, so
-    its own thread performs its engine calls — S shards search
-    concurrently, queries stream in from any number of submitters;
-  * admission control is delegated to the per-shard batchers (all shards
-    see the same stream, so they saturate together): ``reject`` surfaces
-    as a :class:`~repro.serving.search_batcher.QueueFullError` raised from
-    ``submit``, ``shed-oldest`` fails the merged future of the shed
-    request, ``block`` applies backpressure to the submitter. ``stats()``
-    aggregates queue depths, shed/reject counts and merge latency across
-    shards (retired shards' counters are folded in, so totals stay
-    cumulative across swaps).
+    replacements — the live-ingest path registers delta shards and swaps
+    compacted components without blocking queries. Every query fans out
+    over one consistent shard-set snapshot (a reader/writer lock:
+    submits share, swaps exclude); retired replicas are flagged so late
+    retries/hedges skip them, and each drains everything it accepted
+    before detaching;
+  * chaos instrumentation: a ``fault_injector``
+    (:class:`~repro.serving.faults.FaultInjector`) hooks every replica's
+    flush path — injected failures, latency, blackholes — driving the
+    chaos suite's contract: under any fault schedule, every answer is
+    bit-exact or a typed error, and no future hangs.
 
 Exactness: every shard scans (and prunes) only its own partition, and the
 union of partitions is the datastore, so the merged k-NN list is exactly
-the single-index answer — bit-identical distances (per-series math does
-not depend on which shard a series lives in) in the identical ascending
-order, with ties broken toward the lower file position.
+the single-index answer — replicas of a shard hold the SAME immutable
+index, so WHICH replica answers (primary, retry, or hedge) cannot change
+a single bit of the result.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
+import heapq
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -65,9 +87,26 @@ from repro.core.index import (
 from repro.core.search import (
     NO_POS, SearchConfig, SearchResult, merge_top_lists,
 )
-from repro.serving.search_batcher import SearchRequestBatcher
+from repro.serving.health import ReplicaHealth, choose_replica
+from repro.serving.search_batcher import (
+    DeadlineExceededError, QueueFullError, RequestShedError,
+    SearchRequestBatcher,
+)
 
 _NO_POS = int(NO_POS)
+
+
+class ShardFailedError(RuntimeError):
+    """Every attempt at one shard failed; the merged answer is lost.
+
+    ``sid`` names the losing shard (the satellite contract: a partial
+    failure is attributable, not anonymous); ``__cause__`` carries the
+    last underlying replica error.
+    """
+
+    def __init__(self, sid: int, message: str):
+        super().__init__(message)
+        self.sid = sid
 
 
 class _RWLock:
@@ -111,15 +150,126 @@ class _RWLock:
         self._cond.release()
 
 
-@dataclasses.dataclass
+class _Timer:
+    """One shared lazy daemon firing scheduled callbacks (heap-ordered).
+
+    Serves the router's two time-triggered paths: hedge triggers and the
+    deadline reaper. ``on_stop`` decides an entry's fate when the timer
+    is stopped with work still queued: ``"fire"`` runs it immediately
+    (a deadline MUST expire its future — dropping it on shutdown would
+    recreate the hang deadlines exist to kill), ``"drop"`` discards it
+    (a hedge into a stopping router would enqueue work nobody flushes).
+    Callbacks run on the timer thread and must be quick; exceptions are
+    swallowed (one bad callback must not kill the reaper).
+    """
+
+    def __init__(self, name: str = "router-timer"):
+        self._name = name
+        self._cond = threading.Condition()
+        self._heap: list = []
+        self._seq = 0
+        self._thread: Optional[threading.Thread] = None
+        self._stopped = False
+
+    def schedule(self, when: float, fn, on_stop: str = "drop") -> None:
+        with self._cond:
+            heapq.heappush(self._heap, (when, self._seq, fn, on_stop))
+            self._seq += 1
+            self._stopped = False
+            if self._thread is None or not self._thread.is_alive():
+                self._thread = threading.Thread(
+                    target=self._loop, name=self._name, daemon=True)
+                self._thread.start()
+            self._cond.notify_all()
+
+    def _loop(self) -> None:
+        while True:
+            fn = None
+            with self._cond:
+                if self._stopped:
+                    return
+                if not self._heap:
+                    self._cond.wait()
+                else:
+                    delay = self._heap[0][0] - time.monotonic()
+                    if delay > 0:
+                        self._cond.wait(delay)
+                    else:
+                        fn = heapq.heappop(self._heap)[2]
+            if fn is not None:
+                try:
+                    fn()
+                except Exception:  # noqa: BLE001 — reaper must survive
+                    pass
+
+    def stop(self) -> None:
+        with self._cond:
+            self._stopped = True
+            leftovers = self._heap
+            self._heap = []
+            t = self._thread
+            self._thread = None
+            self._cond.notify_all()
+        if t is not None and t is not threading.current_thread():
+            t.join(timeout=5)
+        for _, _, fn, on_stop in sorted(leftovers):
+            if on_stop == "fire":
+                try:
+                    fn()
+                except Exception:  # noqa: BLE001
+                    pass
+
+
+@dataclasses.dataclass(eq=False)
+class _Replica:
+    rid: int  # replica id within the shard (0..R-1)
+    batcher: SearchRequestBatcher
+    health: ReplicaHealth
+    retired: bool = False  # flagged by swap_shards before the stop/drain
+
+    def queue_depth(self) -> int:
+        return self.batcher.queue_depth()
+
+
+@dataclasses.dataclass(eq=False)
 class _RouterShard:
     sid: int  # stable shard id (registration order)
     offset: int  # global file offset of the shard's range
-    batcher: SearchRequestBatcher
+    replicas: List[_Replica]
+
+
+class _InFlight:
+    """Per-request fan-out state: one slot per shard, first answer wins.
+
+    ``parts[s]`` resolves exactly once per shard (("ok", result) or
+    ("err", exc)); ``inflight``/``attempts``/``tried``/``hedged`` track
+    the rescue machinery so an error is only final once no sibling
+    attempt can still answer.
+    """
+
+    __slots__ = ("out", "query", "deadline", "entries", "lock", "parts",
+                 "inflight", "attempts", "tried", "hedged", "stash",
+                 "remaining")
+
+    def __init__(self, out: Future, query: np.ndarray,
+                 deadline: Optional[float], entries: list):
+        self.out = out
+        self.query = query
+        self.deadline = deadline
+        self.entries = entries
+        self.lock = threading.Lock()
+        n = len(entries)
+        self.parts: List[Optional[tuple]] = [None] * n
+        self.inflight = [0] * n
+        self.attempts = [0] * n
+        self.tried: List[List[int]] = [[] for _ in range(n)]
+        self.hedged = [False] * n
+        self.stash: List[Optional[BaseException]] = [None] * n
+        self.remaining = n
 
 
 class ShardedSearchRouter:
-    """Fan queries out to per-shard batch engines; merge exact answers.
+    """Fan queries out to replica shard groups; merge exact answers.
 
     Parameters
     ----------
@@ -133,15 +283,34 @@ class ShardedSearchRouter:
     k:           None -> exact 1-NN (``SearchResult`` per request with
                  global file positions); int >= 1 -> exact k-NN
                  (((k,) dists ascending, (k,) global positions)).
-    max_batch / max_wait_ms / min_bucket: per-shard batching knobs (see
+    replicas:    R interchangeable replicas per shard (each its own
+                 batcher + daemon; placement is p2c least-queue-depth
+                 over the healthy ones). R=1 keeps the pre-replica
+                 behavior.
+    hedge_ms:    None disables hedging; a float re-issues an unanswered
+                 sub-query on a sibling after that many ms; ``"auto"``
+                 scales the trigger from the primary replica's EWMA
+                 latency (``hedge_ewma_factor`` x EWMA, floored at
+                 ``hedge_floor_ms``).
+    hedge_budget / hedge_burst: hedges are capped at
+                 ``hedge_budget * sub-queries + hedge_burst`` over the
+                 router's life — the melt-protection bound.
+    retry_failures: re-issue a sub-query once on a sibling after a typed
+                 replica failure (never after a shed).
+    down_after / probe_after_ms: per-replica health breaker knobs
+                 (:class:`~repro.serving.health.ReplicaHealth`).
+    fault_injector: a :class:`~repro.serving.faults.FaultInjector` whose
+                 rules bite every replica's flush path (chaos testing).
+    max_batch / max_wait_ms / min_bucket: per-replica batching knobs (see
                  :class:`SearchRequestBatcher`).
-    max_pending / policy / block_timeout_ms: per-shard admission control.
+    max_pending / policy / block_timeout_ms: per-replica admission
+                 control.
     cfg / round_size / select / impl / leaf_cap: engine knobs.
 
-    Call ``start()`` to spawn one daemon flusher per shard (the serving
-    mode: S threads search concurrently); without it, ``poll()`` or
-    ``drain()`` advance all shards from the calling thread. Shards added
-    later inherit the same knobs (and a daemon, if started).
+    Call ``start()`` to spawn one daemon flusher per replica (the serving
+    mode); without it, ``poll()`` or ``drain()`` advance all replicas
+    from the calling thread. Shards added later inherit the same knobs
+    (and daemons, if started).
     """
 
     def __init__(
@@ -150,6 +319,16 @@ class ShardedSearchRouter:
         num_shards: Optional[int] = None,
         *,
         k: Optional[int] = None,
+        replicas: int = 1,
+        hedge_ms: Union[float, str, None] = None,
+        hedge_ewma_factor: float = 3.0,
+        hedge_floor_ms: float = 1.0,
+        hedge_budget: float = 0.1,
+        hedge_burst: int = 4,
+        retry_failures: bool = True,
+        down_after: int = 3,
+        probe_after_ms: float = 250.0,
+        fault_injector=None,
         max_batch: int = 64,
         max_wait_ms: float = 2.0,
         cfg: SearchConfig = SearchConfig(),
@@ -162,10 +341,31 @@ class ShardedSearchRouter:
         policy: str = "block",
         block_timeout_ms: Optional[float] = None,
     ):
+        if replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        if isinstance(hedge_ms, str) and hedge_ms != "auto":
+            raise ValueError(
+                f"hedge_ms must be None, a float, or 'auto', got "
+                f"{hedge_ms!r}")
+        if not 0.0 <= hedge_budget <= 1.0:
+            raise ValueError("hedge_budget must be in [0, 1]")
         self.k = k
+        self.replicas = replicas
+        self.hedge_ms = hedge_ms
+        self.hedge_ewma_factor = hedge_ewma_factor
+        self.hedge_floor_ms = hedge_floor_ms
+        self.hedge_budget = hedge_budget
+        self.hedge_burst = hedge_burst
+        self.retry_failures = retry_failures
+        self.max_retries = 1
+        self._injector = fault_injector
+        self._health_knobs = dict(
+            down_after=down_after, probe_after_ms=probe_after_ms)
+        self._max_wait_ms = max_wait_ms
         # One knob-to-engine mapping for single-batcher and sharded
-        # deployments alike: every shard batcher (initial or dynamically
-        # added) builds its jitted engine from this same knob set.
+        # deployments alike: every replica batcher (initial or
+        # dynamically added) builds its jitted engine from this same knob
+        # set (the per-index cache dedupes compilation across replicas).
         self._knobs = dict(
             k=k, max_batch=max_batch, max_wait_ms=max_wait_ms, cfg=cfg,
             round_size=round_size, select=select, impl=impl,
@@ -178,12 +378,18 @@ class ShardedSearchRouter:
         self._shards_rw = _RWLock()
         self._reg_lock = threading.Lock()  # serializes swaps/adds
         self._started = False
+        self._timer = _Timer()
         self._stats_lock = threading.Lock()
         self._merge_stats = dict(merges=0, merge_ms_sum=0.0, merge_ms_max=0.0)
+        self._fab = dict(
+            shard_requests=0, retries=0, admission_retries=0, hedges=0,
+            hedges_won=0, hedges_denied=0, deadline_expired=0,
+            shard_failures=0,
+        )
         self._retired_totals = dict(
             shards=0, submitted=0, answered=0, batches=0, padded_queries=0,
-            rejected=0, shed=0, blocked=0, queue_depth_peak=0,
-            latency_ms_max=0.0, batch_size_sum=0,
+            rejected=0, shed=0, blocked=0, expired=0, blackholed=0,
+            queue_depth_peak=0, latency_ms_max=0.0, batch_size_sum=0,
         )
         self.sharded: Optional[ShardedIndex] = None
         if index is None:
@@ -199,21 +405,30 @@ class ShardedSearchRouter:
             self._register(shard, off)
 
     def _register(self, index: ParISIndex, offset: int) -> int:
-        """Create a shard entry (caller holds the write lock or __init__).
+        """Create a shard's replica group (caller holds the write lock or
+        __init__).
 
         The entry list is REPLACED, never mutated in place: lock-free
         readers (``poll``/``drain`` snapshot the reference) must always
         see a complete list, and an in-place ``list.sort`` exposes a
         transiently empty one.
         """
-        b = SearchRequestBatcher(index, inline_flush=False, **self._knobs)
         sid = self._next_sid
         self._next_sid += 1
+        reps = []
+        for rid in range(self.replicas):
+            hook = None
+            if self._injector is not None:
+                hook = functools.partial(self._injector.on_flush, sid, rid)
+            b = SearchRequestBatcher(
+                index, inline_flush=False, fault_hook=hook, **self._knobs)
+            reps.append(_Replica(
+                rid, b, ReplicaHealth(**self._health_knobs)))
+            if self._started:
+                b.start()
         self._entries = sorted(
-            self._entries + [_RouterShard(sid, int(offset), b)],
+            self._entries + [_RouterShard(sid, int(offset), reps)],
             key=lambda e: e.offset)
-        if self._started:
-            b.start()
         return sid
 
     @property
@@ -224,10 +439,10 @@ class ShardedSearchRouter:
     def add_shard(self, index: ParISIndex, offset: int) -> int:
         """Attach one shard owning file range [offset, offset+N) live.
 
-        The shard gets its own admission-controlled batcher + jitted
-        engine (the router's shared knob set) and, on a started router,
-        its own daemon flusher. Returns the shard id for later
-        retirement. Queries submitted after this call fan out over it.
+        The shard gets a full replica group (admission-controlled
+        batchers + the shared jitted engine) and, on a started router,
+        daemon flushers. Returns the shard id for later retirement.
+        Queries submitted after this call fan out over it.
         """
         return self.swap_shards((), [(index, offset)])[0]
 
@@ -241,7 +456,8 @@ class ShardedSearchRouter:
         The compaction rewire: the old base shards + folded delta shards
         detach and the compacted base attaches in ONE shard-set
         transition, so every query sees either the complete old partition
-        or the complete new one — never a mix. Retired batchers stop and
+        or the complete new one — never a mix. Retired replicas are
+        flagged first (late retries/hedges skip them), then stop and
         drain *after* detaching: anything they accepted before the swap
         is still answered, and their counters fold into the router totals
         (``stats()`` stays cumulative). Returns the new shard ids.
@@ -254,6 +470,9 @@ class ShardedSearchRouter:
                 if unknown:
                     raise ValueError(f"unknown shard ids: {sorted(unknown)}")
                 old = [e for e in self._entries if e.sid in retire]
+                for e in old:
+                    for r in e.replicas:
+                        r.retired = True
                 self._entries = [
                     e for e in self._entries if e.sid not in retire]
                 new_sids = [self._register(idx, off) for idx, off in add]
@@ -262,78 +481,297 @@ class ShardedSearchRouter:
             # Outside the write lock: joining a daemon mid-engine-call can
             # take a while, and new-view queries must not wait on it.
             for e in old:
-                e.batcher.stop(drain=True)
-                s = e.batcher.stats()
                 with self._stats_lock:
-                    t = self._retired_totals
-                    t["shards"] += 1
-                    for key in ("submitted", "answered", "batches",
-                                "padded_queries", "rejected", "shed",
-                                "blocked", "batch_size_sum"):
-                        t[key] += s[key]
-                    t["queue_depth_peak"] = max(
-                        t["queue_depth_peak"], s["queue_depth_peak"])
-                    t["latency_ms_max"] = max(
-                        t["latency_ms_max"], s["latency_ms_max"])
+                    self._retired_totals["shards"] += 1
+                for r in e.replicas:
+                    r.batcher.stop(drain=True)
+                    s = r.batcher.stats()
+                    with self._stats_lock:
+                        t = self._retired_totals
+                        for key in ("submitted", "answered", "batches",
+                                    "padded_queries", "rejected", "shed",
+                                    "blocked", "expired", "blackholed",
+                                    "batch_size_sum"):
+                            t[key] += s[key]
+                        t["queue_depth_peak"] = max(
+                            t["queue_depth_peak"], s["queue_depth_peak"])
+                        t["latency_ms_max"] = max(
+                            t["latency_ms_max"], s["latency_ms_max"])
         return new_sids
 
     # ------------------------------------------------------------- request
-    def submit(self, query) -> Future:
-        """Fan one (n,) query out to all shards; one Future for the merge.
+    def submit(self, query, *,
+               deadline_ms: Optional[float] = None) -> Future:
+        """Fan one (n,) query out; one Future for the global merge.
+
+        ``deadline_ms`` is the request's END-TO-END budget: it rides into
+        every replica queue (deadline-aware shedding / expiry) and arms
+        the router's reaper — at the deadline an unanswered merged future
+        fails with :class:`DeadlineExceededError`, whatever any replica
+        is (or is not) doing.
 
         The fan-out snapshots the shard set (shared lock), so a
         concurrent ``swap_shards`` either misses this query entirely or
         sees it on every retired shard — both give a complete partition.
-        The merge runs on whichever shard thread answers last. Under
-        ``reject``, saturation raises
-        :class:`~repro.serving.search_batcher.QueueFullError` here; under
-        ``shed-oldest``, a shed request's merged future carries it. On an
-        empty router (no shards yet) the answer is the empty-datastore
-        sentinel, resolved immediately.
+        One replica per shard is picked by health-gated p2c placement; a
+        door-step :class:`QueueFullError` is retried once on a sibling
+        and, if it stands, raised here naming the shard. Failures after
+        acceptance resolve through the merged future (see the module
+        docstring's failure taxonomy). On an empty router (no shards yet)
+        the answer is the empty-datastore sentinel, resolved immediately.
         """
         q = np.asarray(query, np.float32)
         if q.ndim != 1:
             raise ValueError(f"submit takes one (n,) query, got {q.shape}")
+        deadline = (None if deadline_ms is None
+                    else time.monotonic() + deadline_ms / 1e3)
         out: Future = Future()
+        if deadline is not None and deadline_ms <= 0:
+            out.set_exception(DeadlineExceededError(
+                f"deadline_ms={deadline_ms} already expired at submit"))
+            return out
         self._shards_rw.acquire_read()
         try:
             entries = list(self._entries)
             if not entries:
                 out.set_result(self._empty_result())
                 return out
-            shard_futs = []
+            req = _InFlight(out, q, deadline, entries)
+            with self._stats_lock:
+                self._fab["shard_requests"] += len(entries)
+            primaries = []
             try:
-                for e in entries:
-                    shard_futs.append(e.batcher.submit(q))
+                for s, e in enumerate(entries):
+                    primaries.append(self._primary(req, s, e))
             except BaseException as exc:
-                # A shard turned the request away mid-fan-out: the request
-                # fails as a whole. Shards that already accepted answer
-                # into a dead callback — harmless (exact search is
-                # idempotent).
+                # A shard turned the request away mid-fan-out (after its
+                # sibling retry): the request fails as a whole. Shards
+                # that already accepted answer into resolved slots —
+                # harmless (exact search is idempotent).
                 out.set_exception(exc)
                 raise
         finally:
             self._shards_rw.release_read()
-        parts: List[Optional[tuple]] = [None] * len(shard_futs)
-        remaining = [len(shard_futs)]
-        lock = threading.Lock()
-
-        def make_cb(s):
-            def cb(f):
-                try:
-                    parts[s] = ("ok", f.result())
-                except BaseException as e:  # noqa: BLE001 — per-request
-                    parts[s] = ("err", e)
-                with lock:
-                    remaining[0] -= 1
-                    last = remaining[0] == 0
-                if last:
-                    self._finish(out, parts, entries)
-            return cb
-
-        for s, f in enumerate(shard_futs):
-            f.add_done_callback(make_cb(s))
+        if deadline is not None:
+            self._timer.schedule(
+                deadline, functools.partial(self._expire, req, deadline_ms),
+                on_stop="fire")
+        if self.hedge_ms is not None and self.replicas > 1:
+            now = time.monotonic()
+            for s, (e, rep) in enumerate(zip(entries, primaries)):
+                self._timer.schedule(
+                    now + self._hedge_delay_s(rep),
+                    functools.partial(self._maybe_hedge, req, s, e),
+                    on_stop="drop")
         return out
+
+    def _primary(self, req: _InFlight, s: int, entry: _RouterShard):
+        """Launch the primary sub-query; sibling-retry a door-step
+        reject once, then fail naming the shard (the partial-admission
+        fix: one full replica queue no longer fails the merged query
+        outright)."""
+        try:
+            rep = self._attempt(req, s, entry, kind="primary")
+        except QueueFullError as cause:
+            with self._stats_lock:
+                self._fab["admission_retries"] += 1
+            try:
+                rep = self._attempt(req, s, entry, kind="retry")
+            except QueueFullError as c2:
+                cause = c2
+                rep = None
+            if rep is None:
+                raise QueueFullError(
+                    f"shard {entry.sid} (offset {entry.offset}) turned "
+                    f"the request away after a sibling retry: {cause}"
+                ) from cause
+            with self._stats_lock:
+                self._fab["retries"] += 1
+            return rep
+        if rep is None:
+            raise ShardFailedError(
+                entry.sid, f"shard {entry.sid} has no live replica")
+        return rep
+
+    def _attempt(self, req: _InFlight, s: int, entry: _RouterShard,
+                 kind: str):
+        """Submit the sub-query to one not-yet-tried replica.
+
+        Returns the replica, or None when every replica was already
+        tried (or retired). Raises the chosen replica's admission error
+        (it still counts as tried, so a later retry lands elsewhere).
+        """
+        with req.lock:
+            exclude = tuple(req.tried[s])
+        live = [r for r in entry.replicas if not r.retired]
+        rep = choose_replica(live, exclude=exclude)
+        if rep is None:
+            return None
+        with req.lock:
+            req.tried[s].append(rep.rid)
+        fut = rep.batcher.submit(req.query, deadline=req.deadline)
+        with req.lock:
+            req.inflight[s] += 1
+            req.attempts[s] += 1
+        t0 = time.monotonic()
+        fut.add_done_callback(functools.partial(
+            self._on_answer, req, s, entry, rep, t0, kind))
+        if rep.retired:
+            # Raced a swap: the stop/drain may already have passed this
+            # entry by and nobody will flush that batcher again — answer
+            # it inline so the sub-query cannot strand.
+            try:
+                rep.batcher.drain()
+            except Exception:  # noqa: BLE001 — the cohort carries it
+                pass
+        return rep
+
+    def _hedge_delay_s(self, rep: _Replica) -> float:
+        if self.hedge_ms == "auto":
+            ewma = rep.health.ewma_ms
+            base = ewma if ewma is not None else 4.0 * self._max_wait_ms
+            ms = max(self.hedge_floor_ms, self.hedge_ewma_factor * base)
+        else:
+            ms = float(self.hedge_ms)
+        return ms / 1e3
+
+    def _maybe_hedge(self, req: _InFlight, s: int,
+                     entry: _RouterShard) -> None:
+        """Hedge trigger fired: re-issue the still-unanswered sub-query
+        on a sibling, budget permitting (timer thread)."""
+        if req.out.done():
+            return
+        with req.lock:
+            if req.parts[s] is not None or req.hedged[s]:
+                return
+            req.hedged[s] = True
+        with self._stats_lock:
+            f = self._fab
+            allowed = f["hedges"] < (
+                self.hedge_budget * f["shard_requests"] + self.hedge_burst)
+            if not allowed:
+                f["hedges_denied"] += 1
+        if not allowed:
+            return
+        try:
+            rep = self._attempt(req, s, entry, kind="hedge")
+        except QueueFullError:
+            rep = None  # the sibling is saturated; the primary stands
+        if rep is not None:
+            with self._stats_lock:
+                self._fab["hedges"] += 1
+
+    def _expire(self, req: _InFlight, deadline_ms: float) -> None:
+        """Deadline reaper: an unanswered merged future fails NOW."""
+        if req.out.done():
+            return
+        if self._try_set_exception(req.out, DeadlineExceededError(
+                f"deadline_ms={deadline_ms} exceeded before "
+                f"{req.remaining} of {len(req.entries)} shard(s) "
+                "answered")):
+            with self._stats_lock:
+                self._fab["deadline_expired"] += 1
+
+    @staticmethod
+    def _try_set_result(fut: Future, result) -> bool:
+        try:
+            fut.set_result(result)
+            return True
+        except InvalidStateError:
+            return False  # the deadline reaper got there first
+
+    @staticmethod
+    def _try_set_exception(fut: Future, exc: BaseException) -> bool:
+        try:
+            fut.set_exception(exc)
+            return True
+        except InvalidStateError:
+            return False
+
+    # ------------------------------------------------- sub-query lifecycle
+    def _on_answer(self, req: _InFlight, s: int, entry: _RouterShard,
+                   rep: _Replica, t0: float, kind: str, fut: Future) -> None:
+        lat_ms = (time.monotonic() - t0) * 1e3
+        exc = fut.exception()
+        if exc is None:
+            rep.health.record_success(lat_ms)
+            res = fut.result()
+            with req.lock:
+                req.inflight[s] -= 1
+                if req.parts[s] is not None:
+                    return  # a sibling answered first
+                req.parts[s] = ("ok", res)
+                req.remaining -= 1
+                last = req.remaining == 0
+            if kind == "hedge":
+                with self._stats_lock:
+                    self._fab["hedges_won"] += 1
+            if last:
+                self._finish(req.out, req.parts, req.entries)
+            return
+        # Failure. Sheds and deadline expiries are not the replica's
+        # fault (and retrying a shed re-amplifies the load being shed);
+        # anything else trips the replica's breaker and may be retried.
+        benign = isinstance(exc, (RequestShedError, DeadlineExceededError))
+        if not benign:
+            rep.health.record_failure()
+        self._shard_failure(req, s, entry, exc,
+                            retriable=self.retry_failures and not benign)
+
+    def _shard_failure(self, req: _InFlight, s: int, entry: _RouterShard,
+                       exc: BaseException, retriable: bool) -> None:
+        with req.lock:
+            req.inflight[s] -= 1
+            if req.parts[s] is not None or req.out.done():
+                return
+            if req.stash[s] is None:
+                req.stash[s] = exc
+            past = (req.deadline is not None
+                    and time.monotonic() >= req.deadline)
+            can_retry = (retriable and not past
+                         and req.attempts[s] <= self.max_retries)
+        if can_retry:
+            try:
+                rep = self._attempt(req, s, entry, kind="retry")
+            except QueueFullError as e2:
+                rep = None
+                with req.lock:
+                    req.stash[s] = req.stash[s] or e2
+            if rep is not None:
+                with self._stats_lock:
+                    self._fab["retries"] += 1
+                return
+        with req.lock:
+            if req.parts[s] is not None or req.inflight[s] > 0:
+                return  # a sibling attempt may still answer
+            cause = req.stash[s]
+            err = self._shard_error(entry, cause, req.attempts[s])
+            req.parts[s] = ("err", err)
+            req.remaining -= 1
+            last = req.remaining == 0
+        with self._stats_lock:
+            self._fab["shard_failures"] += 1
+        if last:
+            self._finish(req.out, req.parts, req.entries)
+
+    @staticmethod
+    def _shard_error(entry: _RouterShard, cause: BaseException,
+                     attempts: int) -> BaseException:
+        """The typed error a lost shard contributes to the merge.
+
+        Admission and deadline errors pass through (they are already
+        typed and actionable); everything else wraps in a
+        :class:`ShardFailedError` naming the shard, with the replica
+        error as ``__cause__``.
+        """
+        if isinstance(cause, (QueueFullError, DeadlineExceededError)):
+            return cause
+        err = ShardFailedError(
+            entry.sid,
+            f"shard {entry.sid} (offset {entry.offset}) failed after "
+            f"{attempts} attempt(s): {cause!r}")
+        err.__cause__ = cause
+        return err
 
     def _empty_result(self):
         if self.k is None:
@@ -346,7 +784,7 @@ class ShardedSearchRouter:
     def _finish(self, out: Future, parts: list, entries: list) -> None:
         err = next((e for tag, e in parts if tag == "err"), None)
         if err is not None:
-            out.set_exception(err)
+            self._try_set_exception(out, err)
             return
         try:
             t0 = time.perf_counter()
@@ -361,9 +799,9 @@ class ShardedSearchRouter:
                 m["merges"] += 1
                 m["merge_ms_sum"] += dt_ms
                 m["merge_ms_max"] = max(m["merge_ms_max"], dt_ms)
-            out.set_result(merged)
+            self._try_set_result(out, merged)
         except BaseException as e:  # noqa: BLE001 — surface merge bugs
-            out.set_exception(e)
+            self._try_set_exception(out, e)
 
     @staticmethod
     def _global_pos(pos, entry: _RouterShard):
@@ -437,17 +875,22 @@ class ShardedSearchRouter:
 
     # ----------------------------------------------------------- lifecycle
     def start(self, tick_ms: Optional[float] = None) -> None:
-        """Spawn one daemon flusher per shard (concurrent shard search)."""
+        """Spawn one daemon flusher per replica (concurrent search)."""
         self._shards_rw.acquire_read()
         try:
             self._started = True
             for e in self._entries:
-                e.batcher.start(tick_ms)
+                for r in e.replicas:
+                    r.batcher.start(tick_ms)
         finally:
             self._shards_rw.release_read()
 
     def stop(self, drain: bool = True) -> None:
-        """Stop all shard flushers; by default answer what is left."""
+        """Stop all replica flushers; by default answer what is left.
+
+        The timer stops last: pending deadline entries fire (their
+        futures must resolve), pending hedge triggers are dropped.
+        """
         self._shards_rw.acquire_read()
         try:
             self._started = False
@@ -455,42 +898,56 @@ class ShardedSearchRouter:
         finally:
             self._shards_rw.release_read()
         for e in entries:
-            e.batcher.stop(drain=drain)
+            for r in e.replicas:
+                r.batcher.stop(drain=drain)
+        self._timer.stop()
 
     def poll(self) -> int:
-        """Advance every shard's due flushes from the calling thread."""
-        return sum(e.batcher.poll() for e in list(self._entries))
+        """Advance every replica's due flushes from the calling thread."""
+        return sum(r.batcher.poll()
+                   for e in list(self._entries) for r in e.replicas)
 
     def drain(self) -> int:
-        """Flush every shard to empty; returns per-shard answered total."""
-        return sum(e.batcher.drain() for e in list(self._entries))
+        """Flush every replica to empty; returns the answered total."""
+        return sum(r.batcher.drain()
+                   for e in list(self._entries) for r in e.replicas)
 
     # -------------------------------------------------------------- stats
     def stats(self) -> dict:
-        """Aggregate per-shard batcher counters (+ ``per_shard`` detail).
+        """Aggregate per-replica batcher counters + fabric health.
 
-        Counts are per *shard request* (each submitted query fans out to
-        ``num_shards`` shard requests); ``submitted``/``answered``/
-        ``rejected``/``shed`` therefore sum over shards — including shards
-        already retired by :meth:`swap_shards`, so totals are cumulative
-        across the router's life. ``queue_depth_peak`` is the max over
-        shards; latency figures are worst-shard. ``queue_depths`` is the
-        instantaneous per-live-shard pending depth, and ``merge_*`` time
-        the router-side global merge — together they let a caller spot
-        saturation without poking batcher internals.
+        Counts are per *replica request* (each submitted query lands on
+        one replica per shard, plus retries/hedges);
+        ``submitted``/``answered``/``rejected``/``shed`` therefore sum
+        over every replica — including replicas already retired by
+        :meth:`swap_shards`, so totals are cumulative across the
+        router's life. ``queue_depth_peak`` is the max over replicas;
+        latency figures are worst-replica. ``queue_depths`` is the
+        instantaneous per-live-shard pending depth (summed over the
+        shard's replicas), ``health`` the per-replica breaker/EWMA
+        snapshots, and the hedging/retry/deadline counters the fabric's
+        rescue activity — together they let a caller spot saturation,
+        a dead replica, or a melting hedge budget without poking
+        internals.
         """
         self._shards_rw.acquire_read()
         try:
-            live = [(e.sid, e.offset, e.batcher.stats())
-                    for e in self._entries]
+            live = [
+                (e.sid, e.offset,
+                 [(r.rid, r.health.snapshot(), r.batcher.stats())
+                  for r in e.replicas])
+                for e in self._entries
+            ]
         finally:
             self._shards_rw.release_read()
-        per = [s for _, _, s in live]
+        per = [st for _, _, reps in live for _, _, st in reps]
         with self._stats_lock:
             ret = dict(self._retired_totals)
             merge = dict(self._merge_stats)
+            fab = dict(self._fab)
         agg = dict(
-            num_shards=len(per),
+            num_shards=len(live),
+            replicas=self.replicas,
             retired_shards=ret["shards"],
             submitted=sum(s["submitted"] for s in per) + ret["submitted"],
             answered=sum(s["answered"] for s in per) + ret["answered"],
@@ -500,8 +957,12 @@ class ShardedSearchRouter:
             rejected=sum(s["rejected"] for s in per) + ret["rejected"],
             shed=sum(s["shed"] for s in per) + ret["shed"],
             blocked=sum(s["blocked"] for s in per) + ret["blocked"],
+            expired=sum(s["expired"] for s in per) + ret["expired"],
+            blackholed=(sum(s["blackholed"] for s in per)
+                        + ret["blackholed"]),
             queued=sum(s["queued"] for s in per),
-            queue_depths=[s["queued"] for s in per],
+            queue_depths=[sum(st["queued"] for _, _, st in reps)
+                          for _, _, reps in live],
             queue_depth_peak=max(
                 [s["queue_depth_peak"] for s in per]
                 + [ret["queue_depth_peak"]], default=0),
@@ -521,5 +982,10 @@ class ShardedSearchRouter:
             per_shard=per,
             shard_ids=[sid for sid, _, _ in live],
             shard_offsets=[off for _, off, _ in live],
+            health=[dict(sid=sid, offset=off,
+                         replicas=[dict(rid=rid, **h)
+                                   for rid, h, _ in reps])
+                    for sid, off, reps in live],
+            **fab,
         )
         return agg

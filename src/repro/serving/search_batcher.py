@@ -23,9 +23,22 @@ is the host-side adapter between the two (the retrieval analogue of
     the tail latency of everything behind it — without bound. ``block``
     makes ``submit`` wait for space (the cooperative backpressure mode),
     ``reject`` raises :class:`QueueFullError` at the door, and
-    ``shed-oldest`` drops the stalest queued request (failing its future
-    with :class:`QueueFullError`) in favor of the new arrival. Queue-depth
+    ``shed-oldest`` evicts a queued request (failing its future with
+    :class:`RequestShedError`) in favor of the new arrival. Queue-depth
     peaks and shed/reject counts ride next to the qps/latency counters;
+  * requests may carry an absolute *deadline* (``submit(q, deadline=t)``,
+    monotonic seconds): shedding is then deadline-aware — the victim is
+    the request with the least time-to-deadline (an already-expired or
+    about-to-expire request is the cheapest thing to drop; deadline-less
+    requests rank as infinitely patient and fall back to oldest-first) —
+    and a flush fails requests whose deadline passed with
+    :class:`DeadlineExceededError` instead of spending engine time on an
+    answer nobody is waiting for;
+  * a *fault hook* (``fault_hook=``, see ``serving.faults``) instruments
+    the flush path for chaos testing: it may sleep (injected latency),
+    raise (the cohort's futures carry the typed error), or return False
+    (blackhole: the cohort is consumed and never answered — the
+    accepted-then-lost failure mode hedging and deadlines exist for);
   * ``drain()`` answers everything still queued (shutdown / test barrier);
   * throughput and latency counters ride along (``stats()``).
 
@@ -58,9 +71,30 @@ class QueueFullError(RuntimeError):
     """Admission control turned a request away (queue at ``max_pending``).
 
     Raised from ``submit`` under the ``reject`` policy (and by ``block``
-    on timeout); set as the *future's* exception for requests evicted by
-    ``shed-oldest`` — either way the caller sees a typed backpressure
-    signal instead of an unbounded queue.
+    on timeout); the :class:`RequestShedError` subclass is set as the
+    *future's* exception for requests evicted by ``shed-oldest`` — either
+    way the caller sees a typed backpressure signal instead of an
+    unbounded queue.
+    """
+
+
+class RequestShedError(QueueFullError):
+    """A queued request was evicted by admission control (shed policy).
+
+    A subclass so existing ``QueueFullError`` handlers still match, but
+    distinguishable: an eviction is the queue actively choosing to drop
+    THIS request under overload — the router must not retry it on a
+    sibling (that would re-amplify the very load being shed), unlike a
+    door-step reject, which may simply have raced a draining queue.
+    """
+
+
+class DeadlineExceededError(RuntimeError):
+    """The request's end-to-end deadline passed before it was answered.
+
+    Set on futures by the deadline-aware flush path here and by the
+    router's deadline reaper — a request under a deadline resolves with
+    an answer or with this, never with a hang.
     """
 
 
@@ -69,6 +103,7 @@ class _Pending:
     query: np.ndarray  # (n,) float32
     future: Future
     t_submit: float
+    deadline: Optional[float] = None  # absolute monotonic seconds
 
 
 class SearchRequestBatcher:
@@ -104,6 +139,10 @@ class SearchRequestBatcher:
     engine:       a prebuilt :func:`repro.core.search.make_batch_engine`
                   callable (the router passes per-shard engines); built
                   from the knobs above when omitted.
+    fault_hook:   chaos instrumentation (``serving.faults``): called at
+                  the top of every flush; may sleep, raise, or return
+                  False to blackhole the cohort. None (default) costs
+                  nothing.
 
     Thread-safe: ``submit`` may be called from any thread. Each flush
     claims its cohort of pending requests atomically under the lock, so
@@ -133,6 +172,7 @@ class SearchRequestBatcher:
         block_timeout_ms: Optional[float] = None,
         inline_flush: bool = True,
         engine=None,
+        fault_hook=None,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -166,6 +206,7 @@ class SearchRequestBatcher:
                     select=select, impl=impl, min_bucket=min_bucket,
                 )
         self._engine = engine
+        self._fault_hook = fault_hook
         self._pending: List[_Pending] = []
         self._lock = threading.Lock()
         self._space = threading.Condition(self._lock)
@@ -176,17 +217,29 @@ class SearchRequestBatcher:
             submitted=0, answered=0, batches=0, padded_queries=0,
             flush_full=0, flush_timeout=0, flush_drain=0,
             rejected=0, shed=0, blocked=0, queue_depth_peak=0,
+            expired=0, blackholed=0,
             latency_ms_sum=0.0, latency_ms_max=0.0, batch_size_sum=0,
         )
 
+    def queue_depth(self) -> int:
+        """Instantaneous pending-queue depth (the placement signal)."""
+        with self._lock:
+            return len(self._pending)
+
     # ------------------------------------------------------------- request
-    def submit(self, query) -> Future:
+    def submit(self, query, deadline: Optional[float] = None) -> Future:
         """Enqueue one (n,) query; returns a Future for its result.
+
+        ``deadline`` is an absolute ``time.monotonic()`` instant: once it
+        passes, the request is failed with :class:`DeadlineExceededError`
+        at the next flush instead of being answered (the router threads
+        per-request ``deadline_ms`` through here).
 
         Admission control applies first (see ``max_pending``/``policy``):
         ``reject`` raises :class:`QueueFullError` at saturation, ``block``
-        waits for space, ``shed-oldest`` evicts the stalest queued request
-        (its future fails with :class:`QueueFullError`).
+        waits for space, ``shed-oldest`` evicts the queued request with
+        the least time-to-deadline (oldest-first among deadline-less
+        requests; its future fails with :class:`RequestShedError`).
         """
         q = np.asarray(query, np.float32)
         if q.ndim != 1:
@@ -204,7 +257,7 @@ class SearchRequestBatcher:
                         "request rejected")
                 elif self.policy == "shed-oldest":
                     while len(self._pending) >= self.max_pending:
-                        old = self._pending.pop(0)
+                        old = self._pending.pop(self._shed_victim())
                         c["shed"] += 1
                         shed_futs.append(old.future)
                 else:  # block
@@ -223,17 +276,35 @@ class SearchRequestBatcher:
                             raise QueueFullError(
                                 "timed out waiting for queue space "
                                 f"({self.max_pending} pending)")
-            self._pending.append(_Pending(q, fut, time.monotonic()))
+            self._pending.append(
+                _Pending(q, fut, time.monotonic(), deadline))
             c["submitted"] += 1
             c["queue_depth_peak"] = max(
                 c["queue_depth_peak"], len(self._pending))
             full = len(self._pending) >= self.max_batch
         for sf in shed_futs:  # outside the lock: callbacks may run inline
-            sf.set_exception(QueueFullError(
+            sf.set_exception(RequestShedError(
                 "request shed from a full queue by a newer arrival"))
         if full and self.inline_flush:
             self._flush("flush_full")
         return fut
+
+    def _shed_victim(self) -> int:
+        """Index of the pending request to evict (caller holds the lock).
+
+        Least time-to-deadline first — an expired or nearly-expired
+        request is dead weight; dropping it costs the least useful work.
+        Requests without a deadline have infinite patience and lose only
+        to each other, oldest first (the pre-deadline behavior).
+        """
+        now = time.monotonic()
+
+        def key(p: _Pending):
+            slack = float("inf") if p.deadline is None else p.deadline - now
+            return (slack, p.t_submit)
+
+        return min(range(len(self._pending)),
+                   key=lambda i: key(self._pending[i]))
 
     def poll(self) -> int:
         """Flush what is due: full batches (``inline_flush=False`` mode)
@@ -247,9 +318,11 @@ class SearchRequestBatcher:
                 if not self._pending:
                     return total
                 full = len(self._pending) >= self.max_batch
-                age_ms = (
-                    time.monotonic() - self._pending[0].t_submit) * 1e3
-                due = age_ms >= self.max_wait_ms
+                now = time.monotonic()
+                age_ms = (now - self._pending[0].t_submit) * 1e3
+                head = self._pending[0]
+                due = age_ms >= self.max_wait_ms or (
+                    head.deadline is not None and head.deadline <= now)
             if full and not self.inline_flush:
                 total += self._flush("flush_full")
             elif due:
@@ -306,8 +379,36 @@ class SearchRequestBatcher:
             take = self._pending[: self.max_batch]
             del self._pending[: self.max_batch]
             self._space.notify_all()  # blocked submitters may now enqueue
+        # Deadline shedding: a request whose deadline already passed gets
+        # its typed error now — engine time goes only to answers someone
+        # is still waiting for. (The cohort was claimed above, so expired
+        # requests still count toward this flush's progress.)
+        now = time.monotonic()
+        live: List[_Pending] = []
+        expired: List[_Pending] = []
+        for p in take:
+            dead = p.deadline is not None and p.deadline <= now
+            (expired if dead else live).append(p)
+        if expired:
+            take = live
+            with self._lock:
+                self._counters["expired"] += len(expired)
+            for p in expired:
+                p.future.set_exception(DeadlineExceededError(
+                    "deadline passed while the request was queued"))
+            if not take:
+                return len(expired)
         try:
             qn = len(take)
+            if self._fault_hook is not None:
+                # Chaos instrumentation: may sleep (latency), raise (the
+                # cohort fails typed, below), or blackhole the cohort —
+                # consumed, never answered, exactly what a partitioned-
+                # off replica does to accepted requests.
+                if self._fault_hook() is False:
+                    with self._lock:
+                        self._counters["blackholed"] += qn
+                    return qn + len(expired)
             bucket = self._engine.bucket(qn)
             qs = np.stack([p.query for p in take])
             out = self._engine(qs)
@@ -334,7 +435,7 @@ class SearchRequestBatcher:
                 c["latency_ms_max"] = max(c["latency_ms_max"], lat)
         for p, out in zip(take, outs):
             p.future.set_result(out)
-        return qn
+        return qn + len(expired)
 
     # -------------------------------------------------------------- stats
     def stats(self) -> dict:
