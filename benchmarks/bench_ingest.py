@@ -5,8 +5,10 @@ Seven legs over the ``core.ingest`` + ``serving.ingest`` subsystem:
 
   ingest_tput   — series/sec through ``IngestPipeline.append`` (Stage-2
                   conversion + snapshot swap; no engines involved),
-  durable_tput  — the same appends with spill + manifest commit per batch
-                  (the durability tax on the acknowledge path),
+  durable_tput  — the same appends through the pipelined durable path:
+                  several appender threads spill concurrently and the
+                  ticket queue group-commits the spilled prefix (the
+                  durability tax on the acknowledge path),
   compaction    — one full compaction of the appended deltas: merge time
                   (linear merges, runs concurrently with traffic in
                   production) vs publish stall (the only writer-blocking
@@ -15,12 +17,19 @@ Seven legs over the ``core.ingest`` + ``serving.ingest`` subsystem:
                   leveled policy (minor folds only — delta tier -> run)
                   vs the PR-4 one-big-fold policy at the same trigger
                   cadence; reports the MAX single-merge latency of each.
-                  Leveled must stay under the big fold: sustained ingest
-                  never pays an O(total) merge,
+                  The gated bound compares max ROWS merged per fold
+                  (deterministic at any scale — a minor never touches
+                  the base; at --tiny scale the ms ratio is dispatch-
+                  overhead noise): sustained ingest never pays an
+                  O(total) merge,
   fused_query   — exact k-NN over base + >=4 live delta shards: the
                   fused multi-component sweep (one packed lower-bound
                   pass + one RDC loop) vs the per-component engine-call
-                  loop, warm, same answers bit-for-bit,
+                  loop, warm, same answers bit-for-bit. The fused path
+                  is queried after EVERY append so the packed view
+                  refreshes once per swap; ``pack_amplification`` (rows
+                  repacked over one from-scratch pack) near 1.0
+                  witnesses the O(delta) incremental refresh,
   under_ingest  — per-query latency through a started ``IngestingRouter``
                   (daemon flushers + compaction daemon) WHILE a feeder
                   thread appends batches; includes the cold-engine
@@ -84,15 +93,34 @@ def run(tiny: bool = False, impl: str = "ref"):
     ingest_s = time.perf_counter() - t0
     tput = bsz * n_batches / ingest_s
 
-    # --- leg 1b: durable insert path (spill + manifest per append) -------
+    # --- leg 1b: durable insert path (pipelined ticket commits) ----------
+    # T appender threads share one store: each spills its shard with no
+    # lock held and the contiguous spilled ticket prefix group-commits in
+    # one manifest, so the spill I/O overlaps and the acknowledged rate
+    # approaches the in-memory path instead of serializing on the disk.
     wdir = tempfile.mkdtemp(prefix="paris_bench_store_")
     md = MutableIndex(base, impl=impl, workdir=wdir)
+    n_appenders = min(4, n_batches)
+
+    def _durable_appender(batches):
+        for b in batches:
+            md.append(b)
+
+    workers = [
+        threading.Thread(target=_durable_appender,
+                         args=(appends[i::n_appenders],))
+        for i in range(n_appenders)
+    ]
     t0 = time.perf_counter()
-    for b in appends:
-        md.append(b)
+    for w in workers:
+        w.start()
+    for w in workers:
+        w.join()
     durable_s = time.perf_counter() - t0
     durable_tput = bsz * n_batches / durable_s
-    spill_ms = md.stats()["spill_time"] * 1e3
+    dstats = md.stats()
+    spill_ms = dstats["spill_time"] * 1e3
+    assert dstats["spill_queue_depth"] == 0 and dstats["appends"] == n_batches
     shutil.rmtree(wdir, ignore_errors=True)
 
     # --- leg 2: compaction merge vs publish stall ------------------------
@@ -105,10 +133,11 @@ def run(tiny: bool = False, impl: str = "ref"):
     # folds only the delta tier into a run. The figure that matters is
     # the max single-merge latency a sustained ingester ever pays.
     merges = {}
+    merge_rows = {}
     stores = {}
     for mode, pol in (
         ("fold", CompactionPolicy(max_deltas=2, leveled=False)),
-        ("leveled", CompactionPolicy(max_deltas=2, max_runs=10 ** 6)),
+        ("leveled", CompactionPolicy(max_deltas=2, major_ratio=10.0 ** 9)),
     ):
         # Pass 0 pays every shape's one-time jit dispatch compiles
         # (hundreds of ms — would swamp a 2ms minor merge); the timed
@@ -117,6 +146,7 @@ def run(tiny: bool = False, impl: str = "ref"):
         # noise; the metric stays the MAX single merge of the sequence —
         # what a sustained ingester's worst pause actually is).
         per_rep = []
+        rows_merged = []
         for rep in range(4):
             mm = MutableIndex(base, impl=impl)
             times = []
@@ -125,20 +155,39 @@ def run(tiny: bool = False, impl: str = "ref"):
                 r = mm.maybe_compact(pol)
                 if r is not None:
                     times.append(r.merge_time)
+                    if not rep:
+                        # The produced component's size IS the merge's
+                        # input row count (linear merges).
+                        out = r.base if r.base is not None else r.run.index
+                        rows_merged.append(out.num_series)
             if rep:
                 per_rep.append(times)
         merges[mode] = [min(ts) for ts in zip(*per_rep)]
+        merge_rows[mode] = rows_merged
         stores[mode] = mm
     fold_max_ms = max(merges["fold"]) * 1e3
     leveled_max_ms = max(merges["leveled"]) * 1e3
-    leveled_bounded = leveled_max_ms < fold_max_ms
+    # The gated bound is on ROWS MERGED, not wall time: at --tiny scale
+    # every merge is ~2ms of fixed dispatch overhead and the ms ratio is
+    # a coin flip, while the structural property — a leveled minor never
+    # touches the base, a fold rewrites everything — is deterministic at
+    # any scale. The ms figures stay reported (at full scale they track
+    # the row bound; BENCH_ingest.json shows ~8x).
+    fold_max_rows = max(merge_rows["fold"])
+    leveled_max_rows = max(merge_rows["leveled"])
+    leveled_bounded = leveled_max_rows < fold_max_rows
 
     # --- leg 2c: fused multi-component pass vs per-component engines -----
     mf = MutableIndex(base, impl=impl)
-    for b in appends:
-        mf.append(b)  # no compaction: n_batches live deltas (>= 4)
     qj = jnp.asarray(qs)
     knn_kw = dict(k=K, round_size=ROUND_SIZE, impl=impl)
+    for b in appends:
+        mf.append(b)  # no compaction: n_batches live deltas (>= 4)
+        # Touch the fused path after EVERY swap so the packed view has
+        # to refresh once per snapshot: the pack_* stats below witness
+        # that each refresh repacked only the appended suffix (O(delta)),
+        # machine-independently.
+        mf.exact_knn_batch(qj[:4], fused=True, **knn_kw)
     for fused in (False, True):  # warm both paths off the clock
         mf.exact_knn_batch(qj, fused=fused, **knn_kw)
     t0 = time.perf_counter()
@@ -149,6 +198,13 @@ def run(tiny: bool = False, impl: str = "ref"):
     fused_ms = (time.perf_counter() - t0) * 1e3
     parity_fused_vs_percomp = (np.array_equal(pc_d, fu_d)
                                and np.array_equal(pc_p, fu_p))
+    mf_stats = mf.stats()
+    # rows_repacked counts SAX rows + raw rows touched, so one from-
+    # scratch pack of the final store costs ~2 * num_series; a scratch
+    # repack per swap would cost ~pack_builds times that. Amplification
+    # near 1.0 is the O(delta) witness the regression gate checks.
+    pack_amplification = (mf_stats["pack_rows_repacked"]
+                          / max(2 * mf.num_series, 1))
 
     # --- legs 3+4: query latency under concurrent ingest vs idle ---------
     svc = IngestingRouter(
@@ -216,7 +272,10 @@ def run(tiny: bool = False, impl: str = "ref"):
          f"series_per_sec={tput:.0f} batches={n_batches}x{bsz}"),
         (f"ingest_{n0}_durable_tput", durable_s / (bsz * n_batches) * 1e6,
          f"series_per_sec={durable_tput:.0f} spill_ms={spill_ms:.1f} "
-         f"durability_tax_x={durable_s / max(ingest_s, 1e-9):.2f}"),
+         f"durability_tax_x={durable_s / max(ingest_s, 1e-9):.2f} "
+         f"appenders={n_appenders} "
+         f"group_commits={dstats['group_commits']} "
+         f"queue_depth_max={dstats['spill_queue_depth_max']}"),
         (f"ingest_{n0}_compaction", res.merge_time * 1e6,
          f"merged={ing['compacted_series']} "
          f"merge_ms={res.merge_time * 1e3:.1f} "
@@ -225,12 +284,17 @@ def run(tiny: bool = False, impl: str = "ref"):
          f"max_merge_ms_leveled={leveled_max_ms:.2f} "
          f"max_merge_ms_fold={fold_max_ms:.2f} "
          f"bound_x={fold_max_ms / max(leveled_max_ms, 1e-9):.1f} "
+         f"max_merge_rows_leveled={leveled_max_rows} "
+         f"max_merge_rows_fold={fold_max_rows} "
          f"minors={len(merges['leveled'])} folds={len(merges['fold'])} "
          f"bounded={leveled_bounded} parity={bool(parity_leveled)}"),
         (f"ingest_{n0}_fused_query", fused_ms * 1e3 / max(len(qs), 1),
          f"fused_ms={fused_ms:.2f} percomp_ms={percomp_ms:.2f} "
          f"speedup_x={percomp_ms / max(fused_ms, 1e-9):.2f} "
          f"components={1 + n_batches} "
+         f"pack_builds={mf_stats['pack_builds']} "
+         f"pack_amplification={pack_amplification:.2f} "
+         f"pack_time_max_ms={mf_stats['pack_time_max'] * 1e3:.1f} "
          f"parity={bool(parity_fused)}"),
         (f"ingest_{n0}_query_under_ingest", float(np.mean(lat_ingest)) * 1e3,
          f"lat_ms_avg={np.mean(lat_ingest):.2f} "
@@ -249,6 +313,9 @@ def run(tiny: bool = False, impl: str = "ref"):
         insert_series_per_sec=tput,
         durable_insert_series_per_sec=durable_tput,
         durable_spill_ms=spill_ms,
+        durable_appender_threads=n_appenders,
+        durable_group_commits=dstats["group_commits"],
+        durable_spill_queue_depth_max=dstats["spill_queue_depth_max"],
         compaction_merge_ms=res.merge_time * 1e3,
         compaction_publish_stall_ms=res.stall_time * 1e3,
         compaction_stall_ms_max_router=(
@@ -256,10 +323,17 @@ def run(tiny: bool = False, impl: str = "ref"):
         leveled_max_merge_ms=leveled_max_ms,
         fold_max_merge_ms=fold_max_ms,
         leveled_merge_bound_x=fold_max_ms / max(leveled_max_ms, 1e-9),
+        leveled_max_merge_rows=leveled_max_rows,
+        fold_max_merge_rows=fold_max_rows,
+        leveled_merge_rows_bound_x=fold_max_rows / max(leveled_max_rows, 1),
         fused_query_ms=fused_ms,
         per_component_query_ms=percomp_ms,
         fused_speedup_x=percomp_ms / max(fused_ms, 1e-9),
         live_components=1 + n_batches,
+        pack_builds=mf_stats["pack_builds"],
+        pack_rows_repacked=mf_stats["pack_rows_repacked"],
+        pack_amplification=pack_amplification,
+        pack_time_max_ms=mf_stats["pack_time_max"] * 1e3,
         query_ms_under_ingest_avg=float(np.mean(lat_ingest)),
         query_ms_under_ingest_p95=float(np.percentile(lat_ingest, 95)),
         query_ms_under_ingest_max=float(np.max(lat_ingest)),

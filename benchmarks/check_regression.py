@@ -11,7 +11,14 @@ exits nonzero when:
   * a row present in the baseline disappeared from the current run
     (a silently dropped bench leg reads as "no regression" otherwise), or
   * a row slowed down more than ``--threshold`` x (default 2.0) against
-    the baseline, after machine-speed normalization.
+    the baseline, after machine-speed normalization, or
+  * the live-ingest scalar report (when the current report carries one)
+    breaks a machine-independent ratio gate: durable insert throughput
+    more than ``--max-durability-tax`` x below in-memory insert, packed
+    fused-view repack work more than ``--max-pack-amplification`` x one
+    from-scratch pack (the O(delta) refresh witness), or a worst
+    query-under-ingest latency more than ``--max-ingest-spike`` x the
+    idle average (see :func:`check_ingest_ratios`).
 
 Normalization: committed baselines are recorded on one machine and
 checked on another, so raw ratios confound hardware speed with real
@@ -38,6 +45,66 @@ def load_rows(report: dict) -> dict:
     """{(bench, name): us_per_call} from a run.py --json report."""
     return {(r["bench"], r["name"]): float(r["us_per_call"])
             for r in report.get("rows", [])}
+
+
+def check_ingest_ratios(
+    report: dict,
+    *,
+    max_durability_tax: float = 20.0,
+    max_ingest_spike: float = 1000.0,
+    max_pack_amplification: float = 3.0,
+) -> list:
+    """Machine-independent gates over the live-ingest scalar report.
+
+    All figures are ratios WITHIN one run, so they hold on any runner
+    speed (unlike the absolute us/call rows, which need the committed
+    baseline + suite normalization):
+
+      * durability tax — in-memory insert throughput over durable insert
+        throughput. The pipelined ticket-commit path keeps acknowledged
+        durable appends within ``max_durability_tax`` x of the in-memory
+        rate; the pre-pipeline serial spill+commit path sat at ~40x.
+      * pack amplification — total rows the packed fused view repacked
+        across every snapshot swap, over one from-scratch pack of the
+        final store. The incremental packer repacks only each swap's
+        suffix, so this sits near 1.0; a from-scratch repack per swap
+        costs ~``pack_builds`` x. This is the direct O(delta) witness —
+        it cannot be confounded by compile times.
+      * under-ingest spike — worst per-query latency while ingesting
+        over the idle average. Deliberately loose: the worst sample is
+        dominated by one-time XLA compiles of freshly added delta-shard
+        engines (hundreds of x on a fast-idle runner), so this is only
+        a catastrophic backstop — O(total)-work-per-query regressions
+        show up thousands of x over idle.
+    """
+    problems = []
+    tput = report.get("insert_series_per_sec")
+    dtput = report.get("durable_insert_series_per_sec")
+    if tput and dtput:
+        tax = tput / dtput
+        if tax > max_durability_tax:
+            problems.append(
+                f"ingest durability tax {tax:.1f}x exceeds "
+                f"{max_durability_tax}x (insert {tput:.0f}/s vs durable "
+                f"{dtput:.0f}/s): the pipelined spill/ticket-commit path "
+                "has regressed toward serial-commit throughput")
+    amp = report.get("pack_amplification")
+    if amp and amp > max_pack_amplification:
+        problems.append(
+            f"packed-view repack amplification {amp:.1f}x exceeds "
+            f"{max_pack_amplification}x over "
+            f"{report.get('pack_builds', '?')} builds: the incremental "
+            "packer is repacking more than each swap's suffix")
+    worst = report.get("query_ms_under_ingest_max")
+    idle = report.get("query_ms_idle_avg")
+    if worst and idle:
+        spike = worst / idle
+        if spike > max_ingest_spike:
+            problems.append(
+                f"query-under-ingest spike {spike:.0f}x idle exceeds "
+                f"{max_ingest_spike}x ({worst:.0f}ms max vs {idle:.1f}ms "
+                "idle avg): the packed-view refresh is no longer O(delta)")
+    return problems
 
 
 def compare(
@@ -100,6 +167,18 @@ def main() -> None:
                     help="drop rows whose name contains SUBSTR from the "
                          "latency check (repeatable); parity and presence "
                          "still apply to them")
+    ap.add_argument("--max-durability-tax", type=float, default=20.0,
+                    help="max in-memory/durable insert throughput ratio "
+                         "in the ingest report (default 20.0)")
+    ap.add_argument("--max-ingest-spike", type=float, default=1000.0,
+                    help="max query-under-ingest worst latency over idle "
+                         "average in the ingest report — a loose backstop; "
+                         "the worst sample is compile-dominated "
+                         "(default 1000.0)")
+    ap.add_argument("--max-pack-amplification", type=float, default=3.0,
+                    help="max packed-view rows repacked across all swaps "
+                         "over one from-scratch pack of the final store "
+                         "(default 3.0; incremental ~1, scratch ~builds)")
     args = ap.parse_args()
     with open(args.report) as f:
         current = json.load(f)
@@ -108,6 +187,12 @@ def main() -> None:
     problems = compare(current, baseline, threshold=args.threshold,
                        min_us=args.min_us, absolute=args.absolute,
                        exclude=tuple(args.exclude))
+    ingest = current.get("reports", {}).get("ingest")
+    if ingest is not None:
+        problems += check_ingest_ratios(
+            ingest, max_durability_tax=args.max_durability_tax,
+            max_ingest_spike=args.max_ingest_spike,
+            max_pack_amplification=args.max_pack_amplification)
     for p in problems:
         print(f"BENCH-REGRESSION: {p}", file=sys.stderr)
     if problems:

@@ -54,6 +54,10 @@ def main() -> None:
 
     def _ingest(quick):
         rows, report = bench_ingest.run(tiny=quick)
+        # Keep the scalar report: check_regression's machine-independent
+        # ingest ratio gates (durability tax, under-ingest spike) read it
+        # from the JSON artifact.
+        reports["ingest"] = report
         return rows, all(e["parity"] for e in report["results"])
 
     benches = {
@@ -82,6 +86,7 @@ def main() -> None:
             raise SystemExit(2)
     all_rows = []
     failures = []
+    reports = {}
     selected = 0
     print("name,us_per_call,derived")
     for name, fn in benches.items():
@@ -120,7 +125,8 @@ def main() -> None:
     if args.json:
         with open(args.json, "w") as f:
             json.dump(dict(quick=args.quick, rows=all_rows,
-                           failures=failures), f, indent=2)
+                           failures=failures, reports=reports), f,
+                      indent=2)
         print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         for msg in failures:

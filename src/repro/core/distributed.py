@@ -560,7 +560,7 @@ def _local_batch_knn(
     """Per-device body of the batched exact k-NN (runs under shard_map).
 
     Mirrors the single-host k-safe ``select="topk"`` protocol of
-    :func:`repro.core.search._batch_engine_core` — shared ``select_len``,
+    :func:`repro.core.search._engine_core` — shared ``select_len``,
     the K-th-bound fallback gate, and :func:`repro.core.search.dedup_mask`
     against re-distanced candidates — on top of a per-shard result list.
     Each shard carries a local (Q, k) top list holding ONLY its own

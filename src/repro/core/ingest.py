@@ -44,7 +44,13 @@ out of pieces the offline pipeline already has:
     spills to an epoch-style ``e{N}`` dir (the builder's epoch-shard
     format + raw + meta) and every acknowledged state transition commits
     a versioned manifest atomically BEFORE the in-memory snapshot swap:
-    spill -> manifest commit -> publish -> GC retired dirs.
+    spill -> manifest commit -> publish -> GC retired dirs. Appends
+    PIPELINE the expensive step: each reserves a commit ticket (offset +
+    epoch dir) under a short lock and spills with no lock held, then the
+    contiguous spilled prefix of the ticket queue group-commits in one
+    manifest — concurrent appenders overlap their spill I/O while
+    manifests still land in offset order, so durable insert throughput
+    scales with the writer count instead of serializing on the disk.
     :meth:`MutableIndex.recover` reloads a crashed store to the exact
     last-committed snapshot — bit-exact answers over every acknowledged
     append — and sweeps orphan dirs from interrupted spills.
@@ -78,6 +84,7 @@ import threading
 import time
 from typing import Callable, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -87,9 +94,9 @@ from repro.core.build_pipeline import (
 )
 from repro.core.index import ParISIndex, assemble_index, empty_index
 from repro.core.search import (
-    NO_POS, SearchConfig, SearchResult, exact_knn_batch,
-    exact_knn_batch_packed, exact_search_batch, exact_search_batch_packed,
-    merge_top_lists, pack_components,
+    NO_POS, PackedComponents, SearchConfig, SearchResult, exact_knn_batch,
+    exact_search_batch, merge_top_lists, pack_components,
+    pack_one_component, packed_engine_args,
 )
 
 _NO_POS = int(NO_POS)
@@ -159,8 +166,19 @@ class CompactionPolicy:
 
     Delta tier (minor trigger — fold deltas into ONE run, base untouched):
     ``max_deltas`` shards or ``max_delta_series`` total series.
-    Run tier (major trigger — fold base + runs into a new base):
-    ``max_runs`` runs or ``max_run_series`` total run series.
+    Run tier (major trigger — fold base + runs into a new base): a SIZE
+    RATIO, not a count — the major fires when the run tier has grown to
+    ``major_ratio`` of the base (series counts; every series is the same
+    (n,) float32 row, so the series ratio IS the byte ratio). A count
+    trigger fires majors at a fixed cadence regardless of how large the
+    base has grown, so sustained ingest pays O(base) folds ever more
+    often relative to the data merged; the ratio trigger makes each major
+    grow the base by at least ``1 + major_ratio``x, so only O(log N)
+    majors happen over a lifetime and the amortized merge cost per
+    ingested series stays bounded (the LSM size-tiered argument —
+    regression-tested in ``tests/test_ingest.py``). A store with runs but
+    an EMPTY base is always major-due: there is nothing to amortize
+    against, and folding crowns the first real base.
     ``leveled=False`` restores the PR-4 behavior: the delta trigger folds
     EVERYTHING into the base (one unbounded merge) — kept as the
     benchmark baseline the leveled scheme is measured against.
@@ -168,9 +186,13 @@ class CompactionPolicy:
 
     max_deltas: int = 4
     max_delta_series: Optional[int] = None
-    max_runs: int = 4
-    max_run_series: Optional[int] = None
+    major_ratio: float = 0.5
     leveled: bool = True
+
+    def __post_init__(self):
+        if not self.major_ratio > 0:
+            raise ValueError(
+                f"major_ratio must be > 0, got {self.major_ratio}")
 
     def plan(self, snapshot: Snapshot) -> Optional[str]:
         """The due fold: "minor", "major", "full", or None (not due)."""
@@ -182,12 +204,9 @@ class CompactionPolicy:
                 >= self.max_delta_series))
         if not self.leveled:
             return "full" if delta_due else None
-        nr = len(snapshot.runs)
-        run_due = nr > 0 and (
-            nr >= self.max_runs
-            or (self.max_run_series is not None
-                and sum(r.num_series for r in snapshot.runs)
-                >= self.max_run_series))
+        run_series = sum(r.num_series for r in snapshot.runs)
+        run_due = run_series > 0 and (
+            run_series >= self.major_ratio * snapshot.base.num_series)
         if run_due:
             return "major"
         if delta_due:
@@ -265,6 +284,201 @@ def build_delta_shard(
     return DeltaShard(index=index, keys=keys, base=base)
 
 
+class IncrementalPacker:
+    """Grows one snapshot's packed view into the next in O(delta).
+
+    ``pack_components`` rebuilds the fused multi-component buffers from
+    scratch — O(total) host work plus, because the per-object engines
+    close over their arrays as XLA constants, a fresh compile — paid by
+    the FIRST fused query after every snapshot swap (the multi-second
+    ``query_ms_under_ingest_max`` spike in ``BENCH_ingest.json``). This
+    packer exploits two invariants instead:
+
+      * components are immutable, and a snapshot swap only changes the
+        TAIL of the (base, runs..., deltas...) component list: an append
+        adds one delta; a minor fold replaces the delta tier with one
+        run; a major fold rewrites from the base. The longest component
+        prefix shared with the previously packed snapshot (matched by
+        object identity) keeps its packed blocks untouched; only the
+        suffix is re-packed through the same :func:`pack_one_component`
+        primitive — O(delta) per append, O(folded tier) per fold.
+      * the raw buffer is file-order, and folds preserve file order
+        (a merge's raw is the concatenation of its inputs' raws), so the
+        raw buffer only ever APPENDS rows.
+
+    Buffers are capacity-padded with ~12.5% quantized headroom (dead
+    blocks are swept-and-masked, so padding is a per-query tax — small
+    proportional headroom bounds it while keeping reshapes O(log) in
+    total growth); dead tail blocks
+    carry ``block_len == 0`` (every lane masked to +inf, so the engine
+    cannot admit them — property-tested in ``tests/test_engine_core.py``).
+    Stable shapes are the point: :func:`repro.core.search.
+    packed_engine_args` takes the buffers as jit ARGUMENTS, so every swap
+    that stays within capacity reuses one compiled engine. Updates are
+    functional (a new buffer, never an in-place write): a published
+    :class:`~repro.core.search.PackedComponents` aliases nothing a later
+    update mutates, so in-flight queries on older snapshots stay exact.
+    """
+
+    def __init__(self, block: int, series_length: int, segments: int,
+                 cardinality: int):
+        self.block = block
+        self.series_length = series_length
+        self.segments = segments
+        self.cardinality = cardinality
+        # (component index object, offset, n_blocks) per packed component;
+        # the object refs both define prefix identity and keep ids unique.
+        self._entries: list = []
+        self._sax = None
+        self._gpos = None
+        self._bl = None
+        self._raw = None
+        self._cap_blocks = 0
+        self._cap_raw = 0
+        self._used_raw = 0
+        self._version: Optional[int] = None
+
+    def update(self, snap: Snapshot) -> tuple:
+        """Pack ``snap``, reusing the previous pack's unchanged prefix.
+
+        Returns ``(PackedComponents, rows_repacked)`` — the second term
+        is the O(delta) the caller's stats surface (suffix SAX rows plus
+        appended raw rows; a scratch fallback counts everything).
+        """
+        comps = [(ix, off) for ix, off in snap.components()
+                 if ix.num_series]
+        if not comps:
+            raise ValueError("packed view needs at least one nonempty "
+                             "component")
+        if self._version is not None and snap.version <= self._version:
+            # A query racing on an OLDER snapshot than the packer has
+            # advanced to: serve it a scratch pack instead of regressing
+            # the shared buffers (rare — only mid-swap stragglers).
+            packed = pack_components(comps, block=self.block)
+            return packed, packed.num_series
+        expect = 0
+        for ix, off in comps:
+            if off != expect:
+                raise ValueError(
+                    f"components not contiguous: offset {off}, expected "
+                    f"{expect}")
+            expect += ix.num_series
+        total = expect
+        b = self.block
+
+        # --- longest shared component prefix (identity + placement) ---
+        p = 0
+        while (p < len(self._entries) and p < len(comps)
+               and comps[p][0] is self._entries[p][0]
+               and comps[p][1] == self._entries[p][1]):
+            p += 1
+        prefix_blocks = sum(e[2] for e in self._entries[:p])
+        entries = list(self._entries[:p])
+        sax_parts, gp_parts, bl_parts = [], [], []
+        for ix, off in comps[p:]:
+            sax, gp, bl = pack_one_component(ix, off, b)
+            sax_parts.append(sax)
+            gp_parts.append(gp)
+            bl_parts.append(bl)
+            entries.append((ix, off, len(bl)))
+        suffix_blocks = sum(len(x) for x in bl_parts)
+        used_blocks = prefix_blocks + suffix_blocks
+        rows = suffix_blocks * b
+
+        # --- SAX / gpos / block_len: prefix slice + suffix + dead tail ---
+        if used_blocks > self._cap_blocks or self._sax is None:
+            # 12.5% headroom, quantized: the masked sweep pays for DEAD
+            # blocks too, so capacity over used is a per-query tax (2x
+            # doubling measured ~75% slower fused queries) — but every
+            # capacity change is a fresh engine compile. ~12.5% bounds
+            # the tax while keeping reshapes O(log) in total growth.
+            cap = used_blocks + max(used_blocks // 8, 4)
+            self._cap_blocks = -(-cap // 4) * 4
+        pad_blocks = self._cap_blocks - used_blocks
+        w = (self._sax.shape[1] if prefix_blocks
+             else np.asarray(comps[p][0].sax).shape[1])
+        parts_sax, parts_gp, parts_bl = [], [], []
+        if prefix_blocks:
+            parts_sax.append(self._sax[: prefix_blocks * b])
+            parts_gp.append(self._gpos[: prefix_blocks * b])
+            parts_bl.append(self._bl[:prefix_blocks])
+        if suffix_blocks:
+            parts_sax.append(jnp.asarray(np.concatenate(sax_parts)))
+            parts_gp.append(jnp.asarray(np.concatenate(gp_parts)))
+            parts_bl.append(jnp.asarray(np.concatenate(bl_parts)))
+        if pad_blocks:
+            parts_sax.append(jnp.zeros((pad_blocks * b, w), jnp.uint8))
+            parts_gp.append(jnp.full((pad_blocks * b,), NO_POS, jnp.int32))
+            parts_bl.append(jnp.zeros((pad_blocks,), jnp.int32))
+
+        def cat(parts):
+            return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+        self._sax, self._gpos, self._bl = (
+            cat(parts_sax), cat(parts_gp), cat(parts_bl))
+
+        # --- raw: file-order invariant under folds — append-only ---
+        if total > self._used_raw or self._raw is None:
+            grow = self._raw is None or total > self._cap_raw
+            if grow:
+                # Raw rows are only touched by per-candidate gathers, not
+                # the sweep — headroom here costs memory, not query time.
+                self._cap_raw = total + max(total // 8, self.block)
+            new_rows = [ix.raw[max(0, self._used_raw - off):]
+                        for ix, off in comps
+                        if off + ix.num_series > self._used_raw]
+            rows += total - self._used_raw
+            parts_raw = []
+            if self._used_raw:
+                parts_raw.append(self._raw[: self._used_raw])
+            parts_raw.extend(new_rows)
+            if grow:
+                if self._cap_raw > total:
+                    parts_raw.append(jnp.zeros(
+                        (self._cap_raw - total, self.series_length),
+                        jnp.float32))
+                self._raw = cat(parts_raw)
+            else:
+                self._raw = jax.lax.dynamic_update_slice(
+                    self._raw, jnp.concatenate(new_rows),
+                    (self._used_raw, 0))
+            self._used_raw = total
+
+        self._entries = entries
+        self._version = snap.version
+        packed = PackedComponents(
+            sax=self._sax, gpos=self._gpos, block_len=self._bl,
+            raw=self._raw, num_series=total, block=b,
+            series_length=self.series_length, segments=self.segments,
+            cardinality=self.cardinality,
+        )
+        return packed, rows
+
+
+class _SpillTicket:
+    """One durable append's place in the commit order.
+
+    A ticket is allocated under ``_ticket_lock`` (reserving the batch's
+    global file offset and its ``e{N}`` dir) BEFORE the spill starts, so
+    any number of appenders can spill concurrently while manifests still
+    commit in offset order: a ticket becomes committable only when every
+    ticket before it has spilled. ``event`` fires when the ticket is
+    committed (success) or poisoned (its own spill failed, an EARLIER
+    ticket failed — the offset gap can never be acknowledged — or the
+    group's manifest commit failed).
+    """
+
+    __slots__ = ("seq", "delta", "state", "error", "event", "t0")
+
+    def __init__(self, seq: int, delta: DeltaShard, t0: float):
+        self.seq = seq
+        self.delta = delta
+        self.state = "spilling"  # -> "spilled" -> committed | "failed"
+        self.error: Optional[BaseException] = None
+        self.event = threading.Event()
+        self.t0 = t0
+
+
 class MutableIndex:
     """A growing exact-search index: leveled tiers, snapshot-swapped.
 
@@ -277,11 +491,15 @@ class MutableIndex:
 
     ``workdir`` makes the store durable: components spill to ``e{N}``
     dirs and every acknowledged transition commits a versioned manifest
-    before it publishes (see ``core.durable``); durable writers
-    additionally serialize on ``_disk`` so manifests commit in snapshot
-    order. ``fault`` is the crash-injection hook (tests only) — once a
-    fault fires, the in-memory object must be abandoned and the store
-    reopened with :meth:`recover`, exactly like a real crash.
+    before it publishes (see ``core.durable``). Durable appends are
+    PIPELINED: each one reserves a commit ticket (offset + epoch dir)
+    under a short lock, spills its shard in its own thread with no lock
+    held, then the contiguous spilled prefix of the ticket queue commits
+    in ONE manifest under ``_commit`` — N appenders overlap their spill
+    I/O while manifests still land in offset order (see :meth:`append`).
+    ``fault`` is the crash-injection hook (tests only) — once a fault
+    fires, the in-memory object must be abandoned and the store reopened
+    with :meth:`recover`, exactly like a real crash.
 
     ``refine_bits`` must match the value the base was built with (the
     builder's default, 4) — it defines the leaf order that compaction's
@@ -338,12 +556,23 @@ class MutableIndex:
     def _init_runtime(self) -> None:
         self._mutate = threading.Lock()
         self._compact = threading.Lock()
-        self._disk = threading.Lock()
+        self._commit = threading.Lock()  # manifests land in ticket order
+        self._pack = threading.Lock()
+        self._ticket_lock = threading.Lock()  # queue + offset/epoch alloc
+        self._spill_queue: List[_SpillTicket] = []  # uncommitted, seq order
+        self._spill_seq = 0
+        self._tail: Optional[int] = None  # next reserved global offset
+        self._packer = IncrementalPacker(
+            self.pack_block, self.series_length, self.segments,
+            self.cardinality)
         self._stats = dict(
             appends=0, appended_series=0, convert_time=0.0,
             compactions=0, compacted_series=0,
             merge_time=0.0, stall_time_max=0.0,
-            spills=0, spill_time=0.0,
+            spills=0, spill_time=0.0, group_commits=0,
+            spill_queue_depth_max=0,
+            pack_builds=0, pack_time=0.0, pack_time_max=0.0,
+            pack_rows_repacked=0,
         )
 
     # ---------------------------------------------------------- durability
@@ -352,7 +581,14 @@ class MutableIndex:
         return self.workdir is not None
 
     def _alloc_epoch(self) -> str:
-        """Next ``e{N}`` dir name (caller holds ``_disk`` once running)."""
+        """Next ``e{N}`` dir name.
+
+        The caller holds ``_ticket_lock`` once the store is concurrent
+        (``__init__``'s base spill runs before any other thread exists).
+        An allocated number may never commit — a poisoned ticket's dir
+        stays an orphan until recovery sweeps it — so ``next_epoch`` in a
+        manifest only promises "first unused", not "densely used".
+        """
         name = f"e{self._next_epoch}"
         self._next_epoch += 1
         return name
@@ -470,14 +706,29 @@ class MutableIndex:
         The batch becomes one delta shard at the end of the global file
         order. The Stage-2 conversion runs OUTSIDE all locks (positions
         are shard-local, so it needs no offset); only the offset stamp +
-        snapshot swap are locked. A durable store additionally spills the
-        shard and commits the manifest BEFORE the swap — the append is
-        acknowledged only once it would survive a crash. Durable appends
-        hold ``_disk`` across spill+commit+swap, i.e. durability is
-        single-writer: manifests must land in offset order, and a
-        spill-outside-the-lock scheme needs a commit ticket queue
-        (ROADMAP) — a concurrent compaction publish can therefore stall
-        behind one in-flight batch spill.
+        snapshot swap are locked.
+
+        A durable store spills the shard and commits the manifest BEFORE
+        the swap — the append is acknowledged only once it would survive
+        a crash — through the pipelined ticket protocol:
+
+          1. reserve, under ``_ticket_lock`` (microseconds): a commit
+             ticket carrying the batch's global offset (the tail past
+             every in-flight reservation) and its ``e{N}`` dir,
+          2. spill the shard in THIS thread, no lock held — concurrent
+             appenders overlap their spill I/O here,
+          3. group-commit: the longest fully-spilled PREFIX of the ticket
+             queue is published as ONE manifest under ``_commit`` (so
+             manifests land in offset order and a later ticket can never
+             commit across an unspilled/failed gap), then the snapshot
+             swaps and every ticket in the group is acknowledged,
+          4. wait for this ticket's event — set by whichever appender's
+             commit included it.
+
+        A failed spill poisons its own ticket AND every later one
+        (committed state can never contain an offset gap); the poisoned
+        ``append`` calls raise, nothing past the gap is acknowledged, and
+        the reserved tail rolls back so new appends reuse the gap offset.
         """
         t0 = time.perf_counter()
         keys, index = _convert_batch(
@@ -491,21 +742,102 @@ class MutableIndex:
                                    base=snap.num_series)
                 self._publish_append(snap, delta, t0)
             return delta
-        with self._disk:
-            snap = self._snapshot
+        with self._ticket_lock:
+            if self._tail is None:
+                self._tail = self._snapshot.num_series
             name = self._alloc_epoch()
-            delta = DeltaShard(index=index, keys=keys,
-                               base=snap.num_series, dir=name)
+            delta = DeltaShard(index=index, keys=keys, base=self._tail,
+                               dir=name)
+            self._tail += index.num_series
+            ticket = _SpillTicket(self._spill_seq, delta, t0)
+            self._spill_seq += 1
+            self._spill_queue.append(ticket)
+            depth = len(self._spill_queue)
+        with self._mutate:
+            s = self._stats
+            s["spill_queue_depth_max"] = max(
+                s["spill_queue_depth_max"], depth)
+        try:
             self._spill_shard(name, keys, index, delta.base)
+        except BaseException as e:
+            self._poison_from(ticket, e)
+            raise
+        with self._ticket_lock:
+            if ticket.state == "spilling":
+                ticket.state = "spilled"
+        self._commit_spilled()
+        ticket.event.wait()
+        if ticket.error is not None:
+            raise ticket.error
+        return delta
+
+    def _poison_from(self, ticket: "_SpillTicket",
+                     err: BaseException) -> None:
+        """Fail ``ticket`` and every LATER queued ticket; roll back tail.
+
+        Earlier tickets are untouched (they precede the gap and stay
+        committable); everything from the gap on is woken with an error,
+        so no caller acknowledges an append the committed order skipped.
+        """
+        with self._ticket_lock:
+            try:
+                i = self._spill_queue.index(ticket)
+            except ValueError:  # already poisoned by an earlier gap
+                return
+            doomed = self._spill_queue[i:]
+            del self._spill_queue[i:]
+            self._tail = ticket.delta.base
+            for t in doomed:
+                t.state = "failed"
+                t.error = err if t is ticket else RuntimeError(
+                    f"append aborted: an earlier durable append failed "
+                    f"({err})")
+                t.event.set()
+
+    def _commit_spilled(self) -> None:
+        """Group-commit the contiguous spilled prefix of the ticket queue.
+
+        Runs in whichever appender thread gets here; under ``_commit`` it
+        takes the longest all-spilled prefix, publishes ALL of it behind
+        one manifest + one snapshot swap, and wakes those tickets. If the
+        head of the queue is still spilling there is nothing committable
+        — the caller's own ticket will be committed later by the thread
+        that completes the head (every appender calls this after its
+        spill, so the last spill of any contiguous prefix commits it).
+        """
+        with self._commit:
+            with self._ticket_lock:
+                group = []
+                for t in self._spill_queue:
+                    if t.state != "spilled":
+                        break
+                    group.append(t)
+            if not group:
+                return
+            snap = self._snapshot
+            assert group[0].delta.base == snap.num_series, (
+                "ticket offsets out of sync with the committed snapshot")
             new_snap = dataclasses.replace(
-                snap, deltas=snap.deltas + (delta,),
+                snap,
+                deltas=snap.deltas + tuple(t.delta for t in group),
                 version=snap.version + 1)
-            durable.write_manifest(
-                self.workdir, self._manifest_for(new_snap), self._fault)
+            try:
+                durable.write_manifest(
+                    self.workdir, self._manifest_for(new_snap),
+                    self._fault)
+            except BaseException as e:
+                self._poison_from(group[0], e)
+                raise
             with self._mutate:
                 self._snapshot = new_snap
-                self._count_append(delta, t0)
-        return delta
+                for t in group:
+                    self._count_append(t.delta, t.t0)
+                self._stats["group_commits"] += 1
+            with self._ticket_lock:
+                del self._spill_queue[: len(group)]
+                for t in group:
+                    t.state = "committed"
+                    t.event.set()
 
     def _publish_append(self, snap: Snapshot, delta: DeltaShard,
                         t0: float) -> None:
@@ -578,10 +910,11 @@ class MutableIndex:
             merged_shard = None
             name = None
             if self.durable:
-                with self._disk:
+                with self._ticket_lock:
                     name = self._alloc_epoch()
-                # Spill OUTSIDE _disk: the dir is an orphan until a
-                # manifest references it, so appends keep committing.
+                # Spill OUTSIDE the commit lock: the dir is an orphan
+                # until a manifest references it, so appends keep
+                # committing.
                 self._spill_shard(name, keys, merged, offset)
             merge_time = time.perf_counter() - t0
             if on_before_publish is not None:
@@ -614,7 +947,7 @@ class MutableIndex:
         merge and survives. Runs cannot change during a merge at all.
         """
         old_base_dir = None
-        locks = [self._disk] if self.durable else []
+        locks = [self._commit] if self.durable else []
         for lk in locks:
             lk.acquire()
         try:
@@ -672,20 +1005,49 @@ class MutableIndex:
 
     # ------------------------------------------------------------- search
     def _packed_view(self, snap: Snapshot):
-        """The snapshot's fused multi-component view, built lazily once.
+        """The snapshot's fused view, refreshed incrementally in O(delta).
 
         Cached on the (immutable) snapshot object, like the per-index
-        engine cache — a racing duplicate build is idempotent. NOTE: the
-        build is an O(total) repack, paid by the FIRST fused query after
-        each snapshot change (appends/compactions never pay it);
-        incremental in-place growth is a ROADMAP item.
+        engine cache. The refresh extends the previous snapshot's
+        capacity-padded buffers past the longest unchanged component
+        prefix (:class:`IncrementalPacker`) instead of repacking
+        O(total); the packer's mutable state is serialized by ``_pack``,
+        and a query racing on an older snapshot gets a scratch pack
+        rather than regressing the shared buffers.
         """
         packed = getattr(snap, "_packed", None)
-        if packed is None:
-            packed = pack_components(snap.components(),
-                                     block=self.pack_block)
+        if packed is not None:
+            return packed
+        t0 = time.perf_counter()
+        with self._pack:
+            packed = getattr(snap, "_packed", None)
+            if packed is not None:  # lost the race; already built
+                return packed
+            packed, rows = self._packer.update(snap)
             object.__setattr__(snap, "_packed", packed)
+        dt = time.perf_counter() - t0
+        with self._mutate:
+            s = self._stats
+            s["pack_builds"] += 1
+            s["pack_time"] += dt
+            s["pack_time_max"] = max(s["pack_time_max"], dt)
+            s["pack_rows_repacked"] += int(rows)
         return packed
+
+    def _fused_engine_call(self, packed, qs, *, k: int, round_size: int,
+                           select: str, impl: str) -> tuple:
+        """One fused RDC pass through the shape-stable args-engine.
+
+        ``packed_engine_args`` takes the capacity-padded buffers as jit
+        arguments, so successive snapshots reuse one compiled engine —
+        the per-object ``exact_knn_batch_packed`` closure would recompile
+        on every swap. ``k`` arrives pre-clamped to ``packed.num_series``.
+        """
+        return packed_engine_args(
+            packed.sax, packed.gpos, packed.block_len, packed.raw, qs,
+            block=packed.block, series_length=packed.series_length,
+            segments=packed.segments, cardinality=packed.cardinality,
+            k=k, round_size=round_size, select=select, impl=impl)
 
     @staticmethod
     def _use_fused(fused, comps: list, sort: bool) -> bool:
@@ -728,16 +1090,25 @@ class MutableIndex:
             if unknown:
                 raise TypeError(
                     f"unexpected keyword arguments: {sorted(unknown)}")
-            out = exact_knn_batch_packed(
-                self._packed_view(snap), qs, k=k,
+            if k < 1:
+                raise ValueError(f"k must be >= 1, got {k}")
+            packed = self._packed_view(snap)
+            k_eff = min(k, packed.num_series)
+            top_d, top_p, reads, updates, rounds = self._fused_engine_call(
+                packed, qs, k=k_eff,
                 round_size=kw.get("round_size", 4096),
-                impl=kw.get("impl", "auto"),
                 select=kw.get("select", "topk"),
-                stats=kw.get("stats", False),
-            )
+                impl=kw.get("impl", "auto"))
+            if k_eff < k:  # tiny store: sentinel-pad missing neighbors
+                nq = top_d.shape[0]
+                top_d = jnp.concatenate(
+                    [top_d, jnp.full((nq, k - k_eff), jnp.inf)], axis=1)
+                top_p = jnp.concatenate(
+                    [top_p, jnp.full((nq, k - k_eff), NO_POS)], axis=1)
             if kw.get("stats", False):
-                return tuple(np.asarray(x) for x in out)
-            return np.asarray(out[0]), np.asarray(out[1])
+                return tuple(np.asarray(x) for x in
+                             (top_d, top_p, reads, updates, rounds))
+            return np.asarray(top_d), np.asarray(top_p)
         ds, ps = [], []
         for index, off in comps:
             d, p = exact_knn_batch(index, qs, k=k, **kw)
@@ -766,8 +1137,12 @@ class MutableIndex:
                 np.full((nq,), np.float32(np.inf)),
                 np.full((nq,), _NO_POS, np.int32), z, z, np.int32(0))
         if self._use_fused(fused, comps, cfg.sort):
-            return exact_search_batch_packed(self._packed_view(snap), qs,
-                                             cfg)
+            packed = self._packed_view(snap)
+            top_d, top_p, reads, updates, rounds = self._fused_engine_call(
+                packed, qs, k=1, round_size=cfg.round_size,
+                select=cfg.select, impl=cfg.impl)
+            return SearchResult(top_d[:, 0], top_p[:, 0], reads, updates,
+                                rounds)
         parts = [exact_search_batch(index, qs, cfg) for index, _ in comps]
         best_d = np.full((nq,), np.inf, np.float32)
         best_p = np.full((nq,), _NO_POS, np.int64)
@@ -797,6 +1172,7 @@ class MutableIndex:
             base_series=snap.base.num_series,
             version=snap.version,
             durable=self.durable,
+            spill_queue_depth=len(self._spill_queue),
         )
         return s
 

@@ -52,13 +52,41 @@ Batched query answering (beyond-paper; MESSI-style multi-query execution):
                                :func:`exact_search_single` keeps the original
                                one-query-at-a-time implementation as the
                                benchmark baseline.
+
+Engine architecture — ONE core, many storage views. The whole RDC
+protocol (LBC pass -> per-query candidate order -> masked rounds + BSF
+merge -> joint early exit -> exactness fallback) is implemented exactly
+once, in :func:`_engine_core`; everything layout-specific enters through
+an :class:`EngineView` hook bundle::
+
+    exact_*_batch / make_batch_engine        exact_*_batch_packed
+        |                                        |
+    _engine_for (per-index jit cache)        _packed_engine_for /
+        |                                    packed_engine_args
+        v                                        v
+    _index_view: identity positions          _packed_view: gpos global
+    (index.pos), approx-seeded BSF,          translation, masked multi-
+    per-index LBC kernel                     component LBC kernel, +inf
+            |                                pad lanes, cold BSF
+            |                                    |
+            +----------------+-------------------+
+                             v
+               _engine_core(view, queries, ...)
+
+The single-index adapters close over the index arrays as jit constants
+(fastest per call); :func:`packed_engine_args` instead takes the packed
+buffers as ARGUMENTS, so an incrementally grown view with stable
+capacity (``core.ingest.IncrementalPacker``) reuses one compiled engine
+across snapshot swaps. Adding an engine feature (epsilon tiers, new
+selection modes, BSF seeding strategies) is a change to ``_engine_core``
+or a new hook — never two parallel edits.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -226,48 +254,118 @@ def merge_top_lists(dists: list, positions: list, k: int) -> tuple:
     )
 
 
-def _batch_engine_core(
-    index: ParISIndex,
+@dataclasses.dataclass(frozen=True)
+class EngineView:
+    """The storage hooks that specialize the ONE RDC engine core.
+
+    :func:`_engine_core` implements the whole batched protocol — LBC pass,
+    candidate selection, masked rounds, BSF merge, exactness fallback —
+    exactly once; everything layout-specific lives behind these hooks:
+
+      n_rows        candidate rows the LBC pass covers (N for a single
+                    index; the block-padded N_pad for a packed buffer)
+      num_series    real series behind those rows, for k validation;
+                    ``None`` skips the check (the caller already clamped k)
+      segments      PAA word width of the stored SAX rows
+      lower_bounds  ((Q, w) query PAA, impl) -> (Q, n_rows) squared lower
+                    bounds; rows that are padding must come back +inf so
+                    no selection or round mask can ever admit them
+      positions     candidate row ids -> file positions (identity-order
+                    ``index.pos`` lookup, or the packed ``gpos``
+                    translation; :data:`NO_POS` at pad rows)
+      gather_raw    file positions -> raw series rows; a clipped gather,
+                    so a :data:`NO_POS` sentinel reads row 0 harmlessly —
+                    its +inf lower bound keeps it outside every mask
+      seed          ``None`` starts every BSF at +inf; else (Q, n) queries
+                    -> ((Q,) bsf, (Q,) pos, leaf reads) — the
+                    approx-search seeding of the single-index path
+    """
+
+    n_rows: int
+    num_series: Optional[int]
+    segments: int
+    lower_bounds: Callable
+    positions: Callable
+    gather_raw: Callable
+    seed: Optional[Callable] = None
+
+
+def _index_view(
+    index: ParISIndex, *, leaf_cap: int, init: str
+) -> EngineView:
+    """Single-index hooks: identity positions + approx-seeded BSF."""
+    bpp = isax.padded_breakpoints(index.cardinality)
+
+    def lower_bounds(qps, impl):
+        return ops.lower_bound_sq_batch(
+            qps, index.sax, bpp, index.series_length, impl=impl
+        )
+
+    if init == "approx":
+        leaf = min(int(leaf_cap), index.num_series)
+
+        def seed(queries):
+            bsf0, pos0 = approx_search_batch(index, queries, leaf)
+            return bsf0, pos0, leaf
+    else:
+        seed = None
+
+    return EngineView(
+        n_rows=index.num_series,
+        num_series=index.num_series,
+        segments=index.segments,
+        lower_bounds=lower_bounds,
+        positions=lambda idx: jnp.take(index.pos, idx, axis=0),
+        gather_raw=lambda pos: jnp.take(index.raw, pos, axis=0,
+                                        mode="clip"),
+        seed=seed,
+    )
+
+
+def _engine_core(
+    view: EngineView,
     queries: jax.Array,
     *,
     k: int,
     round_size: int,
-    leaf_cap: int,
     sort: bool,
     select: str,
     impl: str,
-    init: str,
 ) -> tuple:
-    """The shared batched RDC loop behind every batch (and Q=1) search.
+    """THE batched RDC loop — the single engine core behind every search.
 
     (Q, n) queries -> ((Q, k) dists, (Q, k) positions, (Q,) reads,
     (Q,) bsf updates, rounds). One ``while_loop`` drives all Q queries:
     per-query BSF vector, per-query candidate order, per-query round masks,
     and a joint early exit once no query's next lower bound beats its BSF.
+    Storage layout (single index vs packed multi-component buffer) enters
+    only through the :class:`EngineView` hooks.
 
     ``select="topk"`` keeps only the K smallest bounds per query
     (K = max(N/16, 4*round_size)); exactness is preserved by a fallback scan
-    over the full SAX order that only runs for queries whose K-th bound still
-    beats their k-th best distance when the truncated list is exhausted
-    (rare — raw reads are ~1-4% of N on the paper's workloads). The path is
-    k-safe: the fallback (and, under ``init="approx"``, the main loop)
-    re-distances already-seen candidates, and for k > 1 every merge masks
-    candidates whose position already sits in the result list
+    over the full row order that only runs for queries whose K-th bound
+    still beats their k-th best distance when the truncated list is
+    exhausted (rare — raw reads are ~1-4% of N on the paper's workloads).
+    The path is k-safe: the fallback (and, under an approx seed, the main
+    loop) re-distances already-seen candidates, and for k > 1 every merge
+    masks candidates whose position already sits in the result list
     (:func:`dedup_mask`), so no entry can be duplicated. Unfilled result
     slots are (INF, :data:`NO_POS`).
+
+    ``sort=False`` (the ADS+-style serial scan, row order, no early exit)
+    requires a per-query-shared row order and is only offered by the
+    single-index adapters.
     """
-    if not 1 <= k <= index.num_series:
-        raise ValueError(f"k={k} outside [1, {index.num_series}]")
-    n_series = index.num_series
+    if view.num_series is not None and not 1 <= k <= view.num_series:
+        raise ValueError(f"k={k} outside [1, {view.num_series}]")
+    n_rows = view.n_rows
     n_q = queries.shape[0]
     rs = round_size
     qs = isax.znorm(queries)
-    qps = isax.paa(qs, index.segments)
-    bpp = isax.padded_breakpoints(index.cardinality)
+    qps = isax.paa(qs, view.segments)
 
-    if init == "approx":
-        leaf = min(int(leaf_cap), n_series)
-        bsf0, pos0 = approx_search_batch(index, queries, leaf)
+    if view.seed is not None:
+        bsf0, pos0, leaf = view.seed(queries)
         top_d0 = jnp.concatenate(
             [bsf0[:, None], jnp.full((n_q, k - 1), INF)], axis=1
         )
@@ -281,23 +379,21 @@ def _batch_engine_core(
         top_p0 = jnp.full((n_q, k), NO_POS)
         reads0 = jnp.zeros((n_q,), jnp.int32)
 
-    # --- LBC phase: ONE fused (Q, N) pass over the SAX array. ---
-    lb = ops.lower_bound_sq_batch(
-        qps, index.sax, bpp, index.series_length, impl=impl
-    )
+    # --- LBC phase: ONE fused (Q, n_rows) pass over the SAX rows. ---
+    lb = view.lower_bounds(qps, impl)
 
     # --- Per-query candidate orders. top_k ties break toward lower index,
     # exactly like a stable ascending argsort of lb. ---
     if sort:
         if select == "topk":
-            sel_len = select_len(n_series, rs)
+            sel_len = select_len(n_rows, rs)
         else:
-            sel_len = n_series
+            sel_len = n_rows
         neg, order = jax.lax.top_k(-lb, sel_len)
         order = order.astype(jnp.int32)
         lb_sel = -neg
     else:
-        sel_len = n_series
+        sel_len = n_rows
         lb_sel = lb
 
     n_rounds = -(-sel_len // rs)
@@ -307,7 +403,7 @@ def _batch_engine_core(
         order_p = _pad_cols(order, padded, 0)
     else:
         shared_order_p = _pad_to(
-            jnp.arange(n_series, dtype=jnp.int32), padded, 0
+            jnp.arange(n_rows, dtype=jnp.int32), padded, 0
         )
 
     def _euclid_rows(raws):
@@ -354,13 +450,13 @@ def _batch_engine_core(
         lbs = jax.lax.dynamic_slice_in_dim(lb_sel_p, r * rs, rs, axis=1)
         if sort:
             idx = jax.lax.dynamic_slice_in_dim(order_p, r * rs, rs, axis=1)
-            cand_pos = jnp.take(index.pos, idx, axis=0)  # (Q, rs)
-            raws = jnp.take(index.raw, cand_pos, axis=0)  # the "disk reads"
+            cand_pos = view.positions(idx)  # (Q, rs)
+            raws = view.gather_raw(cand_pos)  # the "disk reads"
             d = _euclid_rows(raws)
         else:
             idx = jax.lax.dynamic_slice_in_dim(shared_order_p, r * rs, rs)
-            pos1 = jnp.take(index.pos, idx, axis=0)  # (rs,) SAX-order scan
-            raws = jnp.take(index.raw, pos1, axis=0)
+            pos1 = view.positions(idx)  # (rs,) row-order scan
+            raws = view.gather_raw(pos1)
             d = _euclid_shared(raws)
             cand_pos = jnp.broadcast_to(pos1[None, :], (n_q, rs))
         mask = lbs < kth[:, None]
@@ -379,21 +475,21 @@ def _batch_engine_core(
            jnp.zeros((n_q,), jnp.int32))
     r, top_d, top_p, reads, updates = jax.lax.while_loop(cond, body, st0)
 
-    if sort and select == "topk" and sel_len < n_series:
+    if sort and select == "topk" and sel_len < n_rows:
         # Exactness fallback: a query whose worst *selected* bound still
         # beats its BSF might have unselected qualifying candidates — scan
-        # the full SAX order with per-query (bound, need) masks. The gate is
+        # the full row order with per-query (bound, need) masks. The gate is
         # re-evaluated every round, so it tightens as BSFs improve. The
         # whole loop (including its padded-copy setup) lives inside a
         # lax.cond: in the common case no query needs it and the branch —
         # and its buffer copies — are skipped entirely.
         kth_bound = lb_sel[:, -1]
-        all_rounds = -(-n_series // rs)
+        all_rounds = -(-n_rows // rs)
         pad_all = all_rounds * rs
 
         def run_fallback(st):
             idx_all = _pad_to(
-                jnp.arange(n_series, dtype=jnp.int32), pad_all, 0)
+                jnp.arange(n_rows, dtype=jnp.int32), pad_all, 0)
             lb_all = _pad_cols(lb, pad_all, INF)
 
             def fcond(fst):
@@ -407,8 +503,8 @@ def _batch_engine_core(
                 lbs = jax.lax.dynamic_slice_in_dim(
                     lb_all, r2 * rs, rs, axis=1)
                 idx = jax.lax.dynamic_slice_in_dim(idx_all, r2 * rs, rs)
-                pos1 = jnp.take(index.pos, idx, axis=0)
-                raws = jnp.take(index.raw, pos1, axis=0)
+                pos1 = view.positions(idx)
+                raws = view.gather_raw(pos1)
                 d = _euclid_shared(raws)
                 # lbs >= kth_bound skips candidates the main loop already
                 # processed (everything strictly below the K-th bound was
@@ -452,9 +548,10 @@ class PackedComponents:
     lower-bound kernel (:func:`ops.lower_bound_sq_multi`) covers the whole
     store in one (Q, N_pad) pass. The block alignment means appending a
     component only APPENDS blocks — earlier components' rows never move —
-    though today's maintenance is still rebuild-on-first-use per snapshot
-    (``core.ingest`` caches one view per immutable snapshot; growing the
-    buffers in place is a ROADMAP item). ``gpos`` maps packed
+    which is what ``core.ingest.IncrementalPacker`` exploits: it keeps
+    capacity-padded buffers (dead tail blocks masked by ``block_len == 0``)
+    and rewrites only the components past the longest unchanged prefix on
+    each snapshot swap, O(delta) per append. ``gpos`` maps packed
     rows to *global* file positions (:data:`NO_POS` at pad rows, so a pad
     that survives to a result list is already the sentinel), ``block_len``
     is the kernel's per-block validity table, and ``raw`` is the full
@@ -472,6 +569,28 @@ class PackedComponents:
     series_length: int
     segments: int
     cardinality: int
+
+
+def pack_one_component(ix, off: int, block: int) -> tuple:
+    """One component's packed parts: (sax, gpos, block_len) np arrays.
+
+    The per-component packing primitive shared by :func:`pack_components`
+    and the incremental packer (``core.ingest.IncrementalPacker``) — ONE
+    definition, so an incrementally grown buffer is byte-identical to a
+    from-scratch pack over the same components.
+    """
+    m = ix.num_series
+    pad = (-m) % block
+    sax = np.asarray(ix.sax)
+    gp = np.asarray(ix.pos, np.int32) + np.int32(off)
+    if pad:
+        sax = np.concatenate(
+            [sax, np.zeros((pad, sax.shape[1]), np.uint8)])
+        gp = np.concatenate([gp, np.full((pad,), _NP_NO_POS, np.int32)])
+    bl = np.full(((m + pad) // block,), block, np.int32)
+    if pad:
+        bl[-1] = block - pad
+    return sax, gp, bl
 
 
 def pack_components(components, block: int = 128) -> PackedComponents:
@@ -495,17 +614,7 @@ def pack_components(components, block: int = 128) -> PackedComponents:
         expect += ix.num_series
     sax_parts, gpos_parts, len_parts = [], [], []
     for ix, off in comps:
-        m = ix.num_series
-        pad = (-m) % block
-        sax = np.asarray(ix.sax)
-        gp = np.asarray(ix.pos, np.int32) + np.int32(off)
-        if pad:
-            sax = np.concatenate(
-                [sax, np.zeros((pad, sax.shape[1]), np.uint8)])
-            gp = np.concatenate([gp, np.full((pad,), _NP_NO_POS, np.int32)])
-        bl = np.full(((m + pad) // block,), block, np.int32)
-        if pad:
-            bl[-1] = block - pad
+        sax, gp, bl = pack_one_component(ix, off, block)
         sax_parts.append(sax)
         gpos_parts.append(gp)
         len_parts.append(bl)
@@ -523,170 +632,51 @@ def pack_components(components, block: int = 128) -> PackedComponents:
     )
 
 
-def _packed_engine_core(
-    packed: PackedComponents,
-    queries: jax.Array,
+def _packed_view(
+    sax: jax.Array,
+    gpos: jax.Array,
+    block_len: jax.Array,
+    raw: jax.Array,
     *,
-    k: int,
-    round_size: int,
-    select: str,
-    impl: str,
-) -> tuple:
-    """The fused multi-component RDC loop: one sweep over base+runs+deltas.
+    block: int,
+    series_length: int,
+    segments: int,
+    cardinality: int,
+    num_series: Optional[int],
+) -> EngineView:
+    """Packed-buffer hooks: the fused multi-component sweep over the core.
 
-    The multi-component analogue of :func:`_batch_engine_core`: ONE masked
-    lower-bound pass over the packed SAX buffer replaces the per-component
-    engine calls, candidate positions are already global (``packed.gpos``),
-    and raw gathers hit the file-order concatenation directly. Pad rows
-    carry (+inf, :data:`NO_POS`), so they can never pass a round mask and,
-    if the store holds fewer than ``k`` series' worth of finite distances,
-    they ARE the sentinel slots. The BSF starts at +inf (no approx seed —
-    a packed buffer has no global bucket structure), which costs a few
-    extra raw reads but changes no answer: exactness comes from the same
-    sorted-candidate / fallback-scan protocol as the single-index engine.
+    ONE masked lower-bound pass over the packed SAX buffer replaces the
+    per-component engine calls, candidate positions go through the
+    ``gpos`` global translation, and raw gathers hit the file-order
+    concatenation directly. Pad rows carry (+inf, :data:`NO_POS`), so
+    they can never pass a round mask and, if the store holds fewer than
+    ``k`` series' worth of finite distances, they ARE the sentinel slots.
+    No seed hook: a packed buffer has no global bucket structure, so the
+    BSF starts at +inf — a few extra raw reads, never a different answer.
+    Works both over a :class:`PackedComponents`' arrays (closed over as
+    jit constants) and over traced buffer arguments
+    (:func:`packed_engine_args`).
     """
-    if not 1 <= k <= packed.num_series:
-        raise ValueError(f"k={k} outside [1, {packed.num_series}]")
-    n_pad = packed.sax.shape[0]
-    n_q = queries.shape[0]
-    rs = round_size
-    qs = isax.znorm(queries)
-    qps = isax.paa(qs, packed.segments)
-    bpp = isax.padded_breakpoints(packed.cardinality)
+    bpp = isax.padded_breakpoints(cardinality)
 
-    top_d0 = jnp.full((n_q, k), INF)
-    top_p0 = jnp.full((n_q, k), NO_POS)
-    reads0 = jnp.zeros((n_q,), jnp.int32)
+    def lower_bounds(qps, impl):
+        return ops.lower_bound_sq_multi(
+            qps, sax, bpp, series_length, block_len,
+            impl=impl, block_n=block,
+        )
 
-    # --- LBC: ONE fused (Q, N_pad) masked pass over every component. ---
-    lb = ops.lower_bound_sq_multi(
-        qps, packed.sax, bpp, packed.series_length, packed.block_len,
-        impl=impl, block_n=packed.block,
+    return EngineView(
+        n_rows=sax.shape[0],
+        num_series=num_series,
+        segments=segments,
+        lower_bounds=lower_bounds,
+        positions=lambda idx: jnp.take(gpos, idx, axis=0),
+        # NO_POS (and dead-block) rows clip to row 0 harmlessly: their
+        # +inf lower bound keeps them out of every mask.
+        gather_raw=lambda pos: jnp.take(raw, pos, axis=0, mode="clip"),
+        seed=None,
     )
-
-    if select == "topk":
-        sel_len = select_len(n_pad, rs)
-    else:
-        sel_len = n_pad
-    neg, order = jax.lax.top_k(-lb, sel_len)
-    order = order.astype(jnp.int32)
-    lb_sel = -neg
-
-    n_rounds = -(-sel_len // rs)
-    padded = n_rounds * rs
-    lb_sel_p = _pad_cols(lb_sel, padded, INF)
-    order_p = _pad_cols(order, padded, 0)
-
-    def _euclid_rows(raws):
-        return jax.vmap(
-            lambda q, rw: ops.euclid_sq(q, rw, impl=impl)
-        )(qs, raws)
-
-    def _euclid_shared(raws):
-        return jax.vmap(lambda q: ops.euclid_sq(q, raws, impl=impl))(qs)
-
-    def merge(top_d, top_p, cand_pos, d):
-        if k == 1:
-            j = jnp.argmin(d, axis=1)
-            dj = jnp.take_along_axis(d, j[:, None], axis=1)
-            pj = jnp.take_along_axis(cand_pos, j[:, None], axis=1)
-            better = dj < top_d
-            return (
-                jnp.where(better, dj, top_d),
-                jnp.where(better, pj, top_p),
-            )
-        d = jnp.where(dedup_mask(cand_pos, top_d, top_p), INF, d)
-        md = jnp.concatenate([top_d, d], axis=1)
-        mp = jnp.concatenate([top_p, cand_pos], axis=1)
-        neg_d, sel = jax.lax.top_k(-md, k)
-        return -neg_d, jnp.take_along_axis(mp, sel, axis=1)
-
-    def cond(st):
-        r, top_d, *_ = st
-        head = jax.lax.dynamic_slice_in_dim(
-            lb_sel_p, r * rs, 1, axis=1)[:, 0]
-        return (r < n_rounds) & jnp.any(head < top_d[:, -1])
-
-    def body(st):
-        r, top_d, top_p, reads, updates = st
-        kth = top_d[:, -1]
-        lbs = jax.lax.dynamic_slice_in_dim(lb_sel_p, r * rs, rs, axis=1)
-        idx = jax.lax.dynamic_slice_in_dim(order_p, r * rs, rs, axis=1)
-        cand_pos = jnp.take(packed.gpos, idx, axis=0)  # (Q, rs), global
-        # Pad rows carry NO_POS; clipping the gather to row 0 is harmless
-        # because their +inf lower bound keeps them out of every mask.
-        raws = jnp.take(packed.raw, cand_pos, axis=0, mode="clip")
-        d = _euclid_rows(raws)
-        mask = lbs < kth[:, None]
-        d = jnp.where(mask, d, INF)
-        improved = jnp.min(d, axis=1) < kth
-        top_d, top_p = merge(top_d, top_p, cand_pos, d)
-        return (
-            r + 1,
-            top_d,
-            top_p,
-            reads + jnp.sum(mask, axis=1, dtype=jnp.int32),
-            updates + improved.astype(jnp.int32),
-        )
-
-    st0 = (jnp.int32(0), top_d0, top_p0, reads0,
-           jnp.zeros((n_q,), jnp.int32))
-    r, top_d, top_p, reads, updates = jax.lax.while_loop(cond, body, st0)
-
-    if select == "topk" and sel_len < n_pad:
-        # Same exactness-fallback protocol as the single-index engine: a
-        # query whose K-th selected bound still beats its BSF scans the
-        # remaining packed rows (pads stay +inf and are never needed).
-        kth_bound = lb_sel[:, -1]
-        all_rounds = -(-n_pad // rs)
-        pad_all = all_rounds * rs
-
-        def run_fallback(st):
-            idx_all = _pad_to(
-                jnp.arange(n_pad, dtype=jnp.int32), pad_all, 0)
-            lb_all = _pad_cols(lb, pad_all, INF)
-
-            def fcond(fst):
-                r2, top_d, *_ = fst
-                return (r2 < all_rounds) & jnp.any(kth_bound < top_d[:, -1])
-
-            def fbody(fst):
-                r2, top_d, top_p, reads, updates = fst
-                kth = top_d[:, -1]
-                need = kth_bound < kth
-                lbs = jax.lax.dynamic_slice_in_dim(
-                    lb_all, r2 * rs, rs, axis=1)
-                idx = jax.lax.dynamic_slice_in_dim(idx_all, r2 * rs, rs)
-                pos1 = jnp.take(packed.gpos, idx, axis=0)  # (rs,)
-                raws = jnp.take(packed.raw, pos1, axis=0, mode="clip")
-                d = _euclid_shared(raws)
-                mask = (
-                    (lbs < kth[:, None])
-                    & (lbs >= kth_bound[:, None])
-                    & need[:, None]
-                )
-                d = jnp.where(mask, d, INF)
-                improved = jnp.min(d, axis=1) < kth
-                cand_pos = jnp.broadcast_to(pos1[None, :], (n_q, rs))
-                top_d, top_p = merge(top_d, top_p, cand_pos, d)
-                return (
-                    r2 + 1,
-                    top_d,
-                    top_p,
-                    reads + jnp.sum(mask, axis=1, dtype=jnp.int32),
-                    updates + improved.astype(jnp.int32),
-                )
-
-            return jax.lax.while_loop(fcond, fbody, st)
-
-        st1 = (jnp.int32(0), top_d, top_p, reads, updates)
-        need0 = jnp.any(kth_bound < top_d[:, -1])
-        r2, top_d, top_p, reads, updates = jax.lax.cond(
-            need0, run_fallback, lambda st: st, st1
-        )
-        r = r + r2
-
-    return top_d, top_p, reads, updates, r
 
 
 def _packed_engine_for(packed: PackedComponents, statics: tuple):
@@ -703,13 +693,66 @@ def _packed_engine_for(packed: PackedComponents, statics: tuple):
 
     @jax.jit
     def fn(queries):
-        return _packed_engine_core(
-            packed, queries,
-            k=k, round_size=round_size, select=select, impl=impl,
+        view = _packed_view(
+            packed.sax, packed.gpos, packed.block_len, packed.raw,
+            block=packed.block, series_length=packed.series_length,
+            segments=packed.segments, cardinality=packed.cardinality,
+            num_series=packed.num_series,
+        )
+        return _engine_core(
+            view, queries,
+            k=k, round_size=round_size, sort=True, select=select,
+            impl=impl,
         )
 
     cache[statics] = fn
     return fn
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "series_length", "segments", "cardinality",
+                     "k", "round_size", "select", "impl"),
+)
+def packed_engine_args(
+    sax: jax.Array,
+    gpos: jax.Array,
+    block_len: jax.Array,
+    raw: jax.Array,
+    queries: jax.Array,
+    *,
+    block: int,
+    series_length: int,
+    segments: int,
+    cardinality: int,
+    k: int,
+    round_size: int,
+    select: str = "topk",
+    impl: str = "auto",
+) -> tuple:
+    """Shape-stable fused engine: packed buffers as jit ARGUMENTS.
+
+    The per-object engines (:func:`_packed_engine_for`, ``_engine_for``)
+    close over their arrays as baked XLA constants — fastest per call, but
+    every new snapshot's packed view costs a fresh trace + compile. This
+    entry point instead traces per (buffer shapes, statics): an
+    incrementally grown packed view whose capacity is stable across
+    snapshot swaps (``core.ingest.IncrementalPacker`` doubles capacity and
+    masks the dead tail blocks with ``block_len == 0``) reuses ONE
+    compiled engine across every swap, which is what kills the O(total)
+    post-swap rebuild+recompile spike. Callers clamp ``k`` themselves
+    (``num_series`` is dynamic here, so the core's host-side validation is
+    skipped).
+    """
+    view = _packed_view(
+        sax, gpos, block_len, raw,
+        block=block, series_length=series_length, segments=segments,
+        cardinality=cardinality, num_series=None,
+    )
+    return _engine_core(
+        view, queries,
+        k=k, round_size=round_size, sort=True, select=select, impl=impl,
+    )
 
 
 def exact_knn_batch_packed(
@@ -792,16 +835,15 @@ def _engine_for(index: ParISIndex, statics: tuple):
 
     @jax.jit
     def fn(queries):
-        return _batch_engine_core(
-            index,
+        view = _index_view(index, leaf_cap=leaf_cap, init=init)
+        return _engine_core(
+            view,
             queries,
             k=k,
             round_size=round_size,
-            leaf_cap=leaf_cap,
             sort=sort,
             select=select,
             impl=impl,
-            init=init,
         )
 
     cache[statics] = fn
@@ -944,7 +986,7 @@ def exact_knn_batch(
     O(N log K) per query instead of a full O(N log N) argsort) with an
     approx-seeded BSF: row 0 of the result list starts at the query's
     bucket-window best, rows 1..k-1 at INF. Exactness is kept by the
-    dedup-masked fallback protocol of :func:`_batch_engine_core`.
+    dedup-masked fallback protocol of :func:`_engine_core`.
 
     ``k`` is validated: ``k < 1`` raises; ``k > index.num_series`` is
     answered with the ``num_series`` real neighbors and the remaining slots

@@ -43,14 +43,33 @@ Live ingestion rides the same stack (serving/ingest.py)::
 Tier lifecycle: an appended batch is born a *delta* shard; once
 ``max_deltas``/``max_delta_series`` trip, a minor fold linear-merges the
 live deltas into one *run* shard (the base never participates — merge
-cost is bounded by the delta tier, not the store); once
-``max_runs``/``max_run_series`` trip, a major fold merges base + runs
-into a new *base* resharded S ways. ``tier="full"`` (shutdown, or
-``CompactionPolicy(leveled=False)``) is the old everything-at-once fold.
+cost is bounded by the delta tier, not the store); once the run tier
+reaches ``major_ratio`` of the base's size, a major fold merges base +
+runs into a new *base* resharded S ways — a size RATIO, so each major
+grows the base geometrically and only O(log N) majors ever run
+(amortized merge cost per ingested series stays bounded under sustained
+ingest). ``tier="full"`` (shutdown, or ``CompactionPolicy(
+leveled=False)``) is the old everything-at-once fold.
+
+One engine core under all of it: every search path above — per-shard
+batcher engines, the router fan-out, the mutable index's per-component
+and fused packed paths — funnels into the SAME RDC protocol,
+``core.search._engine_core``, parameterized by an ``EngineView`` hook
+bundle (lower bounds, position lookup, raw gather, optional BSF seed).
+A serving-layer feature that needs engine support (service tiers,
+seeding, new selection modes) is ONE change to the core or a new view —
+it lands in every path at once (see ``core/search.py``'s module
+docstring for the adapter diagram).
 
 Durability (core/durable.py, enabled by ``workdir=``): every component
 spills to an epoch dir and every acknowledged transition commits a
-versioned manifest BEFORE it publishes::
+versioned manifest BEFORE it publishes. Appends pipeline this: each
+reserves a commit ticket (offset + epoch dir) under a microsecond lock,
+spills with NO lock held — concurrent appenders overlap their disk I/O
+— and the contiguous spilled ticket prefix group-commits in one
+manifest, in offset order, so acknowledged durable throughput scales
+with the writer count (``spill_queue_depth`` / ``group_commits`` in
+``stats()``)::
 
     workdir/
       MANIFEST.json          {format, version, next_epoch, series_length,

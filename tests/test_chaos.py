@@ -308,7 +308,7 @@ def _ingesting(tmp=None, inj=None, **kw):
     kw.setdefault("compact_tick_ms", 10.0)
     return IngestingRouter(
         None, 2, series_length=LENGTH, workdir=tmp, fault_injector=inj,
-        compaction_policy=CompactionPolicy(max_deltas=2, max_runs=2), **kw)
+        compaction_policy=CompactionPolicy(max_deltas=2), **kw)
 
 
 def _ingest_oracle(raw, queries):

@@ -236,6 +236,92 @@ else:  # keep a visible skip when hypothesis is absent locally
         pass
 
 
+def test_spill_gap_is_never_acknowledged(workdir):
+    """Ticket-queue protocol point: a crash BETWEEN a later appender's
+    spill completion and its in-order commit must not acknowledge the gap.
+
+    Appender A reserves ticket 0 (dir e0) and its spill hangs; appender B
+    reserves ticket 1 (dir e1), spills COMPLETELY, and parks behind A in
+    the commit queue. Then A's spill crashes. B's shard is fully on disk
+    — but committing it would put an offset gap into the acknowledged
+    order, so B's append must fail too, the manifest must not move, and
+    recovery must sweep BOTH dirs as orphans.
+    """
+    import threading
+
+    a_started = threading.Event()
+    b_spilled = threading.Event()
+    boom = FaultError("injected crash in A's spill")
+
+    def hook(point):
+        if point.startswith("spill:e0:"):
+            a_started.set()
+            if point == "spill:e0:raw.npy":
+                assert b_spilled.wait(timeout=30)
+                raise boom
+        if point == "spill:e1:done":
+            b_spilled.set()
+
+    m = MutableIndex(series_length=LENGTH, workdir=workdir, fault=hook)
+    errors = {}
+
+    def appender(name, lo, hi):
+        try:
+            m.append(RAW[lo:hi])
+        except BaseException as e:
+            errors[name] = e
+
+    ta = threading.Thread(target=appender, args=("a", 0, 30))
+    ta.start()
+    assert a_started.wait(timeout=30)  # A holds ticket 0 / dir e0
+    tb = threading.Thread(target=appender, args=("b", 30, 50))
+    tb.start()
+    ta.join(timeout=60)
+    tb.join(timeout=60)
+    assert errors.get("a") is boom
+    assert isinstance(errors.get("b"), RuntimeError)
+    assert "aborted" in str(errors["b"])
+    # nothing acknowledged, nothing committed — B's complete e1 included
+    assert durable.read_manifest(workdir).num_series == 0
+    assert m.stats()["spill_queue_depth"] == 0
+    r = MutableIndex.recover(workdir)
+    assert r.num_series == 0
+    assert not [d for d in os.listdir(workdir) if d.startswith("e")]
+    # the recovered store resumes at the gap offset with no holes
+    r.append(RAW[:10])
+    assert MutableIndex.recover(workdir).num_series == 10
+    _assert_prefix_parity(r, 10, k=2)
+
+
+def test_group_commit_acknowledges_contiguous_prefix(workdir):
+    """Concurrent durable appends commit as ticket-ordered groups: all
+    acknowledged, offsets contiguous, answers bit-exact after recovery."""
+    import threading
+
+    m = MutableIndex(build_index(jnp.asarray(RAW[:100])), workdir=workdir)
+    sizes = (40, 30, 35, 25)
+    offs = np.cumsum((100,) + sizes)
+    threads = [
+        threading.Thread(target=m.append,
+                         args=(RAW[o - sz: o],))
+        for sz, o in zip(sizes, offs[1:])
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert m.num_series == int(offs[-1])
+    st = m.stats()
+    assert st["appends"] == len(sizes)
+    assert st["spill_queue_depth"] == 0
+    assert 1 <= st["group_commits"] <= len(sizes)
+    r = MutableIndex.recover(workdir)
+    bases = sorted(d.base for d in r.snapshot().deltas)
+    sums = np.cumsum([d.num_series for d in
+                      sorted(r.snapshot().deltas, key=lambda d: d.base)])
+    assert bases == [100] + [100 + int(s) for s in sums[:-1]]
+
+
 def test_router_refuses_workdir_with_mutable_base(workdir):
     from repro.serving.ingest import IngestingRouter
     m = MutableIndex(series_length=LENGTH, workdir=workdir)
@@ -244,15 +330,15 @@ def test_router_refuses_workdir_with_mutable_base(workdir):
 
 
 def test_maybe_compact_runs_leveled_plan_durably(workdir):
-    pol = CompactionPolicy(max_deltas=2, max_runs=2)
-    m = MutableIndex(series_length=LENGTH, workdir=workdir)
-    o = 0
+    pol = CompactionPolicy(max_deltas=2, major_ratio=0.5)
+    m = MutableIndex(build_index(jnp.asarray(RAW[:120])), workdir=workdir)
+    o = 120
     for sz in (20, 20, 20, 20):
         m.append(RAW[o: o + sz])
         o += sz
         m.maybe_compact(pol)
     assert m.num_runs == 2 and m.num_deltas == 0  # two minor folds so far
-    res = m.maybe_compact(pol)  # 2 runs: the next tick trips the major
+    res = m.maybe_compact(pol)  # 80 run series >= half the 120 base
     assert res is not None and res.tier == "major"
     assert m.num_runs == 0 and m.num_deltas == 0
     assert m.snapshot().base.num_series == o

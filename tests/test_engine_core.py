@@ -1,0 +1,138 @@
+"""Golden parity for the unified RDC engine core.
+
+``tests/golden_engine_core.npz`` holds the outputs of the PRE-refactor
+engines (the deliberately duplicated ``_batch_engine_core`` /
+``_packed_engine_core`` pair) on an adversarial fixture: random-walk
+series with duplicated rows (exact distance ties), one query that IS a
+datastore row (zero-distance tie), a small round size (several RDC
+rounds + fallback activity), k in {1, 4, 8}, ref and pallas kernels.
+The refactored single ``_engine_core`` must reproduce every array
+bit-for-bit on both the single-index and packed paths — the refactor's
+acceptance gate.
+
+Also covers the args-engine (``packed_engine_args``) and the incremental
+packed view: capacity-padded buffers with dead tail blocks must answer
+identically to the tight per-object pack.
+"""
+
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_index
+from repro.core.index import build_sharded_index
+from repro.core.search import (
+    exact_knn_batch, exact_knn_batch_packed, pack_components,
+    packed_engine_args,
+)
+
+GOLDEN = pathlib.Path(__file__).parent / "golden_engine_core.npz"
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return np.load(GOLDEN)
+
+
+@pytest.fixture(scope="module")
+def fixture(golden):
+    raw = golden["raw"]
+    queries = jnp.asarray(golden["queries"])
+    index = build_index(jnp.asarray(raw))
+    sharded = build_sharded_index(index, 3)
+    packed = pack_components(
+        list(zip(sharded.shards, sharded.offsets)), block=128)
+    return index, packed, queries, int(golden["round"])
+
+
+@pytest.mark.parametrize("k", [1, 4, 8])
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_single_index_bit_exact_vs_golden(golden, fixture, k, impl):
+    index, _, queries, rnd = fixture
+    d, p = exact_knn_batch(index, queries, k=k, round_size=rnd, impl=impl)
+    np.testing.assert_array_equal(
+        np.asarray(d), golden[f"single_{impl}_k{k}_d"])
+    np.testing.assert_array_equal(
+        np.asarray(p), golden[f"single_{impl}_k{k}_p"])
+
+
+@pytest.mark.parametrize("k", [1, 4, 8])
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_packed_bit_exact_vs_golden(golden, fixture, k, impl):
+    _, packed, queries, rnd = fixture
+    d, p = exact_knn_batch_packed(
+        packed, queries, k=k, round_size=rnd, impl=impl)
+    np.testing.assert_array_equal(
+        np.asarray(d), golden[f"packed_{impl}_k{k}_d"])
+    np.testing.assert_array_equal(
+        np.asarray(p), golden[f"packed_{impl}_k{k}_p"])
+
+
+@pytest.mark.parametrize("k", [1, 4, 8])
+def test_full_sort_select_bit_exact_vs_golden(golden, fixture, k):
+    index, _, queries, rnd = fixture
+    d, p = exact_knn_batch(
+        index, queries, k=k, round_size=rnd, select="sort")
+    np.testing.assert_array_equal(
+        np.asarray(d), golden[f"single_sort_k{k}_d"])
+    np.testing.assert_array_equal(
+        np.asarray(p), golden[f"single_sort_k{k}_p"])
+
+
+def test_serial_scan_bit_exact_vs_golden(golden, fixture):
+    index, _, queries, rnd = fixture
+    d, p = exact_knn_batch(
+        index, queries, k=1, round_size=rnd, sort=False)
+    np.testing.assert_array_equal(
+        np.asarray(d), golden["single_noscan_k1_d"])
+    np.testing.assert_array_equal(
+        np.asarray(p), golden["single_noscan_k1_p"])
+
+
+@pytest.mark.parametrize("k", [1, 4, 8])
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_args_engine_matches_object_engine(golden, fixture, k, impl):
+    """packed_engine_args (buffers as jit args) == the per-object engine."""
+    _, packed, queries, rnd = fixture
+    d, p, *_ = packed_engine_args(
+        packed.sax, packed.gpos, packed.block_len, packed.raw, queries,
+        block=packed.block, series_length=packed.series_length,
+        segments=packed.segments, cardinality=packed.cardinality,
+        k=k, round_size=rnd, impl=impl)
+    np.testing.assert_array_equal(
+        np.asarray(d), golden[f"packed_{impl}_k{k}_d"])
+    np.testing.assert_array_equal(
+        np.asarray(p), golden[f"packed_{impl}_k{k}_p"])
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_capacity_padded_buffers_answer_identically(fixture, impl):
+    """Dead tail blocks (block_len == 0, gpos NO_POS) change no answer.
+
+    This is the invariant the incremental packer leans on: growing the
+    packed buffers to a larger capacity and masking the unused blocks
+    must be invisible to the protocol — pad rows carry +inf lower bounds,
+    so no selection, round mask, or fallback can ever admit one.
+    """
+    _, packed, queries, rnd = fixture
+    extra = 2  # dead blocks appended past the real rows
+    b = packed.block
+    sax = jnp.concatenate(
+        [packed.sax,
+         jnp.zeros((extra * b, packed.sax.shape[1]), packed.sax.dtype)])
+    gpos = jnp.concatenate(
+        [packed.gpos, jnp.full((extra * b,), -1, jnp.int32)])
+    block_len = jnp.concatenate(
+        [packed.block_len, jnp.zeros((extra,), jnp.int32)])
+    for k in (1, 4):
+        want_d, want_p = exact_knn_batch_packed(
+            packed, queries, k=k, round_size=rnd, impl=impl)
+        d, p, *_ = packed_engine_args(
+            sax, gpos, block_len, packed.raw, queries,
+            block=b, series_length=packed.series_length,
+            segments=packed.segments, cardinality=packed.cardinality,
+            k=k, round_size=rnd, impl=impl)
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(want_d))
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(want_p))

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.core import (
     MutableIndex, SearchConfig, build_index, exact_knn_batch,
-    exact_search_batch,
+    exact_search_batch, pack_components,
 )
 from repro.core.build_pipeline import _host_refine_key
 from repro.core.index import validate_index
@@ -293,28 +293,65 @@ def test_full_fold_after_minor_takes_runs_and_deltas(raw, queries,
 
 
 def test_policy_plans_tiers(raw):
-    pol = CompactionPolicy(max_deltas=2, max_runs=2)
-    m = MutableIndex(series_length=LENGTH)
+    pol = CompactionPolicy(max_deltas=2, major_ratio=0.5)
+    m = MutableIndex(build_index(jnp.asarray(raw[:60])))
     assert pol.plan(m.snapshot()) is None
-    m.append(raw[:10])
+    m.append(raw[60:70])
     assert pol.plan(m.snapshot()) is None
-    m.append(raw[10:20])
+    m.append(raw[70:80])
     assert pol.plan(m.snapshot()) == "minor"
     m.maybe_compact(pol)
-    assert m.num_runs == 1 and pol.plan(m.snapshot()) is None
-    m.append(raw[20:30])
-    m.append(raw[30:40])
+    assert m.num_runs == 1 and pol.plan(m.snapshot()) is None  # 20 < 30
+    m.append(raw[80:90])
+    m.append(raw[90:100])
     m.maybe_compact(pol)
     assert m.num_runs == 2
+    # the run tier (40) reached major_ratio (0.5) of the base (60)
     assert pol.plan(m.snapshot()) == "major"
     res = m.maybe_compact(pol)
     assert res.tier == "major" and m.num_runs == 0
-    # series-count triggers and the unleveled fallback
+    # a run tier over an EMPTY base is always major-due
+    e = MutableIndex(series_length=LENGTH)
+    e.append(raw[:10])
+    e.compact(tier="minor")
+    assert pol.plan(e.snapshot()) == "major"
+    # series-count minor trigger and the unleveled fallback
     sized = CompactionPolicy(max_deltas=100, max_delta_series=10)
-    m.append(raw[40:52])
+    m.append(raw[100:112])
     assert sized.plan(m.snapshot()) == "minor"
     flat = CompactionPolicy(max_deltas=1, leveled=False)
     assert flat.plan(m.snapshot()) == "full"
+    with pytest.raises(ValueError, match="major_ratio"):
+        CompactionPolicy(major_ratio=0.0)
+
+
+def test_size_ratio_policy_amortizes_major_folds(raw):
+    """Sustained ingest never sees fixed-cadence O(total) folds.
+
+    With the size-ratio trigger every minor folds only the delta tier
+    (<= max_deltas batches) and every major grows the base by at least
+    (1 + major_ratio)x, so over a whole ingest run the number of majors
+    is logarithmic in the final size — the amortized merge work per
+    ingested series stays bounded. A count-based major trigger fails
+    this: it fires at a fixed cadence no matter how big the base is.
+    """
+    pol = CompactionPolicy(max_deltas=2, major_ratio=0.5)
+    m = MutableIndex(build_index(jnp.asarray(raw[:40])))
+    batch, n, majors = 10, 40, 0
+    while n + batch <= len(raw):
+        m.append(raw[n: n + batch])
+        n += batch
+        res = m.maybe_compact(pol)
+        if res is None:
+            continue
+        folded = sum(x.num_series for x in res.retired)
+        if res.tier == "minor":
+            assert folded <= pol.max_deltas * batch  # delta tier only
+        else:
+            majors += 1
+    assert m.num_series == n
+    bound = np.log(n / 40) / np.log(1 + pol.major_ratio) + 1
+    assert majors <= bound, (majors, bound)
 
 
 def test_mid_minor_compaction_append_survives(raw, queries, ref_indices):
@@ -400,6 +437,54 @@ def test_fused_k_exceeds_live_series(raw, queries):
     d, p = m.exact_knn_batch(queries, k=8, round_size=ROUND, fused=True)
     assert np.all(p[:, 5:] == -1) and np.all(np.isinf(d[:, 5:]))
     assert np.all(p[:, :5] >= 0)
+
+
+def _assert_incremental_pack_parity(m):
+    """The incremental packed view, trimmed, == a from-scratch pack."""
+    snap = m.snapshot()
+    inc = m._packed_view(snap)
+    want = pack_components(snap.components(), block=m.pack_block)
+    bl = np.asarray(inc.block_len)
+    used_blocks = int(np.count_nonzero(bl))  # dead blocks only at the tail
+    assert np.all(bl[used_blocks:] == 0)
+    rows = used_blocks * inc.block
+    assert inc.num_series == want.num_series
+    np.testing.assert_array_equal(bl[:used_blocks],
+                                  np.asarray(want.block_len))
+    np.testing.assert_array_equal(np.asarray(inc.sax)[:rows],
+                                  np.asarray(want.sax))
+    np.testing.assert_array_equal(np.asarray(inc.gpos)[:rows],
+                                  np.asarray(want.gpos))
+    np.testing.assert_array_equal(
+        np.asarray(inc.raw)[: inc.num_series], np.asarray(want.raw))
+
+
+def test_incremental_pack_matches_scratch_after_random_sequences(raw,
+                                                                 queries):
+    """Randomized append/compact sequences: trimmed buffers byte-equal.
+
+    The incremental packer's acceptance gate — after EVERY swap (appends,
+    minor folds, major folds, the unleveled full fold) the capacity-padded
+    buffers, trimmed of dead tail blocks, must equal a from-scratch
+    ``pack_components`` over the same snapshot byte-for-byte, and the
+    fused engine over them must stay bit-exact vs the oracle.
+    """
+    rng = np.random.default_rng(20260810)
+    m = MutableIndex(build_index(jnp.asarray(raw[:60])), pack_block=32)
+    n = 60
+    _assert_incremental_pack_parity(m)
+    for step in range(14):
+        op = rng.choice(["append", "append", "append", "minor", "major",
+                         "full"])
+        if op == "append" and n < len(raw):
+            size = int(rng.integers(1, 40))
+            size = min(size, len(raw) - n)
+            m.append(raw[n: n + size])
+            n += size
+        else:
+            m.compact(tier=op if op != "append" else "full")
+        _assert_incremental_pack_parity(m)
+    _assert_knn_parity(m, build_index(jnp.asarray(raw[:n])), queries, 4)
 
 
 # --------------------------------------------------------- router serving
