@@ -36,7 +36,7 @@ def main() -> None:
     from benchmarks import (bench_batch_query, bench_build, bench_classifier,
                             bench_ingest, bench_knn_topk, bench_lower_bound,
                             bench_pruning, bench_query, bench_router_faults,
-                            bench_search_batcher, roofline_table)
+                            bench_search_batcher, bench_tiers, roofline_table)
     from benchmarks.common import emit
 
     # Each registry entry returns (rows, parity): parity is the bench's own
@@ -50,6 +50,13 @@ def main() -> None:
 
     def _knn_topk(quick):
         rows, report = bench_knn_topk.run(tiny=quick)
+        return rows, all(e["parity"] for e in report["results"])
+
+    def _tiers(quick):
+        # parity here is the tier GUARANTEE (epsilon bound holds, budget
+        # certificate honest, exact tier bit-identical) — see the module
+        # docstring.
+        rows, report = bench_tiers.run(tiny=quick)
         return rows, all(e["parity"] for e in report["results"])
 
     def _ingest(quick):
@@ -67,6 +74,7 @@ def main() -> None:
         "query": lambda quick: (bench_query.run(quick=quick), None),
         "batch_query": _batch_query,
         "knn_topk": _knn_topk,
+        "tiers": _tiers,
         "search_batcher": lambda quick: bench_search_batcher.run(tiny=quick),
         "router_faults": lambda quick: bench_router_faults.run(tiny=quick),
         "ingest": _ingest,

@@ -51,6 +51,7 @@ from repro.kernels import ops
 
 @dataclasses.dataclass
 class BuildStats:
+    """Per-stage wall-clock timings for one pipelined index build."""
     read_time: float = 0.0  # Stage 1: "disk" -> buffer
     convert_time: float = 0.0  # Stage 2: ConvertToSAX (+ ParIS+ presort)
     construct_time: float = 0.0  # Stage 3: sort/merge into leaf order
@@ -62,6 +63,7 @@ class BuildStats:
 
     @property
     def cpu_time(self) -> float:
+        """Total CPU-stage time (convert + construct)."""
         return self.convert_time + self.construct_time
 
     @property

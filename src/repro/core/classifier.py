@@ -17,6 +17,7 @@ from repro.core import search as search_mod
 
 
 class KnnClassifier:
+    """Majority-vote k-NN classifier over one index (labels in file order)."""
     def __init__(self, index: ParISIndex, labels, k: int = 1,
                  round_size: int = 4096, impl: str = "auto"):
         self.index = index
@@ -26,6 +27,7 @@ class KnnClassifier:
         self.impl = impl
 
     def predict(self, query: jax.Array) -> int:
+        """Label for one (n,) query: majority vote among its k nearest series."""
         dists, positions = search_mod.exact_knn(
             self.index, query, k=self.k, round_size=self.round_size,
             impl=self.impl)

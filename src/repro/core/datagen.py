@@ -52,11 +52,13 @@ class SeriesSource:
 
     @classmethod
     def from_array(cls, arr, chunk_series: int = 8192) -> "SeriesSource":
+        """Wrap an in-memory (N, n) array as a chunked source."""
         return cls(np.asarray(arr, np.float32), chunk_series)
 
     @classmethod
     def from_file(cls, path: str, length: int = 256,
                   chunk_series: int = 8192) -> "SeriesSource":
+        """Memory-map a packed float32 series file as a chunked source."""
         n_bytes = os.path.getsize(path)
         num = n_bytes // (4 * length)
         mm = np.memmap(path, np.float32, "r", shape=(num, length))
@@ -64,17 +66,21 @@ class SeriesSource:
 
     @property
     def num_series(self) -> int:
+        """Number of series in the source."""
         return self.data.shape[0]
 
     @property
     def length(self) -> int:
+        """Per-series length n."""
         return self.data.shape[1]
 
     @property
     def num_chunks(self) -> int:
+        """Number of read chunks (ceil of num_series / chunk_series)."""
         return -(-self.num_series // self.chunk_series)
 
     def read(self, i: int):
+        """Read chunk ``i``; returns (chunk array, starting file offset)."""
         s = i * self.chunk_series
         e = min(s + self.chunk_series, self.num_series)
         # np.array(...) forces the actual "disk read" (memmap page-in + copy).

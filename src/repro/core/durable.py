@@ -104,10 +104,12 @@ class ComponentRef:
     num_series: int
 
     def to_json(self) -> dict:
+        """Manifest-entry dict form."""
         return dict(dir=self.dir, base=self.base, num_series=self.num_series)
 
     @classmethod
     def from_json(cls, d: dict) -> "ComponentRef":
+        """Inverse of :meth:`to_json`."""
         return cls(dir=d["dir"], base=int(d["base"]),
                    num_series=int(d["num_series"]))
 
@@ -135,6 +137,7 @@ class Manifest:
 
     @property
     def num_series(self) -> int:
+        """Total series across base + runs + deltas."""
         n = self.base.num_series if self.base else 0
         return n + sum(r.num_series for r in self.runs) + sum(
             d.num_series for d in self.deltas)

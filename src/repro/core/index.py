@@ -37,6 +37,7 @@ from repro.kernels import ops
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class ParISIndex:
+    """Immutable iSAX index: sorted SAX words + root bucket table + raw data."""
     sax: jax.Array  # (N, w) uint8, index (sorted) order
     pos: jax.Array  # (N,) int32, index order -> file order
     bucket_offsets: jax.Array  # (2**root_bits + 1,) int32
@@ -47,10 +48,12 @@ class ParISIndex:
 
     @property
     def num_series(self) -> int:
+        """Number of indexed series."""
         return self.sax.shape[0]
 
     @property
     def num_buckets(self) -> int:
+        """Number of root buckets."""
         return self.bucket_offsets.shape[0] - 1
 
     def bucket(self, key) -> tuple:
@@ -182,10 +185,12 @@ class ShardedIndex:
 
     @property
     def num_shards(self) -> int:
+        """Number of shards."""
         return len(self.shards)
 
     @property
     def num_series(self) -> int:
+        """Total series across all shards."""
         return self.offsets[-1]
 
 

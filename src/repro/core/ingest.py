@@ -94,9 +94,11 @@ from repro.core.build_pipeline import (
 )
 from repro.core.index import ParISIndex, assemble_index, empty_index
 from repro.core.search import (
-    NO_POS, PackedComponents, SearchConfig, SearchResult, exact_knn_batch,
-    exact_search_batch, merge_top_lists, pack_components,
-    pack_one_component, packed_engine_args,
+    NO_POS, PackedComponents, SearchConfig, SearchResult, Tier,
+    achieved_epsilon,
+    as_tier, exact_knn_batch, exact_search_batch, knn_batch_tiered,
+    merge_top_lists, pack_components, pack_one_component,
+    packed_engine_args, packed_seed, tier_arrays,
 )
 
 _NO_POS = int(NO_POS)
@@ -122,6 +124,7 @@ class DeltaShard:
 
     @property
     def num_series(self) -> int:
+        """Series in this delta shard."""
         return self.index.num_series
 
 
@@ -147,11 +150,13 @@ class Snapshot:
 
     @property
     def num_series(self) -> int:
+        """Total series visible in this snapshot."""
         return (self.base.num_series
                 + sum(r.num_series for r in self.runs)
                 + sum(d.num_series for d in self.deltas))
 
     def components(self) -> list:
+        """(index, file offset) pairs in ascending offset order."""
         out = []
         if self.base.num_series:
             out.append((self.base, 0))
@@ -214,6 +219,7 @@ class CompactionPolicy:
         return None
 
     def should_compact(self, snapshot: Snapshot) -> bool:
+        """Whether :meth:`plan` picks any fold for this snapshot."""
         return self.plan(snapshot) is not None
 
 
@@ -578,6 +584,7 @@ class MutableIndex:
     # ---------------------------------------------------------- durability
     @property
     def durable(self) -> bool:
+        """Whether spills/commits are enabled (a workdir was given)."""
         return self.workdir is not None
 
     def _alloc_epoch(self) -> str:
@@ -689,14 +696,17 @@ class MutableIndex:
 
     @property
     def num_series(self) -> int:
+        """Series in the current snapshot."""
         return self._snapshot.num_series
 
     @property
     def num_deltas(self) -> int:
+        """Live delta shards in the current snapshot."""
         return len(self._snapshot.deltas)
 
     @property
     def num_runs(self) -> int:
+        """Run-tier components in the current snapshot."""
         return len(self._snapshot.runs)
 
     # ------------------------------------------------------------- writers
@@ -1035,19 +1045,23 @@ class MutableIndex:
         return packed
 
     def _fused_engine_call(self, packed, qs, *, k: int, round_size: int,
-                           select: str, impl: str) -> tuple:
+                           select: str, impl: str, **tier_kw) -> tuple:
         """One fused RDC pass through the shape-stable args-engine.
 
         ``packed_engine_args`` takes the capacity-padded buffers as jit
         arguments, so successive snapshots reuse one compiled engine —
         the per-object ``exact_knn_batch_packed`` closure would recompile
         on every swap. ``k`` arrives pre-clamped to ``packed.num_series``.
+        Tiered callers add ``eps_factor_sq``/``budget_rounds`` and the
+        ``seed_d``/``seed_p`` BSF seed (all traced, same compiled engine
+        across every tier mix).
         """
         return packed_engine_args(
             packed.sax, packed.gpos, packed.block_len, packed.raw, qs,
             block=packed.block, series_length=packed.series_length,
             segments=packed.segments, cardinality=packed.cardinality,
-            k=k, round_size=round_size, select=select, impl=impl)
+            k=k, round_size=round_size, select=select, impl=impl,
+            **tier_kw)
 
     @staticmethod
     def _use_fused(fused, comps: list, sort: bool) -> bool:
@@ -1117,6 +1131,74 @@ class MutableIndex:
             ps.append(np.where(p >= 0, p + off, _NO_POS).astype(p.dtype))
         return merge_top_lists(ds, ps, k)
 
+    def knn_batch_tiered(
+        self, queries, tier, k: int = 1, fused="auto",
+        round_size: int = 4096, select: str = "topk", impl: str = "auto",
+    ) -> tuple:
+        """Tiered k-NN over the live view (see :class:`~.search.Tier`).
+
+        (Q, n) -> ((Q, k) d, (Q, k) pos, (Q,) achieved epsilon). The
+        fused path seeds the packed engine's BSF from the largest live
+        component's bucket table (:func:`~repro.core.search.packed_seed`)
+        so the epsilon early stop and the budget tier's achieved bounds
+        work from round one — the exact fused path stays unseeded and
+        bit-exact. The per-component path answers each component at the
+        request tier and merges; the combined achieved bound is the
+        per-query MAX over components, which is sound because the global
+        k-th best distance is <= every component's k-th best, so each
+        component's certificate holds a fortiori for the merged list.
+        """
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        qs = jnp.asarray(queries, jnp.float32)
+        nq = qs.shape[0]
+        if isinstance(tier, (Tier, str)) or tier is None:
+            tiers = [as_tier(tier)] * nq
+        else:
+            tiers = [as_tier(t) for t in tier]
+            if len(tiers) != nq:
+                raise ValueError(f"got {len(tiers)} tiers for {nq} queries")
+        snap = self._snapshot
+        comps = snap.components()
+        if not comps:  # empty store: nothing missed, certified exact
+            return (np.full((nq, k), np.float32(np.inf)),
+                    np.full((nq, k), _NO_POS, np.int32),
+                    np.zeros((nq,), np.float64))
+        if all(t.kind == "exact" for t in tiers):
+            d, p = self.exact_knn_batch(
+                qs, k=k, fused=fused, round_size=round_size,
+                select=select, impl=impl)
+            return np.asarray(d), np.asarray(p), np.zeros((nq,), np.float64)
+        if self._use_fused(fused, comps, True):
+            packed = self._packed_view(snap)
+            k_eff = min(k, packed.num_series)
+            eps_f, budget = tier_arrays(tiers)
+            seed_d, seed_p = packed_seed(comps, qs)
+            top_d, top_p, reads, updates, rounds, ach_sq = (
+                self._fused_engine_call(
+                    packed, qs, k=k_eff, round_size=round_size,
+                    select=select, impl=impl, eps_factor_sq=eps_f,
+                    budget_rounds=budget, seed_d=seed_d, seed_p=seed_p))
+            if k_eff < k:
+                top_d = jnp.concatenate(
+                    [top_d, jnp.full((nq, k - k_eff), jnp.inf)], axis=1)
+                top_p = jnp.concatenate(
+                    [top_p, jnp.full((nq, k - k_eff), NO_POS)], axis=1)
+            return (np.asarray(top_d), np.asarray(top_p),
+                    achieved_epsilon(ach_sq))
+        ds, ps = [], []
+        ach = np.zeros((nq,), np.float64)
+        for index, off in comps:
+            d, p, a = knn_batch_tiered(
+                index, qs, tiers, k=k, round_size=round_size,
+                select=select, impl=impl)
+            p = np.asarray(p)
+            ds.append(np.asarray(d))
+            ps.append(np.where(p >= 0, p + off, _NO_POS).astype(p.dtype))
+            ach = np.maximum(ach, np.asarray(a))
+        d, p = merge_top_lists(ds, ps, k)
+        return d, p, ach
+
     def exact_search_batch(
         self, queries, cfg: SearchConfig = SearchConfig(), fused="auto"
     ) -> SearchResult:
@@ -1162,6 +1244,7 @@ class MutableIndex:
 
     # -------------------------------------------------------------- stats
     def stats(self) -> dict:
+        """Counter snapshot: appends, compactions, spills, component counts."""
         with self._mutate:
             s = dict(self._stats)
         snap = self._snapshot
@@ -1179,12 +1262,14 @@ class MutableIndex:
 
 @dataclasses.dataclass
 class IngestStats:
+    """Aggregate append-side throughput counters."""
     batches: int = 0
     series: int = 0
     total_time: float = 0.0
 
     @property
     def series_per_sec(self) -> float:
+        """Appended series per second of total append time."""
         return self.series / max(self.total_time, 1e-9)
 
 

@@ -77,9 +77,34 @@ The single-index adapters close over the index arrays as jit constants
 (fastest per call); :func:`packed_engine_args` instead takes the packed
 buffers as ARGUMENTS, so an incrementally grown view with stable
 capacity (``core.ingest.IncrementalPacker``) reuses one compiled engine
-across snapshot swaps. Adding an engine feature (epsilon tiers, new
-selection modes, BSF seeding strategies) is a change to ``_engine_core``
-or a new hook — never two parallel edits.
+across snapshot swaps. Adding an engine feature (new selection modes,
+BSF seeding strategies) is a change to ``_engine_core`` or a new hook —
+never two parallel edits.
+
+Service tiers (beyond-paper; the ng-approximate line of "Fast Data
+Series Indexing for In-Memory Data"): the SAME engine core answers three
+per-request quality tiers, selected by a :class:`Tier` value —
+
+  ``exact``      today's behavior: the loop runs until every query's
+                 smallest unprocessed lower bound meets its BSF.
+  ``epsilon``    stop a query's rounds once BSF <= (1+eps) * its
+                 min-remaining-lower-bound: the answer is provably
+                 within (1+eps) of the exact distance (squared-space
+                 factor (1+eps)^2; see :func:`tier_arrays`). Candidates
+                 whose scaled bound already exceeds the BSF are pruned
+                 inside rounds too, which is where the raw-read savings
+                 come from.
+  ``budget``     best answer after a fixed number of candidate rounds,
+                 with the ACHIEVED error bound reported alongside the
+                 answer (the engine tracks the smallest lower bound it
+                 never distance-checked; ``bsf / that bound`` is an
+                 honest upper bound on the answer's error factor).
+
+Tier parameters enter the jitted engines as per-query-row ARRAYS
+(``eps_factor_sq``, ``budget_rounds``), not as jit statics: one
+compiled tiered engine serves every epsilon value and every budget in a
+mixed batch — the jit cache splits only exact vs tiered (see
+``_engine_for``), so mixed-SLA serving batches never recompile.
 """
 
 from __future__ import annotations
@@ -101,6 +126,7 @@ INF = jnp.float32(jnp.inf)
 
 @dataclasses.dataclass(frozen=True)
 class SearchConfig:
+    """Tuning knobs for the exact-search paths (see field comments)."""
     round_size: int = 4096  # candidates distance-checked per BSF round
     leaf_cap: int = 256  # approximate-search window ("leaf" size)
     sort: bool = True  # sort candidate list by lower bound (ParIS+)
@@ -109,9 +135,126 @@ class SearchConfig:
     select: str = "topk"  # candidate ordering: "topk" partial / "sort" full
 
 
+_BUDGET_UNLIMITED = np.int32(np.iinfo(np.int32).max)  # "no round budget"
+
+
+@dataclasses.dataclass(frozen=True)
+class Tier:
+    """A per-request service tier: how exact must this answer be?
+
+    Three kinds (see the module docstring for the algorithmic contract):
+
+      ``Tier.exact()``        the default; today's exact answer.
+      ``Tier.epsilon(eps)``   answer provably within ``(1+eps)`` of the
+                              exact distance (``eps >= 0``; ``eps == 0``
+                              is exact, just without the bit-exactness
+                              promise of the exact path).
+      ``Tier.budget(rounds)`` best answer after at most ``rounds``
+                              candidate rounds (``rounds >= 1``), with
+                              the achieved error bound reported.
+
+    Parameters are validated HERE, at construction — the API edge — so a
+    negative epsilon or a zero budget is a ``ValueError`` with a clear
+    message instead of a silently exact (or silently empty) answer deep
+    inside a jitted loop.
+    """
+
+    kind: str = "exact"  # "exact" | "epsilon" | "budget"
+    eps: float = 0.0  # epsilon tier: relative error bound, >= 0
+    budget_rounds: int = 0  # budget tier: max candidate rounds, >= 1
+
+    def __post_init__(self):
+        if self.kind not in ("exact", "epsilon", "budget"):
+            raise ValueError(
+                f"unknown tier kind {self.kind!r}: expected 'exact', "
+                "'epsilon' or 'budget'")
+        if self.kind == "epsilon":
+            eps = float(self.eps)
+            if not eps >= 0.0:  # rejects NaN too
+                raise ValueError(
+                    f"epsilon tier needs eps >= 0, got {self.eps!r} "
+                    "(eps is the relative error bound: the answer is "
+                    "guaranteed within (1+eps) of the exact distance)")
+        if self.kind == "budget":
+            if int(self.budget_rounds) < 1:
+                raise ValueError(
+                    f"budget tier needs budget_rounds >= 1, got "
+                    f"{self.budget_rounds!r} (the engine must run at "
+                    "least one candidate round to produce an answer)")
+
+    @staticmethod
+    def exact() -> "Tier":
+        """The exact tier (today's default behavior)."""
+        return Tier("exact")
+
+    @staticmethod
+    def epsilon(eps: float) -> "Tier":
+        """An epsilon tier: answers within ``(1+eps)`` of exact."""
+        return Tier("epsilon", eps=float(eps))
+
+    @staticmethod
+    def budget(rounds: int) -> "Tier":
+        """A budget tier: best answer after ``rounds`` candidate rounds."""
+        return Tier("budget", budget_rounds=int(rounds))
+
+
+def as_tier(tier) -> Tier:
+    """Normalize a user-facing tier argument to a :class:`Tier`.
+
+    Accepts ``None`` (exact), the string ``"exact"``, or a :class:`Tier`.
+    Epsilon/budget tiers carry parameters, so their string forms are not
+    accepted — construct them via :meth:`Tier.epsilon` /
+    :meth:`Tier.budget`.
+    """
+    if tier is None:
+        return Tier.exact()
+    if isinstance(tier, Tier):
+        return tier
+    if tier == "exact":
+        return Tier.exact()
+    raise ValueError(
+        f"tier must be None, 'exact' or a Tier instance, got {tier!r}")
+
+
+def tier_arrays(tiers) -> tuple:
+    """Per-row engine parameters for a sequence of :class:`Tier` values.
+
+    Returns ``((Q,) float32 eps_factor_sq, (Q,) int32 budget_rounds)``.
+    The engine works in SQUARED distances, so the (1+eps) true-distance
+    guarantee becomes the factor ``(1+eps)**2`` here; exact and budget
+    rows carry factor 1.0. Budget rows carry their round budget; exact
+    and epsilon rows are unlimited (INT32_MAX — no real candidate list
+    has that many rounds).
+    """
+    fac = np.ones((len(tiers),), np.float32)
+    bud = np.full((len(tiers),), _BUDGET_UNLIMITED, np.int32)
+    for i, t in enumerate(tiers):
+        if t.kind == "epsilon":
+            fac[i] = (1.0 + t.eps) ** 2
+        elif t.kind == "budget":
+            bud[i] = t.budget_rounds
+    return jnp.asarray(fac), jnp.asarray(bud)
+
+
+def achieved_epsilon(achieved_factor_sq) -> np.ndarray:
+    """Squared-space achieved factor -> achieved epsilon, host side.
+
+    The tiered engine reports, per query, ``bsf_sq / denom_sq`` where
+    ``denom_sq`` is the smallest lower bound it never distance-checked
+    (1.0 when nothing qualifying was skipped): the answer's true distance
+    is within ``sqrt(factor)`` of exact. This converts to the additive
+    epsilon form users reason in: ``achieved_eps = sqrt(factor) - 1``,
+    clamped at 0 (an exact answer achieves epsilon 0). ``inf`` means a
+    budget so tight the engine can certify nothing.
+    """
+    f = np.asarray(achieved_factor_sq, np.float64)
+    return np.maximum(np.sqrt(np.maximum(f, 1.0)) - 1.0, 0.0)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class SearchResult:
+    """One exact 1-NN answer plus the paper's per-query instrumentation."""
     dist_sq: jax.Array  # squared distance of the 1-NN
     position: jax.Array  # file-order offset of the 1-NN
     raw_reads: jax.Array  # series whose raw data was fetched (Fig. 20b)
@@ -331,6 +474,9 @@ def _engine_core(
     sort: bool,
     select: str,
     impl: str,
+    eps_factor_sq: Optional[jax.Array] = None,
+    budget_rounds: Optional[jax.Array] = None,
+    seed0: Optional[tuple] = None,
 ) -> tuple:
     """THE batched RDC loop — the single engine core behind every search.
 
@@ -355,16 +501,47 @@ def _engine_core(
     ``sort=False`` (the ADS+-style serial scan, row order, no early exit)
     requires a per-query-shared row order and is only offered by the
     single-index adapters.
+
+    Service tiers: passing BOTH ``eps_factor_sq`` ((Q,) float32,
+    :func:`tier_arrays`) and ``budget_rounds`` ((Q,) int32) switches the
+    core to its TIERED variant, which appends a sixth output — the
+    per-query achieved squared error factor. Every loop predicate and
+    round mask compares ``lower_bound * eps_factor_sq`` against the BSF
+    (factor 1.0 == exact semantics), rounds past a row's budget go
+    inactive, and the core tracks the smallest lower bound each query
+    skipped ONLY because of its tier, so the reported factor
+    ``bsf / min_skipped_bound`` is a sound upper bound on the answer's
+    squared error. Without tier arrays the returned 5-tuple — and the
+    traced computation — are exactly the historical exact path, keeping
+    it bit-identical (golden-tested). Tiers require ``sort=True`` (the
+    frontier predicate is what an unsorted scan lacks).
     """
     if view.num_series is not None and not 1 <= k <= view.num_series:
         raise ValueError(f"k={k} outside [1, {view.num_series}]")
+    tiered = eps_factor_sq is not None
+    if tiered and budget_rounds is None:
+        raise ValueError("tiered engine needs both eps_factor_sq and "
+                         "budget_rounds (see tier_arrays)")
+    if tiered and not sort:
+        raise ValueError("service tiers require the sorted-candidate "
+                         "engine (sort=True)")
     n_rows = view.n_rows
     n_q = queries.shape[0]
     rs = round_size
     qs = isax.znorm(queries)
     qps = isax.paa(qs, view.segments)
 
-    if view.seed is not None:
+    if seed0 is not None:
+        seed_d, seed_p = seed0
+        top_d0 = jnp.concatenate(
+            [seed_d[:, None], jnp.full((n_q, k - 1), INF)], axis=1
+        )
+        top_p0 = jnp.concatenate(
+            [seed_p.astype(jnp.int32)[:, None],
+             jnp.full((n_q, k - 1), NO_POS)], axis=1,
+        )
+        reads0 = jnp.zeros((n_q,), jnp.int32)
+    elif view.seed is not None:
         bsf0, pos0, leaf = view.seed(queries)
         top_d0 = jnp.concatenate(
             [bsf0[:, None], jnp.full((n_q, k - 1), INF)], axis=1
@@ -435,17 +612,28 @@ def _engine_core(
         return -neg_d, jnp.take_along_axis(mp, sel, axis=1)
 
     def cond(st):
-        r, top_d, *_ = st
+        r, top_d = st[0], st[1]
         more = r < n_rounds
         if sort:  # joint early exit: every query's next bound >= its BSF
             head = jax.lax.dynamic_slice_in_dim(
                 lb_sel_p, r * rs, 1, axis=1
             )[:, 0]
-            more &= jnp.any(head < top_d[:, -1])
+            if tiered:
+                # A row is done when its scaled frontier meets its BSF
+                # (epsilon early stop; factor 1.0 == exact) or its round
+                # budget is spent.
+                active = r < budget_rounds
+                more &= jnp.any(active & (head * eps_factor_sq
+                                          < top_d[:, -1]))
+            else:
+                more &= jnp.any(head < top_d[:, -1])
         return more
 
     def body(st):
-        r, top_d, top_p, reads, updates = st
+        if tiered:
+            r, top_d, top_p, reads, updates, skip_lb = st
+        else:
+            r, top_d, top_p, reads, updates = st
         kth = top_d[:, -1]
         lbs = jax.lax.dynamic_slice_in_dim(lb_sel_p, r * rs, rs, axis=1)
         if sort:
@@ -459,21 +647,45 @@ def _engine_core(
             raws = view.gather_raw(pos1)
             d = _euclid_shared(raws)
             cand_pos = jnp.broadcast_to(pos1[None, :], (n_q, rs))
-        mask = lbs < kth[:, None]
+        if tiered:
+            # The tier mask is a subset of the exact mask (factor >= 1):
+            # candidates the exact engine would have checked but the tier
+            # skips feed the achieved-bound tracker.
+            would = lbs < kth[:, None]
+            mask = (
+                (lbs * eps_factor_sq[:, None] < kth[:, None])
+                & (r < budget_rounds)[:, None]
+            )
+            skip_lb = jnp.minimum(
+                skip_lb,
+                jnp.min(jnp.where(would & ~mask, lbs, INF), axis=1),
+            )
+        else:
+            mask = lbs < kth[:, None]
         d = jnp.where(mask, d, INF)
         improved = jnp.min(d, axis=1) < kth
         top_d, top_p = merge(top_d, top_p, cand_pos, d)
-        return (
+        out = (
             r + 1,
             top_d,
             top_p,
             reads + jnp.sum(mask, axis=1, dtype=jnp.int32),
             updates + improved.astype(jnp.int32),
         )
+        if tiered:
+            out = out + (skip_lb,)
+        return out
 
     st0 = (jnp.int32(0), top_d0, top_p0, reads0,
            jnp.zeros((n_q,), jnp.int32))
-    r, top_d, top_p, reads, updates = jax.lax.while_loop(cond, body, st0)
+    if tiered:
+        st0 = st0 + (jnp.full((n_q,), INF),)
+        r, top_d, top_p, reads, updates, skip_lb = jax.lax.while_loop(
+            cond, body, st0)
+        r_main = r
+    else:
+        r, top_d, top_p, reads, updates = jax.lax.while_loop(
+            cond, body, st0)
 
     if sort and select == "topk" and sel_len < n_rows:
         # Exactness fallback: a query whose worst *selected* bound still
@@ -493,13 +705,27 @@ def _engine_core(
             lb_all = _pad_cols(lb, pad_all, INF)
 
             def fcond(fst):
-                r2, top_d, *_ = fst
+                r2, top_d = fst[0], fst[1]
+                if tiered:
+                    active = (r_main + r2) < budget_rounds
+                    return (r2 < all_rounds) & jnp.any(
+                        active
+                        & (kth_bound * eps_factor_sq < top_d[:, -1]))
                 return (r2 < all_rounds) & jnp.any(kth_bound < top_d[:, -1])
 
             def fbody(fst):
-                r2, top_d, top_p, reads, updates = fst
+                if tiered:
+                    r2, top_d, top_p, reads, updates, skip_lb = fst
+                else:
+                    r2, top_d, top_p, reads, updates = fst
                 kth = top_d[:, -1]
-                need = kth_bound < kth
+                if tiered:
+                    need = (
+                        (kth_bound * eps_factor_sq < kth)
+                        & ((r_main + r2) < budget_rounds)
+                    )
+                else:
+                    need = kth_bound < kth
                 lbs = jax.lax.dynamic_slice_in_dim(
                     lb_all, r2 * rs, rs, axis=1)
                 idx = jax.lax.dynamic_slice_in_dim(idx_all, r2 * rs, rs)
@@ -510,31 +736,87 @@ def _engine_core(
                 # processed (everything strictly below the K-th bound was
                 # in the selected list); ties at the bound re-distance
                 # harmlessly.
+                if tiered:
+                    gate = lbs * eps_factor_sq[:, None] < kth[:, None]
+                else:
+                    gate = lbs < kth[:, None]
                 mask = (
-                    (lbs < kth[:, None])
+                    gate
                     & (lbs >= kth_bound[:, None])
                     & need[:, None]
                 )
+                if tiered:
+                    # Candidates the EXACT fallback would have checked
+                    # but the tier gate/budget skipped feed the
+                    # achieved-bound tracker, same as the main loop.
+                    would = (lbs < kth[:, None]) & (
+                        lbs >= kth_bound[:, None])
+                    skip_lb = jnp.minimum(
+                        skip_lb,
+                        jnp.min(jnp.where(would & ~mask, lbs, INF),
+                                axis=1),
+                    )
                 d = jnp.where(mask, d, INF)
                 improved = jnp.min(d, axis=1) < kth
                 cand_pos = jnp.broadcast_to(pos1[None, :], (n_q, rs))
                 top_d, top_p = merge(top_d, top_p, cand_pos, d)
-                return (
+                out = (
                     r2 + 1,
                     top_d,
                     top_p,
                     reads + jnp.sum(mask, axis=1, dtype=jnp.int32),
                     updates + improved.astype(jnp.int32),
                 )
+                if tiered:
+                    out = out + (skip_lb,)
+                return out
 
             return jax.lax.while_loop(fcond, fbody, st)
 
         st1 = (jnp.int32(0), top_d, top_p, reads, updates)
-        need0 = jnp.any(kth_bound < top_d[:, -1])
-        r2, top_d, top_p, reads, updates = jax.lax.cond(
-            need0, run_fallback, lambda st: st, st1
-        )
+        if tiered:
+            st1 = st1 + (skip_lb,)
+            need0 = jnp.any(
+                (kth_bound * eps_factor_sq < top_d[:, -1])
+                & (r_main < budget_rounds))
+            r2, top_d, top_p, reads, updates, skip_lb = jax.lax.cond(
+                need0, run_fallback, lambda st: st, st1
+            )
+        else:
+            need0 = jnp.any(kth_bound < top_d[:, -1])
+            r2, top_d, top_p, reads, updates = jax.lax.cond(
+                need0, run_fallback, lambda st: st, st1
+            )
+        fb_r2, fb_all_rounds = r2, all_rounds
         r = r + r2
+    else:
+        fb_r2 = None
+
+    if tiered:
+        # Achieved squared error factor, per query: the BSF over the
+        # smallest lower bound never distance-checked. Three sources of
+        # unchecked candidates: (a) candidates a round mask (main loop or
+        # fallback) skipped only because of the tier (skip_lb), (b) the
+        # unprocessed tail of the selected list (its head bound — the
+        # frontier — under-bounds all of it), (c) under select="topk",
+        # unselected rows (>= the K-th selected bound) in rounds the
+        # fallback never reached — charged only when the fallback did NOT
+        # scan the whole row order; a completed scan leaves nothing
+        # unchecked. If the minimum of those still exceeds the BSF
+        # nothing better can exist and the answer is certified exact
+        # (factor 1.0) — this also absorbs denom == 0 == bsf.
+        kth_final = top_d[:, -1]
+        frontier_at = jax.lax.dynamic_slice_in_dim(
+            lb_sel_p, jnp.minimum(r_main, n_rounds - 1) * rs, 1, axis=1
+        )[:, 0]
+        frontier = jnp.where(r_main < n_rounds, frontier_at, INF)
+        denom = jnp.minimum(skip_lb, frontier)
+        if fb_r2 is not None:
+            trunc = jnp.where(fb_r2 >= fb_all_rounds, INF, kth_bound)
+            denom = jnp.minimum(denom, trunc)
+        achieved_sq = jnp.where(
+            denom >= kth_final, jnp.float32(1.0), kth_final / denom)
+        return top_d, top_p, reads, updates, r, achieved_sq
 
     return top_d, top_p, reads, updates, r
 
@@ -681,7 +963,14 @@ def _packed_view(
 
 def _packed_engine_for(packed: PackedComponents, statics: tuple):
     """Per-packed-view jitted closures, cached on the view (same idiom —
-    and same lifetime argument — as the per-index ``_engine_for`` cache)."""
+    and same lifetime argument — as the per-index ``_engine_for`` cache).
+
+    ``statics = (k, round_size, select, impl)`` compiles the exact
+    engine; ``(..., impl, True)`` the tiered variant, whose closure takes
+    ``(queries, eps_factor_sq, budget_rounds, seed_d, seed_p)`` — all
+    traced, so one compile serves every tier mix and every seed. A
+    ``(+inf, NO_POS)`` seed row is identical to the unseeded cold start.
+    """
     cache = getattr(packed, "_engines", None)
     if cache is None:
         cache = {}
@@ -689,21 +978,35 @@ def _packed_engine_for(packed: PackedComponents, statics: tuple):
     fn = cache.get(statics)
     if fn is not None:
         return fn
-    k, round_size, select, impl = statics
+    k, round_size, select, impl = statics[:4]
+    tiered = len(statics) > 4 and statics[4]
 
-    @jax.jit
-    def fn(queries):
-        view = _packed_view(
+    def _view():
+        return _packed_view(
             packed.sax, packed.gpos, packed.block_len, packed.raw,
             block=packed.block, series_length=packed.series_length,
             segments=packed.segments, cardinality=packed.cardinality,
             num_series=packed.num_series,
         )
-        return _engine_core(
-            view, queries,
-            k=k, round_size=round_size, sort=True, select=select,
-            impl=impl,
-        )
+
+    if tiered:
+        @jax.jit
+        def fn(queries, eps_factor_sq, budget_rounds, seed_d, seed_p):
+            return _engine_core(
+                _view(), queries,
+                k=k, round_size=round_size, sort=True, select=select,
+                impl=impl,
+                eps_factor_sq=eps_factor_sq, budget_rounds=budget_rounds,
+                seed0=(seed_d, seed_p),
+            )
+    else:
+        @jax.jit
+        def fn(queries):
+            return _engine_core(
+                _view(), queries,
+                k=k, round_size=round_size, sort=True, select=select,
+                impl=impl,
+            )
 
     cache[statics] = fn
     return fn
@@ -729,6 +1032,10 @@ def packed_engine_args(
     round_size: int,
     select: str = "topk",
     impl: str = "auto",
+    eps_factor_sq: Optional[jax.Array] = None,
+    budget_rounds: Optional[jax.Array] = None,
+    seed_d: Optional[jax.Array] = None,
+    seed_p: Optional[jax.Array] = None,
 ) -> tuple:
     """Shape-stable fused engine: packed buffers as jit ARGUMENTS.
 
@@ -743,15 +1050,27 @@ def packed_engine_args(
     post-swap rebuild+recompile spike. Callers clamp ``k`` themselves
     (``num_series`` is dynamic here, so the core's host-side validation is
     skipped).
+
+    Tiered calls pass ``eps_factor_sq``/``budget_rounds`` (per-row traced
+    arrays, :func:`tier_arrays`) and get the 6-tuple with the achieved
+    factor appended; ``seed_d``/``seed_p`` optionally seed each query's
+    BSF with a known (distance, global position) pair — the packed view
+    has no bucket table of its own, so tiered callers compute the seed
+    from a component's bucket table (:func:`packed_seed`) and hand it in.
+    Exact calls leave all four ``None`` and trace the historical,
+    golden-tested computation.
     """
     view = _packed_view(
         sax, gpos, block_len, raw,
         block=block, series_length=series_length, segments=segments,
         cardinality=cardinality, num_series=None,
     )
+    seed0 = None if seed_d is None else (seed_d, seed_p)
     return _engine_core(
         view, queries,
         k=k, round_size=round_size, sort=True, select=select, impl=impl,
+        eps_factor_sq=eps_factor_sq, budget_rounds=budget_rounds,
+        seed0=seed0,
     )
 
 
@@ -789,6 +1108,150 @@ def exact_knn_batch_packed(
     return top_d, top_p
 
 
+def _seed_fn_for(index: ParISIndex, leaf: int):
+    """Cached jitted bucket-window seeder for one index.
+
+    Shares the per-index ``_engines`` cache (and its lifetime argument);
+    keyed separately from the engine statics.
+    """
+    cache = getattr(index, "_engines", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(index, "_engines", cache)
+    key = ("seed", leaf)
+    fn = cache.get(key)
+    if fn is None:
+        fn = jax.jit(lambda queries: approx_search_batch(
+            index, queries, leaf))
+        cache[key] = fn
+    return fn
+
+
+def packed_seed(components, queries, leaf_cap: int = 256) -> tuple:
+    """Approximate BSF seed for a packed multi-component engine call.
+
+    The packed view has no global bucket table, so its BSF historically
+    started cold at +inf. For tiered calls that gap matters twice over:
+    the epsilon early stop cannot fire until the BSF is real, and a
+    budget answer from a cold start can be arbitrarily bad. This seeds
+    each query from the bucket table of the LARGEST live component
+    (usually the base; on a deltas-only store, the largest delta — the
+    seed stays available at every point of the ingest lifecycle), with
+    positions translated to global file offsets. Returns
+    ``((Q,) float32 seed distances, (Q,) int32 global seed positions)``
+    — true distances at real positions, so the engine may re-encounter
+    them and its dedup protocol keeps the result list duplicate-free.
+
+    ``components`` is an iterable of (index, global offset) pairs in the
+    ``core.ingest.Snapshot.components()`` shape; empty components are
+    skipped.
+    """
+    comps = [(ix, off) for ix, off in components if ix.num_series]
+    if not comps:
+        raise ValueError("packed_seed needs at least one nonempty "
+                         "component")
+    ix, off = max(comps, key=lambda c: c[0].num_series)
+    leaf = min(int(leaf_cap), ix.num_series)
+    seed_d, seed_p = _seed_fn_for(ix, leaf)(
+        jnp.asarray(queries, jnp.float32))
+    return seed_d, seed_p.astype(jnp.int32) + jnp.int32(off)
+
+
+def knn_batch_tiered(
+    index: ParISIndex,
+    queries: jax.Array,
+    tier,
+    k: int = 1,
+    round_size: int = 4096,
+    impl: str = "auto",
+    select: str = "topk",
+    leaf_cap: int = 256,
+) -> tuple:
+    """Tiered batched k-NN over one index (see :class:`Tier`).
+
+    (Q, n) queries -> ((Q, k) dists ascending, (Q, k) positions,
+    (Q,) achieved epsilon). The exact tier routes through the same
+    tiered engine with factor 1.0 — bit-for-bit the exact answer, with
+    achieved epsilon 0. ``tier`` is one value for the whole batch or a
+    sequence of per-query :class:`Tier` values; parameters are validated
+    at :class:`Tier` construction. Same k clamp/sentinel protocol as
+    :func:`exact_knn_batch`.
+    """
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    qs = jnp.asarray(queries, jnp.float32)
+    if isinstance(tier, (Tier, str)) or tier is None:
+        tiers = [as_tier(tier)] * qs.shape[0]
+    else:
+        tiers = [as_tier(t) for t in tier]
+        if len(tiers) != qs.shape[0]:
+            raise ValueError(
+                f"got {len(tiers)} tiers for {qs.shape[0]} queries")
+    k_eff = min(k, index.num_series)
+    fn = _engine_for(
+        index,
+        (k_eff, round_size, leaf_cap, True, select, impl, "approx", True),
+    )
+    eps_f, budget = tier_arrays(tiers)
+    top_d, top_p, reads, updates, rounds, ach_sq = fn(qs, eps_f, budget)
+    if k_eff < k:  # tiny index: pad missing neighbors with the sentinel
+        n_q = top_d.shape[0]
+        top_d = jnp.concatenate(
+            [top_d, jnp.full((n_q, k - k_eff), INF)], axis=1)
+        top_p = jnp.concatenate(
+            [top_p, jnp.full((n_q, k - k_eff), NO_POS)], axis=1)
+    return top_d, top_p, achieved_epsilon(ach_sq)
+
+
+def knn_batch_packed_tiered(
+    packed: PackedComponents,
+    queries: jax.Array,
+    tier,
+    k: int = 1,
+    round_size: int = 4096,
+    impl: str = "auto",
+    select: str = "topk",
+    seed: Optional[tuple] = None,
+) -> tuple:
+    """Tiered batched k-NN over a packed multi-component store.
+
+    Same contract as :func:`knn_batch_tiered`, over the fused packed
+    sweep. ``seed`` is an optional ``((Q,) dist, (Q,) global pos)`` BSF
+    seed (:func:`packed_seed`); without one the BSF starts cold at +inf,
+    which weakens (never breaks) the budget tier's achieved bounds.
+    """
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    qs = jnp.asarray(queries, jnp.float32)
+    if isinstance(tier, (Tier, str)) or tier is None:
+        tiers = [as_tier(tier)] * qs.shape[0]
+    else:
+        tiers = [as_tier(t) for t in tier]
+        if len(tiers) != qs.shape[0]:
+            raise ValueError(
+                f"got {len(tiers)} tiers for {qs.shape[0]} queries")
+    k_eff = min(k, packed.num_series)
+    fn = _packed_engine_for(
+        packed, (k_eff, round_size, select, impl, True))
+    eps_f, budget = tier_arrays(tiers)
+    if seed is None:
+        n_q = qs.shape[0]
+        seed_d = jnp.full((n_q,), INF)
+        seed_p = jnp.full((n_q,), NO_POS)
+    else:
+        seed_d = jnp.asarray(seed[0], jnp.float32)
+        seed_p = jnp.asarray(seed[1], jnp.int32)
+    top_d, top_p, reads, updates, rounds, ach_sq = fn(
+        qs, eps_f, budget, seed_d, seed_p)
+    if k_eff < k:
+        n_q = top_d.shape[0]
+        top_d = jnp.concatenate(
+            [top_d, jnp.full((n_q, k - k_eff), INF)], axis=1)
+        top_p = jnp.concatenate(
+            [top_p, jnp.full((n_q, k - k_eff), NO_POS)], axis=1)
+    return top_d, top_p, achieved_epsilon(ach_sq)
+
+
 def exact_search_batch_packed(
     packed: PackedComponents,
     queries: jax.Array,
@@ -822,6 +1285,16 @@ def exact_search_batch_packed(
 
 
 def _engine_for(index: ParISIndex, statics: tuple):
+    """Cached per-index jitted engine for a statics tuple.
+
+    ``statics = (k, round_size, leaf_cap, sort, select, impl, init)``
+    compiles the exact engine (historical 5-tuple return); appending
+    ``True`` — ``(..., init, True)`` — compiles the TIERED variant, whose
+    closure takes ``(queries, eps_factor_sq, budget_rounds)`` as traced
+    arguments and returns the 6-tuple with the achieved factor. Tier
+    parameters being traced is the point: ONE compiled tiered engine per
+    (index, shape) serves every epsilon and budget in mixed batches.
+    """
     cache = getattr(index, "_engines", None)
     if cache is None:
         cache = {}
@@ -831,20 +1304,37 @@ def _engine_for(index: ParISIndex, statics: tuple):
     fn = cache.get(statics)
     if fn is not None:
         return fn
-    k, round_size, leaf_cap, sort, select, impl, init = statics
+    k, round_size, leaf_cap, sort, select, impl, init = statics[:7]
+    tiered = len(statics) > 7 and statics[7]
 
-    @jax.jit
-    def fn(queries):
-        view = _index_view(index, leaf_cap=leaf_cap, init=init)
-        return _engine_core(
-            view,
-            queries,
-            k=k,
-            round_size=round_size,
-            sort=sort,
-            select=select,
-            impl=impl,
-        )
+    if tiered:
+        @jax.jit
+        def fn(queries, eps_factor_sq, budget_rounds):
+            view = _index_view(index, leaf_cap=leaf_cap, init=init)
+            return _engine_core(
+                view,
+                queries,
+                k=k,
+                round_size=round_size,
+                sort=sort,
+                select=select,
+                impl=impl,
+                eps_factor_sq=eps_factor_sq,
+                budget_rounds=budget_rounds,
+            )
+    else:
+        @jax.jit
+        def fn(queries):
+            view = _index_view(index, leaf_cap=leaf_cap, init=init)
+            return _engine_core(
+                view,
+                queries,
+                k=k,
+                round_size=round_size,
+                sort=sort,
+                select=select,
+                impl=impl,
+            )
 
     cache[statics] = fn
     return fn
@@ -904,6 +1394,14 @@ def make_batch_engine(
     ``k >= 1``: exact k-NN, returns ((Q, k) dists ascending, (Q, k) pos)
     with the same clamp/sentinel protocol as :func:`exact_knn_batch`.
 
+    ``engine(queries, tiers=[...])`` (k-NN mode only) answers each row at
+    its own service tier and returns a third array — the per-query
+    achieved epsilon (:func:`achieved_epsilon`). ``tiers=None`` or
+    all-exact takes the historical exact path, unchanged; a mixed batch
+    compiles ONE extra tiered engine per bucket shape (tier parameters
+    are traced), and pad rows ride along with a zero round budget so
+    they can never extend the loop.
+
     The returned callable exposes ``engine.bucket(qn)`` — the padded batch
     shape a Q-query call compiles at (callers use it for pad accounting).
     """
@@ -913,20 +1411,50 @@ def make_batch_engine(
     fn = _engine_for(
         index, (k_eff, round_size, leaf_cap, sort, select, impl, "approx")
     )
+    tier_statics = (
+        k_eff, round_size, leaf_cap, sort, select, impl, "approx", True)
 
     def bucket(qn: int) -> int:
         return pow2_bucket(qn, min_bucket)
 
-    def engine(queries):
+    def engine(queries, tiers=None):
         qs = jnp.asarray(queries, jnp.float32)
         if qs.ndim != 2:
             raise ValueError(f"engine takes (Q, n) queries, got {qs.shape}")
         qn = qs.shape[0]
+        if tiers is not None:
+            tiers = [as_tier(t) for t in tiers]
+            if len(tiers) != qn:
+                raise ValueError(
+                    f"got {len(tiers)} tiers for {qn} queries")
+            if all(t.kind == "exact" for t in tiers):
+                tiers = None  # pure-exact batch: historical path
+            elif k is None:
+                raise ValueError(
+                    "service tiers need k-NN mode (k >= 1); the 1-NN "
+                    "SearchResult mode answers tier='exact' only")
         b = bucket(qn)
         if b > qn:  # pad rows repeat a real query; sliced off below
             qs = jnp.concatenate(
                 [qs, jnp.broadcast_to(qs[:1], (b - qn, qs.shape[1]))]
             )
+        if tiers is not None:
+            eps_f, budget = tier_arrays(tiers)
+            if b > qn:  # pad rows: factor 1, zero budget — inert rows
+                eps_f = jnp.concatenate(
+                    [eps_f, jnp.ones((b - qn,), jnp.float32)])
+                budget = jnp.concatenate(
+                    [budget, jnp.zeros((b - qn,), jnp.int32)])
+            fnt = _engine_for(index, tier_statics)
+            top_d, top_p, reads, updates, rounds, ach_sq = fnt(
+                qs, eps_f, budget)
+            top_d, top_p, ach_sq = top_d[:qn], top_p[:qn], ach_sq[:qn]
+            if k_eff < k:
+                top_d = jnp.concatenate(
+                    [top_d, jnp.full((qn, k - k_eff), INF)], axis=1)
+                top_p = jnp.concatenate(
+                    [top_p, jnp.full((qn, k - k_eff), NO_POS)], axis=1)
+            return top_d, top_p, achieved_epsilon(ach_sq)
         top_d, top_p, reads, updates, rounds = fn(qs)
         if k is None:
             return SearchResult(

@@ -61,6 +61,51 @@ seeding, new selection modes) is ONE change to the core or a new view —
 it lands in every path at once (see ``core/search.py``'s module
 docstring for the adapter diagram).
 
+Service tiers (core/search.py ``Tier``; threaded through every layer
+above; see the top-level README for the user-facing tour)::
+
+    tier="exact"                       today's behavior, bit-for-bit: the
+                                       RDC loop runs to proven exactness
+                                       (this is the default everywhere)
+    tier=Tier.epsilon(eps)             the loop stops once the BSF is
+                                       within (1+eps) of the smallest
+                                       unchecked lower bound — a PROVEN
+                                       multiplicative guarantee:
+                                       true_dist <= answer <= (1+eps) x
+                                       true k-th distance, in true
+                                       (sqrt) distance
+    tier=Tier.budget(rounds)           best answer after at most `rounds`
+                                       refinement rounds; the result
+                                       carries the ACHIEVED bound (the
+                                       factor the answer is provably
+                                       within), computed from the
+                                       smallest lower bound left
+                                       unchecked
+
+A non-exact request resolves to ``(dists, positions, achieved_eps)``
+instead of the exact 2-tuple — the certificate rides WITH the answer.
+Tier parameters are traced per-query arrays in the jitted engine, so a
+mixed batch (exact + epsilon + budget rows) compiles ONCE; exact rows in
+a mixed batch remain bit-identical to the exact path. Across shards the
+achieved bound combines conservatively (per-query max: the global k-th
+distance is <= every shard's, so each shard's certificate holds a
+fortiori for the merged list) — the guarantee survives fan-out, replica
+choice, retries, hedging, and mid-ingest delta shards.
+
+Degradation ladder (``TierDegradePolicy``, router's ``degrade=`` knob)::
+
+    slack >= epsilon_slack_ms          admit at the requested tier
+    slack <  epsilon_slack_ms          admit at Tier.epsilon(policy.eps)
+    slack <  budget_slack_ms           admit at Tier.budget(policy.rounds)
+
+where slack is the request's time-to-deadline at admission. A request
+only moves DOWN the ladder (exact -> epsilon -> budget; a caller's cheap
+tier is kept), and requests without a deadline never degrade. Under
+overload this answers queries the admission controller would otherwise
+shed or expire — a degraded-but-certified answer instead of a typed
+error — and every degradation is counted (``degraded``,
+``tiered_answered``, ``achieved_eps_avg``/``_max`` in ``stats()``).
+
 Durability (core/durable.py, enabled by ``workdir=``): every component
 spills to an epoch dir and every acknowledged transition commits a
 versioned manifest BEFORE it publishes. Appends pipeline this: each
@@ -136,13 +181,15 @@ analogue is ``SlotBatcher`` (decode requests -> slots of one compiled
 decode step).
 """
 
+from repro.core.search import Tier
 from repro.serving.serve_step import (
     greedy_generate, make_decode_step, make_prefill_step)
 from repro.serving.faults import FaultInjector, InjectedFaultError
 from repro.serving.health import ReplicaHealth, choose_replica
 from repro.serving.ingest import IngestingRouter
 from repro.serving.kv_cache import pad_cache_to, shard_cache
-from repro.serving.router import ShardedSearchRouter, ShardFailedError
+from repro.serving.router import (
+    ShardedSearchRouter, ShardFailedError, TierDegradePolicy)
 from repro.serving.search_batcher import (
     DeadlineExceededError, QueueFullError, RequestShedError,
     SearchRequestBatcher)
@@ -152,4 +199,5 @@ __all__ = ["greedy_generate", "make_decode_step", "make_prefill_step",
            "InjectedFaultError", "ReplicaHealth", "choose_replica",
            "IngestingRouter", "DeadlineExceededError", "QueueFullError",
            "RequestShedError", "SearchRequestBatcher",
-           "ShardedSearchRouter", "ShardFailedError"]
+           "ShardedSearchRouter", "ShardFailedError", "Tier",
+           "TierDegradePolicy"]

@@ -25,6 +25,7 @@ from repro.serving.util import pow2_bucket
 
 @dataclasses.dataclass
 class Request:
+    """One decode request: prompt tokens + generation limits."""
     rid: int
     prompt: np.ndarray  # (P,) int32
     max_new: int = 32
@@ -33,6 +34,7 @@ class Request:
 
 
 class SlotBatcher:
+    """Decode-side batcher: requests -> slots of one compiled decode step."""
     def __init__(self, model, params, batch_size: int, max_len: int):
         self.model = model
         self.params = params
@@ -61,6 +63,7 @@ class SlotBatcher:
         return pos
 
     def submit(self, req: Request):
+        """Enqueue one request for the next admission scan."""
         self.queue.put(req)
 
     def _admit(self):

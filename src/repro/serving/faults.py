@@ -109,6 +109,7 @@ class FaultInjector:
                 self._replica.pop((sid, rid), None)
 
     def clear(self) -> None:
+        """Remove every installed fault rule."""
         with self._lock:
             self._replica.clear()
             self._compaction.clear()

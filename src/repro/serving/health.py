@@ -113,15 +113,18 @@ class ReplicaHealth:
 
     @property
     def down(self) -> bool:
+        """Whether the breaker currently holds this replica out of placement."""
         with self._lock:
             return self._down_since is not None
 
     @property
     def ewma_ms(self) -> Optional[float]:
+        """EWMA answer latency (None before the first success)."""
         with self._lock:
             return self._ewma_ms
 
     def snapshot(self) -> dict:
+        """Point-in-time dict of the health state (for ``stats()``)."""
         with self._lock:
             return dict(
                 ewma_ms=self._ewma_ms,

@@ -325,18 +325,29 @@ class IngestingRouter:
     # ------------------------------------------------------------- queries
     @property
     def num_series(self) -> int:
+        """Series in the live (queryable) view."""
         return self.mutable.num_series
 
-    def submit(self, query, *, deadline_ms: Optional[float] = None) -> Future:
-        return self.router.submit(query, deadline_ms=deadline_ms)
+    def submit(self, query, *, deadline_ms: Optional[float] = None,
+               tier=None) -> Future:
+        """Submit one query at an optional service tier (router passthrough).
 
-    def search_batch(self, queries):
-        return self.router.search_batch(queries)
+        Tiered answers stay guarantee-true mid-ingest: every delta shard
+        answers at the request's tier over its own partition, and the
+        cross-shard achieved bound combines conservatively in the merge.
+        """
+        return self.router.submit(query, deadline_ms=deadline_ms, tier=tier)
+
+    def search_batch(self, queries, *, tier=None):
+        """Routed batch search over the live view (tiered when ``tier`` is)."""
+        return self.router.search_batch(queries, tier=tier)
 
     def poll(self) -> int:
+        """Delegate to :meth:`ShardedSearchRouter.poll`."""
         return self.router.poll()
 
     def drain(self) -> int:
+        """Delegate to :meth:`ShardedSearchRouter.drain`."""
         return self.router.drain()
 
     # -------------------------------------------------------------- stats

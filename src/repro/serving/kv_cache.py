@@ -108,5 +108,6 @@ def cache_sharding_tree(cache_tree, mesh: Mesh, cfg: ModelConfig,
 
 def shard_cache(cache, mesh: Mesh, cfg: ModelConfig, batch_axes=("data",),
                 model_axis: str = "model"):
+    """Device-put a cache tree under :func:`cache_sharding_tree`'s layout."""
     shardings = cache_sharding_tree(cache, mesh, cfg, batch_axes, model_axis)
     return jax.tree.map(jax.device_put, cache, shardings)

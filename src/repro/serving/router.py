@@ -62,11 +62,27 @@ not the fleet):
     chaos suite's contract: under any fault schedule, every answer is
     bit-exact or a typed error, and no future hangs.
 
+  * **service tiers + deadline-slack degradation**: ``submit(q,
+    tier=Tier.epsilon(0.05))`` threads the request's tier
+    (:class:`~repro.core.search.Tier`) into every replica queue; each
+    shard answers at that tier and reports its achieved error bound, and
+    the countdown merge combines bounds conservatively (per-query MAX —
+    sound because the global k-th best distance is <= every shard's, so
+    each shard's certificate holds a fortiori for the merged list). With
+    a :class:`TierDegradePolicy`, a deadline-bearing request whose
+    time-to-deadline slack is below the policy's thresholds is admitted
+    at a CHEAPER tier (``exact -> epsilon -> budget``, never upgraded)
+    instead of being shed or expiring in queue — overload turns into
+    degraded answers with explicit ``degraded`` / ``achieved_eps_*``
+    counters in :meth:`stats`, rather than into errors.
+
 Exactness: every shard scans (and prunes) only its own partition, and the
 union of partitions is the datastore, so the merged k-NN list is exactly
 the single-index answer — replicas of a shard hold the SAME immutable
 index, so WHICH replica answers (primary, retry, or hedge) cannot change
-a single bit of the result.
+a single bit of the result. Tiered requests trade exactness for latency
+*with a certificate*: the merged answer is within ``(1+eps)`` of exact
+for the epsilon tier, and carries the achieved bound for the budget tier.
 """
 
 from __future__ import annotations
@@ -85,7 +101,7 @@ from repro.core.index import (
     ParISIndex, ShardedIndex, build_sharded_index,
 )
 from repro.core.search import (
-    NO_POS, SearchConfig, SearchResult, merge_top_lists,
+    NO_POS, SearchConfig, SearchResult, Tier, as_tier, merge_top_lists,
 )
 from repro.serving.health import ReplicaHealth, choose_replica
 from repro.serving.search_batcher import (
@@ -107,6 +123,62 @@ class ShardFailedError(RuntimeError):
     def __init__(self, sid: int, message: str):
         super().__init__(message)
         self.sid = sid
+
+
+_TIER_RANK = {"exact": 0, "epsilon": 1, "budget": 2}
+
+
+@dataclasses.dataclass(frozen=True)
+class TierDegradePolicy:
+    """Deadline-slack degradation ladder: answer cheaper, not never.
+
+    When a request arrives with a deadline whose remaining slack is below
+    ``epsilon_slack_ms``, it is admitted at the epsilon tier; below
+    ``budget_slack_ms`` (the tighter threshold), at the budget tier. A
+    request is only ever moved DOWN the ladder (``exact -> epsilon ->
+    budget``); a caller that already asked for a cheap tier keeps it.
+    Requests without a deadline are never degraded — slack is the signal.
+
+    The point: under overload the PR-6 fabric protects itself by shedding
+    or expiring the queries it cannot answer in time. With a degrade
+    policy those same queries are answered *approximately, with a
+    certificate* (the achieved bound rides back on the result), which is
+    strictly more useful than a typed error when the caller can tolerate
+    bounded error. Each degradation increments the router's ``degraded``
+    counter.
+    """
+
+    epsilon_slack_ms: float = 50.0
+    budget_slack_ms: float = 10.0
+    epsilon: float = 0.05
+    budget_rounds: int = 1
+
+    def __post_init__(self):
+        if not self.budget_slack_ms > 0:
+            raise ValueError("budget_slack_ms must be > 0")
+        if self.epsilon_slack_ms < self.budget_slack_ms:
+            raise ValueError(
+                "epsilon_slack_ms must be >= budget_slack_ms (the ladder "
+                "degrades further as slack shrinks)")
+        # Delegate tier-parameter validation to the tier constructors.
+        Tier.epsilon(self.epsilon)
+        Tier.budget(self.budget_rounds)
+
+    def pick(self, tier: Tier, slack_ms: Optional[float]) -> Tier:
+        """The tier to admit at, given the requested tier and the slack.
+
+        Never upgrades: the returned tier is the max (cheapest) of the
+        requested tier and what the slack calls for.
+        """
+        if slack_ms is None:
+            return tier
+        if slack_ms < self.budget_slack_ms:
+            want = Tier.budget(self.budget_rounds)
+        elif slack_ms < self.epsilon_slack_ms:
+            want = Tier.epsilon(self.epsilon)
+        else:
+            return tier
+        return want if _TIER_RANK[want.kind] > _TIER_RANK[tier.kind] else tier
 
 
 class _RWLock:
@@ -247,15 +319,16 @@ class _InFlight:
     attempt can still answer.
     """
 
-    __slots__ = ("out", "query", "deadline", "entries", "lock", "parts",
-                 "inflight", "attempts", "tried", "hedged", "stash",
+    __slots__ = ("out", "query", "deadline", "tier", "entries", "lock",
+                 "parts", "inflight", "attempts", "tried", "hedged", "stash",
                  "remaining")
 
     def __init__(self, out: Future, query: np.ndarray,
-                 deadline: Optional[float], entries: list):
+                 deadline: Optional[float], tier: Tier, entries: list):
         self.out = out
         self.query = query
         self.deadline = deadline
+        self.tier = tier
         self.entries = entries
         self.lock = threading.Lock()
         n = len(entries)
@@ -299,6 +372,12 @@ class ShardedSearchRouter:
                  replica failure (never after a shed).
     down_after / probe_after_ms: per-replica health breaker knobs
                  (:class:`~repro.serving.health.ReplicaHealth`).
+    degrade:     a :class:`TierDegradePolicy` (or None to disable):
+                 deadline-bearing requests with little remaining slack
+                 are admitted at a cheaper tier (``exact -> epsilon ->
+                 budget``) instead of being shed or expiring in queue.
+                 Requires k-NN mode (tiers carry achieved bounds, which
+                 the 1-NN ``SearchResult`` shape cannot).
     fault_injector: a :class:`~repro.serving.faults.FaultInjector` whose
                  rules bite every replica's flush path (chaos testing).
     max_batch / max_wait_ms / min_bucket: per-replica batching knobs (see
@@ -328,6 +407,7 @@ class ShardedSearchRouter:
         retry_failures: bool = True,
         down_after: int = 3,
         probe_after_ms: float = 250.0,
+        degrade: Optional[TierDegradePolicy] = None,
         fault_injector=None,
         max_batch: int = 64,
         max_wait_ms: float = 2.0,
@@ -349,7 +429,13 @@ class ShardedSearchRouter:
                 f"{hedge_ms!r}")
         if not 0.0 <= hedge_budget <= 1.0:
             raise ValueError("hedge_budget must be in [0, 1]")
+        if degrade is not None and k is None:
+            raise ValueError(
+                "degrade needs k-NN mode (k >= 1): degraded tiers return "
+                "(dists, positions, achieved_eps), which the 1-NN "
+                "SearchResult mode cannot carry")
         self.k = k
+        self.degrade = degrade
         self.replicas = replicas
         self.hedge_ms = hedge_ms
         self.hedge_ewma_factor = hedge_ewma_factor
@@ -384,12 +470,13 @@ class ShardedSearchRouter:
         self._fab = dict(
             shard_requests=0, retries=0, admission_retries=0, hedges=0,
             hedges_won=0, hedges_denied=0, deadline_expired=0,
-            shard_failures=0,
+            shard_failures=0, degraded=0,
         )
         self._retired_totals = dict(
             shards=0, submitted=0, answered=0, batches=0, padded_queries=0,
             rejected=0, shed=0, blocked=0, expired=0, blackholed=0,
             queue_depth_peak=0, latency_ms_max=0.0, batch_size_sum=0,
+            tiered_answered=0, achieved_eps_sum=0.0, achieved_eps_max=0.0,
         )
         self.sharded: Optional[ShardedIndex] = None
         if index is None:
@@ -433,6 +520,7 @@ class ShardedSearchRouter:
 
     @property
     def num_shards(self) -> int:
+        """Number of live shards."""
         return len(self._entries)
 
     # --------------------------------------------------- dynamic shard set
@@ -491,17 +579,21 @@ class ShardedSearchRouter:
                         for key in ("submitted", "answered", "batches",
                                     "padded_queries", "rejected", "shed",
                                     "blocked", "expired", "blackholed",
-                                    "batch_size_sum"):
+                                    "batch_size_sum", "tiered_answered",
+                                    "achieved_eps_sum"):
                             t[key] += s[key]
                         t["queue_depth_peak"] = max(
                             t["queue_depth_peak"], s["queue_depth_peak"])
                         t["latency_ms_max"] = max(
                             t["latency_ms_max"], s["latency_ms_max"])
+                        t["achieved_eps_max"] = max(
+                            t["achieved_eps_max"], s["achieved_eps_max"])
         return new_sids
 
     # ------------------------------------------------------------- request
     def submit(self, query, *,
-               deadline_ms: Optional[float] = None) -> Future:
+               deadline_ms: Optional[float] = None,
+               tier=None) -> Future:
         """Fan one (n,) query out; one Future for the global merge.
 
         ``deadline_ms`` is the request's END-TO-END budget: it rides into
@@ -509,6 +601,14 @@ class ShardedSearchRouter:
         the router's reaper — at the deadline an unanswered merged future
         fails with :class:`DeadlineExceededError`, whatever any replica
         is (or is not) doing.
+
+        ``tier`` is the request's service tier (None / ``"exact"`` / a
+        :class:`~repro.core.search.Tier`): every shard answers at that
+        tier and a non-exact request resolves to ``(dists, positions,
+        achieved_eps)``, the achieved bound combined conservatively
+        across shards. With a ``degrade`` policy, a deadline-bearing
+        request short on slack is admitted at a cheaper tier (counted in
+        ``stats()["degraded"]``). Non-exact tiers need k-NN mode.
 
         The fan-out snapshots the shard set (shared lock), so a
         concurrent ``swap_shards`` either misses this query entirely or
@@ -523,6 +623,11 @@ class ShardedSearchRouter:
         q = np.asarray(query, np.float32)
         if q.ndim != 1:
             raise ValueError(f"submit takes one (n,) query, got {q.shape}")
+        t = as_tier(tier)
+        if t.kind != "exact" and self.k is None:
+            raise ValueError(
+                "service tiers need k-NN mode (k >= 1); the 1-NN "
+                "SearchResult mode answers tier='exact' only")
         deadline = (None if deadline_ms is None
                     else time.monotonic() + deadline_ms / 1e3)
         out: Future = Future()
@@ -530,13 +635,19 @@ class ShardedSearchRouter:
             out.set_exception(DeadlineExceededError(
                 f"deadline_ms={deadline_ms} already expired at submit"))
             return out
+        if self.degrade is not None:
+            picked = self.degrade.pick(t, deadline_ms)
+            if picked is not t and picked.kind != t.kind:
+                with self._stats_lock:
+                    self._fab["degraded"] += 1
+            t = picked
         self._shards_rw.acquire_read()
         try:
             entries = list(self._entries)
             if not entries:
-                out.set_result(self._empty_result())
+                out.set_result(self._empty_result(t))
                 return out
-            req = _InFlight(out, q, deadline, entries)
+            req = _InFlight(out, q, deadline, t, entries)
             with self._stats_lock:
                 self._fab["shard_requests"] += len(entries)
             primaries = []
@@ -609,7 +720,8 @@ class ShardedSearchRouter:
             return None
         with req.lock:
             req.tried[s].append(rep.rid)
-        fut = rep.batcher.submit(req.query, deadline=req.deadline)
+        fut = rep.batcher.submit(req.query, deadline=req.deadline,
+                                 tier=req.tier)
         with req.lock:
             req.inflight[s] += 1
             req.attempts[s] += 1
@@ -707,7 +819,7 @@ class ShardedSearchRouter:
                 with self._stats_lock:
                     self._fab["hedges_won"] += 1
             if last:
-                self._finish(req.out, req.parts, req.entries)
+                self._finish(req)
             return
         # Failure. Sheds and deadline expiries are not the replica's
         # fault (and retrying a shed re-amplifies the load being shed);
@@ -752,7 +864,7 @@ class ShardedSearchRouter:
         with self._stats_lock:
             self._fab["shard_failures"] += 1
         if last:
-            self._finish(req.out, req.parts, req.entries)
+            self._finish(req)
 
     @staticmethod
     def _shard_error(entry: _RouterShard, cause: BaseException,
@@ -773,15 +885,19 @@ class ShardedSearchRouter:
         err.__cause__ = cause
         return err
 
-    def _empty_result(self):
+    def _empty_result(self, tier: Optional[Tier] = None):
         if self.k is None:
             z = np.int32(0)
             return SearchResult(
                 np.float32(np.inf), np.int32(_NO_POS), z, z, z)
-        return (np.full((self.k,), np.float32(np.inf)),
-                np.full((self.k,), _NO_POS, np.int32))
+        empty = (np.full((self.k,), np.float32(np.inf)),
+                 np.full((self.k,), _NO_POS, np.int32))
+        if tier is not None and tier.kind != "exact":
+            return (*empty, 0.0)  # nothing to miss in an empty datastore
+        return empty
 
-    def _finish(self, out: Future, parts: list, entries: list) -> None:
+    def _finish(self, req: _InFlight) -> None:
+        out, parts, entries = req.out, req.parts, req.entries
         err = next((e for tag, e in parts if tag == "err"), None)
         if err is not None:
             self._try_set_exception(out, err)
@@ -792,7 +908,7 @@ class ShardedSearchRouter:
             if self.k is None:
                 merged = self._merge_1nn(results, entries)
             else:
-                merged = self._merge_knn(results, entries)
+                merged = self._merge_knn(results, entries, req.tier)
             dt_ms = (time.perf_counter() - t0) * 1e3
             with self._stats_lock:
                 m = self._merge_stats
@@ -810,16 +926,24 @@ class ShardedSearchRouter:
         return np.where(pos >= 0, pos + entry.offset, _NO_POS).astype(
             pos.dtype)
 
-    def _merge_knn(self, results: list, entries: list) -> tuple:
+    def _merge_knn(self, results: list, entries: list,
+                   tier: Tier) -> tuple:
         # Ownership-disjoint (k,) lists -> global k smallest, via the
         # shared merge protocol (entries are offset-ascending, so ties —
         # and only ties — resolve toward the lower file range; sentinel
         # INF slots sink).
-        return merge_top_lists(
+        d, p = merge_top_lists(
             [r[0] for r in results],
             [self._global_pos(r[1], e) for e, r in zip(entries, results)],
             self.k,
         )
+        if tier.kind == "exact":
+            return d, p
+        # Conservative cross-shard combine: the merged k-th distance is
+        # <= every shard's k-th, so each shard's (1+eps_s) certificate
+        # holds a fortiori for the merged list — the worst shard bounds
+        # the whole answer.
+        return d, p, max(float(r[2]) for r in results)
 
     def _merge_1nn(self, results: list, entries: list) -> SearchResult:
         dists = [float(r.dist_sq) for r in results]
@@ -838,18 +962,21 @@ class ShardedSearchRouter:
         )
 
     # ----------------------------------------------------------- batch API
-    def search_batch(self, queries):
+    def search_batch(self, queries, *, tier=None):
         """Synchronous convenience: (Q, n) -> merged results via the stream.
 
         Submits every row, drains, and stacks: ``k=None`` gives a
         ``SearchResult`` of (Q,) arrays; ``k >= 1`` gives ((Q, k) dists,
-        (Q, k) global positions). Admission control still applies — with a
-        bound tighter than Q, ``shed``/``reject`` can fail rows. Without
-        the daemon flushers, full cohorts are flushed between submits
-        (``poll``) so a ``block`` bound tighter than Q makes progress
-        instead of deadlocking the submitting thread.
+        (Q, k) global positions) — plus a (Q,) achieved-epsilon array
+        when ``tier`` is non-exact (one tier for the whole batch).
+        Admission control still applies — with a bound tighter than Q,
+        ``shed``/``reject`` can fail rows. Without the daemon flushers,
+        full cohorts are flushed between submits (``poll``) so a
+        ``block`` bound tighter than Q makes progress instead of
+        deadlocking the submitting thread.
         """
         qs = np.asarray(queries, np.float32)
+        t = as_tier(tier)
         futs = []
         for q in qs:
             if not self._started:
@@ -857,7 +984,7 @@ class ShardedSearchRouter:
                 # a blocking submit always finds room (max_pending >=
                 # max_batch is enforced, so a full queue has a full batch).
                 self.poll()
-            futs.append(self.submit(q))
+            futs.append(self.submit(q, tier=t))
         self.drain()
         res = [f.result() for f in futs]
         if self.k is None:
@@ -868,10 +995,11 @@ class ShardedSearchRouter:
                 np.stack([np.asarray(r.bsf_updates) for r in res]),
                 np.max([np.asarray(r.rounds) for r in res]),
             )
-        return (
-            np.stack([r[0] for r in res]),
-            np.stack([r[1] for r in res]),
-        )
+        d = np.stack([r[0] for r in res])
+        p = np.stack([r[1] for r in res])
+        if t.kind != "exact":
+            return d, p, np.asarray([r[2] for r in res], np.float32)
+        return d, p
 
     # ----------------------------------------------------------- lifecycle
     def start(self, tick_ms: Optional[float] = None) -> None:
@@ -976,6 +1104,16 @@ class ShardedSearchRouter:
                  + ret["batch_size_sum"])
                 / max(sum(s["batches"] for s in per) + ret["batches"], 1)),
             qps=min((s["qps"] for s in per), default=0.0),
+            tiered_answered=(sum(s["tiered_answered"] for s in per)
+                             + ret["tiered_answered"]),
+            achieved_eps_max=max(
+                [s["achieved_eps_max"] for s in per]
+                + [ret["achieved_eps_max"]], default=0.0),
+            achieved_eps_avg=(
+                (sum(s["achieved_eps_sum"] for s in per)
+                 + ret["achieved_eps_sum"])
+                / max(sum(s["tiered_answered"] for s in per)
+                      + ret["tiered_answered"], 1)),
             merges=merge["merges"],
             merge_ms_avg=merge["merge_ms_sum"] / max(merge["merges"], 1),
             merge_ms_max=merge["merge_ms_max"],

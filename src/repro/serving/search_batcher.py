@@ -47,6 +47,14 @@ Two modes: ``k=None`` answers exact 1-NN through
 scalars); ``k >= 1`` answers exact k-NN through the partial-selection
 :func:`repro.core.search.exact_knn_batch` (per-request ((k,) dists,
 (k,) positions)).
+
+Service tiers (k-NN mode): ``submit(q, tier=Tier.epsilon(0.05))`` asks
+for an approximate answer with a guarantee (see
+:class:`repro.core.search.Tier`); a cohort holding any non-exact request
+rides the TIERED engine variant with per-row tier parameters — exact and
+approximate requests batch together without recompiles — and a non-exact
+request's future resolves to ``((k,) dists, (k,) positions,
+achieved_epsilon)`` (exact requests keep their historical 2-tuple shape).
 """
 
 from __future__ import annotations
@@ -61,7 +69,7 @@ import numpy as np
 
 from repro.core.index import ParISIndex
 from repro.core.search import (
-    SearchConfig, SearchResult, make_batch_engine,
+    SearchConfig, SearchResult, Tier, as_tier, make_batch_engine,
 )
 
 ADMISSION_POLICIES = ("block", "reject", "shed-oldest")
@@ -104,6 +112,7 @@ class _Pending:
     future: Future
     t_submit: float
     deadline: Optional[float] = None  # absolute monotonic seconds
+    tier: Tier = Tier.exact()  # requested service tier (k-NN mode)
 
 
 class SearchRequestBatcher:
@@ -218,6 +227,7 @@ class SearchRequestBatcher:
             flush_full=0, flush_timeout=0, flush_drain=0,
             rejected=0, shed=0, blocked=0, queue_depth_peak=0,
             expired=0, blackholed=0,
+            tiered_answered=0, achieved_eps_sum=0.0, achieved_eps_max=0.0,
             latency_ms_sum=0.0, latency_ms_max=0.0, batch_size_sum=0,
         )
 
@@ -227,13 +237,19 @@ class SearchRequestBatcher:
             return len(self._pending)
 
     # ------------------------------------------------------------- request
-    def submit(self, query, deadline: Optional[float] = None) -> Future:
+    def submit(self, query, deadline: Optional[float] = None,
+               tier=None) -> Future:
         """Enqueue one (n,) query; returns a Future for its result.
 
         ``deadline`` is an absolute ``time.monotonic()`` instant: once it
         passes, the request is failed with :class:`DeadlineExceededError`
         at the next flush instead of being answered (the router threads
         per-request ``deadline_ms`` through here).
+
+        ``tier`` selects the request's service tier (None / "exact" / a
+        :class:`~repro.core.search.Tier`); non-exact tiers need k-NN mode
+        and resolve the future to ((k,) dists, (k,) pos, achieved_eps).
+        Tier parameters are validated here, at the door.
 
         Admission control applies first (see ``max_pending``/``policy``):
         ``reject`` raises :class:`QueueFullError` at saturation, ``block``
@@ -244,6 +260,11 @@ class SearchRequestBatcher:
         q = np.asarray(query, np.float32)
         if q.ndim != 1:
             raise ValueError(f"submit takes one (n,) query, got {q.shape}")
+        t = as_tier(tier)
+        if t.kind != "exact" and self.k is None:
+            raise ValueError(
+                "service tiers need k-NN mode (k >= 1); the 1-NN "
+                "SearchResult mode answers tier='exact' only")
         fut: Future = Future()
         shed_futs: List[Future] = []
         with self._lock:
@@ -277,7 +298,7 @@ class SearchRequestBatcher:
                                 "timed out waiting for queue space "
                                 f"({self.max_pending} pending)")
             self._pending.append(
-                _Pending(q, fut, time.monotonic(), deadline))
+                _Pending(q, fut, time.monotonic(), deadline, t))
             c["submitted"] += 1
             c["queue_depth_peak"] = max(
                 c["queue_depth_peak"], len(self._pending))
@@ -411,12 +432,27 @@ class SearchRequestBatcher:
                     return qn + len(expired)
             bucket = self._engine.bucket(qn)
             qs = np.stack([p.query for p in take])
-            out = self._engine(qs)
-            if self.k is None:
-                outs = _split_search(out, qn)
+            tiers = [p.tier for p in take]
+            if any(t.kind != "exact" for t in tiers):
+                # Mixed-tier cohort: ONE tiered engine call answers every
+                # row at its own tier. Exact requests keep their 2-tuple
+                # result shape; tiered requests get achieved_eps appended.
+                d, pos, ach = self._engine(qs, tiers=tiers)
+                d, pos = np.asarray(d), np.asarray(pos)
+                ach = np.asarray(ach)
+                outs = [
+                    (d[i], pos[i], float(ach[i]))
+                    if tiers[i].kind != "exact" else (d[i], pos[i])
+                    for i in range(qn)
+                ]
+            elif self.k is None:
+                outs = _split_search(self._engine(qs), qn)
+                ach = None
             else:
-                d, p = np.asarray(out[0]), np.asarray(out[1])
-                outs = [(d[i], p[i]) for i in range(qn)]
+                out = self._engine(qs)
+                d, pos = np.asarray(out[0]), np.asarray(out[1])
+                outs = [(d[i], pos[i]) for i in range(qn)]
+                ach = None
         except BaseException as e:  # noqa: BLE001 — propagate per request
             for p in take:
                 p.future.set_exception(e)
@@ -429,6 +465,13 @@ class SearchRequestBatcher:
             c["batch_size_sum"] += qn
             c["padded_queries"] += bucket - qn
             c["answered"] += qn
+            if ach is not None:
+                for i, t in enumerate(tiers):
+                    if t.kind != "exact":
+                        c["tiered_answered"] += 1
+                        c["achieved_eps_sum"] += float(ach[i])
+                        c["achieved_eps_max"] = max(
+                            c["achieved_eps_max"], float(ach[i]))
             for p in take:
                 lat = (now - p.t_submit) * 1e3
                 c["latency_ms_sum"] += lat
@@ -447,6 +490,8 @@ class SearchRequestBatcher:
         b = max(c["batches"], 1)
         c["latency_ms_avg"] = c["latency_ms_sum"] / n
         c["batch_size_avg"] = c["batch_size_sum"] / b
+        c["achieved_eps_avg"] = (
+            c["achieved_eps_sum"] / max(c["tiered_answered"], 1))
         c["qps"] = c["answered"] / max(time.monotonic() - self._t0, 1e-9)
         return c
 

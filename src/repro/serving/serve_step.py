@@ -15,6 +15,7 @@ from repro.models import Model
 
 
 def make_prefill_step(model: Model):
+    """Wrap ``model.prefill`` as a (params, batch) -> (logits, cache) step."""
     def prefill_step(params, batch):
         logits, cache = model.prefill(params, batch)
         return logits[:, -1], cache
@@ -23,6 +24,7 @@ def make_prefill_step(model: Model):
 
 
 def make_decode_step(model: Model):
+    """Wrap ``model.decode_step`` as a single-token decode step."""
     def decode_step(params, batch, cache, position):
         """batch: {"tokens": (B, 1)}; position: scalar int32 (cache write
         index; same for all rows of the batch)."""

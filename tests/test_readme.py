@@ -1,0 +1,38 @@
+"""README drift gate: execute the quickstart verbatim.
+
+The top-level README's quickstart lives between the
+``<!-- readme-quickstart -->`` markers so this test (and the CI smoke
+step) can extract and ``exec`` it exactly as a reader would copy-paste
+it. If an API the README shows is renamed or its return shape changes,
+this fails — the README cannot silently drift from the code.
+"""
+
+import pathlib
+import re
+
+README = pathlib.Path(__file__).resolve().parents[1] / "README.md"
+
+
+def _quickstart_source() -> str:
+    text = README.read_text()
+    m = re.search(
+        r"<!-- readme-quickstart -->\s*```python\n(.*?)```\s*"
+        r"<!-- /readme-quickstart -->",
+        text,
+        re.DOTALL,
+    )
+    assert m, "README quickstart markers missing or malformed"
+    return m.group(1)
+
+
+def test_readme_exists_and_mentions_verify_command():
+    text = README.read_text()
+    assert "PYTHONPATH=src python -m pytest -x -q" in text
+    assert "benchmarks/run.py" in text
+
+
+def test_readme_quickstart_runs():
+    src = _quickstart_source()
+    # Run in a fresh namespace, exactly as copy-pasted. The block's own
+    # asserts (achieved <= eps, epsilon-vs-exact bound) are the test.
+    exec(compile(src, str(README) + "::quickstart", "exec"), {})

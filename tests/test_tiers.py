@@ -1,0 +1,379 @@
+"""Service-tier guarantees end to end.
+
+What is under test (ROADMAP item 4's acceptance):
+
+  * validation at the API edge — a negative epsilon or a zero round
+    budget is a ``ValueError`` at construction, never a silent
+    wrong-tier answer inside a jitted loop;
+  * the (1+eps) multiplicative guarantee, checked against ground truth
+    recomputed from the ANSWERED POSITIONS (not the engine's own
+    distance report) on every view: single index, packed
+    multi-component, mid-ingest ``MutableIndex`` snapshots, and the
+    sharded-router fan-out (where per-shard achieved bounds combine
+    conservatively);
+  * budget-tier certificate honesty — the reported achieved bound holds
+    against ground truth;
+  * exact-tier bit-identity with the exact path, alone and for exact
+    rows inside a mixed batch (tier parameters are traced, so mixed
+    batches share one compile);
+  * the deadline-slack degradation ladder (``TierDegradePolicy``):
+    requests short on slack are admitted at a cheaper tier — never
+    upgraded — with the ``degraded`` counter in ``stats()``.
+
+A deterministic core always runs; hypothesis widens the sweep
+(randomized seeds / eps / k) when installed.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import build_index
+from repro.core.ingest import MutableIndex
+from repro.core.isax import znorm
+from repro.core.search import (
+    Tier, achieved_epsilon, as_tier, exact_knn_batch, knn_batch_packed_tiered,
+    knn_batch_tiered, make_batch_engine, pack_components, packed_seed,
+)
+from repro.serving.router import ShardedSearchRouter, TierDegradePolicy
+from repro.serving.search_batcher import SearchRequestBatcher
+
+try:
+    import hypothesis
+    from hypothesis import strategies as st
+except ImportError:
+    hypothesis = None
+
+RNG = np.random.default_rng(99)
+N, LENGTH, ROUND = 1200, 64, 128
+SLACK = 1.0 + 1e-4  # float32 accumulation headroom on the sqrt-space bound
+
+
+def _make_raw(n=N, rng=RNG):
+    walk = rng.standard_normal((n, LENGTH)).cumsum(axis=1)
+    # White (PAA-invisible) noise keeps lower bounds loose, so non-exact
+    # tiers actually take a different path than exact (rounds are cut).
+    return (walk + 1.5 * rng.standard_normal((n, LENGTH))).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def raw():
+    return _make_raw()
+
+
+@pytest.fixture(scope="module")
+def index(raw):
+    return build_index(jnp.asarray(raw), segments=8)
+
+
+@pytest.fixture(scope="module")
+def queries():
+    return RNG.standard_normal((6, LENGTH)).cumsum(axis=1).astype(np.float32)
+
+
+def _true_dists(zraw, zqs, pos):
+    """Ground-truth distance of each answered position, znormed space."""
+    out = np.full(pos.shape, np.inf, np.float64)
+    for i in range(pos.shape[0]):
+        for j in range(pos.shape[1]):
+            p = int(pos[i, j])
+            if p >= 0:
+                d = zraw[p].astype(np.float64) - zqs[i].astype(np.float64)
+                out[i, j] = np.sqrt(np.dot(d, d))
+    return out
+
+
+def _guarantee(raw, qs, p, ach, g_true, eps):
+    """The tier contract: answers within (1+eps) of exact, bound honest."""
+    zraw = np.asarray(znorm(jnp.asarray(raw)))
+    zqs = np.asarray(znorm(jnp.asarray(qs)))
+    t_true = _true_dists(zraw, zqs, np.asarray(p))
+    assert np.all(t_true <= (1.0 + eps) * g_true * SLACK)
+    assert np.all(np.asarray(ach) <= eps + 1e-5)
+
+
+# --------------------------------------------------------- API-edge checks
+def test_tier_validation_rejects_bad_params():
+    with pytest.raises(ValueError, match="eps >= 0"):
+        Tier.epsilon(-0.1)
+    with pytest.raises(ValueError, match="eps >= 0"):
+        Tier.epsilon(float("nan"))
+    with pytest.raises(ValueError, match="budget_rounds >= 1"):
+        Tier.budget(0)
+    with pytest.raises(ValueError, match="budget_rounds >= 1"):
+        Tier.budget(-3)
+    with pytest.raises(ValueError, match="unknown tier kind"):
+        Tier("fuzzy")
+    with pytest.raises(ValueError):
+        as_tier("epsilon")  # parameterized tiers have no string form
+    assert as_tier(None) == Tier.exact()
+    assert as_tier("exact") == Tier.exact()
+    assert as_tier(Tier.epsilon(0.25)).eps == 0.25
+    assert Tier.epsilon(0.0).kind == "epsilon"  # eps=0 is legal
+
+
+def test_achieved_epsilon_conversion():
+    got = achieved_epsilon(np.asarray([1.0, 1.21, 0.5, np.inf]))
+    np.testing.assert_allclose(got[:2], [0.0, 0.1], atol=1e-12)
+    assert got[2] == 0.0  # sub-1 factors clamp to exact
+    assert np.isinf(got[3])
+
+
+def test_degrade_policy_validation():
+    with pytest.raises(ValueError):
+        TierDegradePolicy(budget_slack_ms=0.0)
+    with pytest.raises(ValueError):
+        TierDegradePolicy(epsilon_slack_ms=5.0, budget_slack_ms=10.0)
+    with pytest.raises(ValueError):
+        TierDegradePolicy(epsilon=-0.5)
+    with pytest.raises(ValueError):
+        TierDegradePolicy(budget_rounds=0)
+
+
+def test_degrade_policy_pick_ladder():
+    pol = TierDegradePolicy(epsilon_slack_ms=50.0, budget_slack_ms=10.0,
+                            epsilon=0.1, budget_rounds=2)
+    exact, eps, bud = Tier.exact(), Tier.epsilon(0.1), Tier.budget(2)
+    # No deadline / ample slack: the requested tier stands.
+    assert pol.pick(exact, None) == exact
+    assert pol.pick(exact, 100.0) == exact
+    # Thin slack walks DOWN the ladder...
+    assert pol.pick(exact, 30.0) == eps
+    assert pol.pick(exact, 5.0) == bud
+    assert pol.pick(eps, 5.0) == bud
+    # ...but never UP: a caller's cheap tier is kept.
+    assert pol.pick(bud, 30.0) == bud
+    assert pol.pick(bud, 100.0) == bud
+    assert pol.pick(Tier.epsilon(0.4), 30.0) == Tier.epsilon(0.4)
+
+
+def test_batcher_rejects_tier_without_knn_mode(index):
+    b = SearchRequestBatcher(index, k=None, max_batch=4)
+    with pytest.raises(ValueError, match="k-NN mode"):
+        b.submit(np.zeros(LENGTH, np.float32), tier=Tier.epsilon(0.1))
+    b.stop()
+
+
+def test_router_rejects_tier_and_degrade_without_knn_mode(index):
+    with pytest.raises(ValueError, match="k-NN mode"):
+        ShardedSearchRouter(index, 2, k=None, degrade=TierDegradePolicy())
+    r = ShardedSearchRouter(index, 2, k=None, max_batch=4)
+    with pytest.raises(ValueError, match="k-NN mode"):
+        r.submit(np.zeros(LENGTH, np.float32), tier=Tier.budget(1))
+    r.stop()
+
+
+# ------------------------------------------------------- index-view tiers
+@pytest.mark.parametrize("k", [1, 4, 8])
+def test_exact_tier_bit_identical(raw, index, queries, k):
+    jqs = jnp.asarray(queries)
+    gd, gp = exact_knn_batch(index, jqs, k=k, round_size=ROUND)
+    d, p, ach = knn_batch_tiered(index, jqs, Tier.exact(), k=k,
+                                 round_size=ROUND)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(gp))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(gd))
+    assert np.all(np.asarray(ach) == 0.0)
+
+
+@pytest.mark.parametrize("k", [1, 4, 8])
+@pytest.mark.parametrize("eps", [0.0, 0.1, 0.5])
+def test_epsilon_guarantee_index_view(raw, index, queries, k, eps):
+    jqs = jnp.asarray(queries)
+    _, gp = exact_knn_batch(index, jqs, k=k, round_size=ROUND)
+    zraw = np.asarray(znorm(jnp.asarray(raw)))
+    zqs = np.asarray(znorm(jqs))
+    g_true = _true_dists(zraw, zqs, np.asarray(gp))
+    d, p, ach = knn_batch_tiered(index, jqs, Tier.epsilon(eps), k=k,
+                                 round_size=ROUND)
+    _guarantee(raw, queries, p, ach, g_true, eps)
+    # Reported distances are honest: they are real distances of the
+    # reported positions, ascending per row.
+    t_sq = _true_dists(zraw, zqs, np.asarray(p)) ** 2
+    np.testing.assert_allclose(np.asarray(d), t_sq, rtol=1e-3, atol=1e-3)
+    assert np.all(np.diff(np.asarray(d), axis=1) >= -1e-6)
+
+
+@pytest.mark.parametrize("rounds", [1, 3])
+def test_budget_certificate_index_view(raw, index, queries, rounds):
+    k = 4
+    jqs = jnp.asarray(queries)
+    _, gp = exact_knn_batch(index, jqs, k=k, round_size=ROUND)
+    zraw = np.asarray(znorm(jnp.asarray(raw)))
+    zqs = np.asarray(znorm(jqs))
+    g_true = _true_dists(zraw, zqs, np.asarray(gp))
+    d, p, ach = knn_batch_tiered(index, jqs, Tier.budget(rounds), k=k,
+                                 round_size=ROUND)
+    ach = np.asarray(ach)
+    t_true = _true_dists(zraw, zqs, np.asarray(p))
+    # The certificate is per query: whatever bound the budget BOUGHT must
+    # hold against ground truth.
+    assert np.all(t_true <= (1.0 + ach[:, None]) * g_true * SLACK)
+
+
+def test_mixed_batch_exact_rows_bit_exact(index, queries):
+    k = 4
+    jqs = jnp.asarray(queries)
+    engine = make_batch_engine(index, k=k, round_size=ROUND)
+    gd, gp = engine(jqs)
+    tiers = [Tier.exact(), Tier.epsilon(0.3), Tier.exact(),
+             Tier.budget(1), Tier.exact(), Tier.epsilon(0.0)]
+    d, p, ach = engine(jqs, tiers=tiers)
+    d, p, ach = np.asarray(d), np.asarray(p), np.asarray(ach)
+    for i, t in enumerate(tiers):
+        if t.kind == "exact":
+            np.testing.assert_array_equal(p[i], np.asarray(gp)[i])
+            np.testing.assert_array_equal(d[i], np.asarray(gd)[i])
+            assert ach[i] == 0.0
+        elif t.kind == "epsilon":
+            assert ach[i] <= t.eps + 1e-5
+        else:  # budget: certificate is whatever the rounds bought
+            assert ach[i] >= 0.0
+
+
+# ------------------------------------------------- packed view / mid-ingest
+def test_epsilon_guarantee_packed_view(raw, queries):
+    k = 4
+    jqs = jnp.asarray(queries)
+    # Two contiguous components, as Snapshot.components() would yield.
+    cut = 700
+    comps = [(build_index(jnp.asarray(raw[:cut]), segments=8), 0),
+             (build_index(jnp.asarray(raw[cut:]), segments=8), cut)]
+    packed = pack_components(comps)
+    full = build_index(jnp.asarray(raw), segments=8)
+    _, gp = exact_knn_batch(full, jqs, k=k, round_size=ROUND)
+    zraw = np.asarray(znorm(jnp.asarray(raw)))
+    zqs = np.asarray(znorm(jqs))
+    g_true = _true_dists(zraw, zqs, np.asarray(gp))
+    for seed in (None, packed_seed(comps, jqs)):
+        d, p, ach = knn_batch_packed_tiered(
+            packed, jqs, Tier.epsilon(0.2), k=k, round_size=ROUND,
+            seed=seed)
+        _guarantee(raw, queries, p, ach, g_true, 0.2)
+
+
+def test_tiers_mid_ingest(raw, queries):
+    k = 4
+    jqs = jnp.asarray(queries)
+    m = MutableIndex(build_index(jnp.asarray(raw[:800]), segments=8))
+    m.append(raw[800:1000])
+    m.append(raw[1000:])
+    gd, gp = map(np.asarray, m.exact_knn_batch(jqs, k=k, round_size=ROUND))
+    zraw = np.asarray(znorm(jnp.asarray(raw)))
+    zqs = np.asarray(znorm(jqs))
+    g_true = _true_dists(zraw, zqs, gp)
+    for fused in (True, False):
+        d, p, ach = m.knn_batch_tiered(jqs, Tier.epsilon(0.15), k=k,
+                                       fused=fused, round_size=ROUND)
+        _guarantee(raw, queries, p, ach, g_true, 0.15)
+        d, p, ach = m.knn_batch_tiered(jqs, Tier.exact(), k=k,
+                                       fused=fused, round_size=ROUND)
+        np.testing.assert_array_equal(np.asarray(p), gp)
+        np.testing.assert_array_equal(np.asarray(d), gd)
+
+
+# ------------------------------------------------------------- router path
+def test_router_tier_guarantee_and_stats(raw, index, queries):
+    k = 4
+    jqs = jnp.asarray(queries)
+    gd, gp = exact_knn_batch(index, jqs, k=k, round_size=ROUND)
+    zraw = np.asarray(znorm(jnp.asarray(raw)))
+    zqs = np.asarray(znorm(jqs))
+    g_true = _true_dists(zraw, zqs, np.asarray(gp))
+    r = ShardedSearchRouter(index, 3, k=k, max_batch=8, round_size=ROUND)
+    r.start()  # flush daemons: lone submits must not wait for a full batch
+    try:
+        # Exact through the router stays bit-exact.
+        d0, p0 = r.search_batch(queries)
+        np.testing.assert_array_equal(np.asarray(p0), np.asarray(gp))
+        np.testing.assert_array_equal(np.asarray(d0), np.asarray(gd))
+        # Epsilon through the fan-out: the conservatively combined
+        # (per-query max over shards) achieved bound still certifies.
+        d, p, ach = r.search_batch(queries, tier=Tier.epsilon(0.2))
+        _guarantee(raw, queries, p, ach, g_true, 0.2)
+        # Mixed per-request tiers via submit: tuple shape follows tier.
+        f_exact = r.submit(queries[0])
+        f_eps = r.submit(queries[1], tier=Tier.epsilon(0.2))
+        assert len(f_exact.result(timeout=30)) == 2
+        res = f_eps.result(timeout=30)
+        assert len(res) == 3 and float(res[2]) <= 0.2 + 1e-5
+        s = r.stats()
+        assert s["tiered_answered"] >= len(queries) + 1
+        assert s["achieved_eps_max"] <= 0.2 + 1e-5
+        assert s["degraded"] == 0  # no degrade policy installed
+    finally:
+        r.stop()
+
+
+def test_router_degrades_instead_of_shedding(index, queries):
+    # Deterministic trigger: every deadline below epsilon_slack_ms
+    # degrades exact -> epsilon at admission; deadline-less requests
+    # never degrade.
+    pol = TierDegradePolicy(epsilon_slack_ms=1e6, budget_slack_ms=1.0,
+                            epsilon=0.25)
+    r = ShardedSearchRouter(index, 2, k=4, max_batch=8, round_size=ROUND,
+                            degrade=pol)
+    r.start()
+    try:
+        futs = [r.submit(q, deadline_ms=5_000.0) for q in queries]
+        plain = r.submit(queries[0])
+        for f in futs:
+            res = f.result(timeout=30)
+            assert len(res) == 3  # answered, degraded to a certified tier
+            assert float(res[2]) <= 0.25 + 1e-5
+        assert len(plain.result(timeout=30)) == 2  # no deadline: exact
+        s = r.stats()
+        assert s["degraded"] == len(queries)
+        # tiered_answered sums per-shard sub-answers (S per request).
+        assert s["tiered_answered"] == len(queries) * 2
+    finally:
+        r.stop()
+
+
+# ------------------------------------------------------ hypothesis widening
+if hypothesis is not None:
+
+    @hypothesis.given(
+        eps=st.floats(0.0, 1.0, allow_nan=False),
+        k=st.sampled_from([1, 4, 8]),
+        qseed=st.integers(0, 10 ** 6),
+    )
+    @hypothesis.settings(max_examples=15, deadline=None)
+    def test_epsilon_guarantee_randomized(eps, k, qseed):
+        raw = _RAND_RAW
+        index = _RAND_INDEX
+        qs = np.random.default_rng(qseed).standard_normal(
+            (3, LENGTH)).cumsum(axis=1).astype(np.float32)
+        jqs = jnp.asarray(qs)
+        _, gp = exact_knn_batch(index, jqs, k=k, round_size=ROUND)
+        zraw = np.asarray(znorm(jnp.asarray(raw)))
+        zqs = np.asarray(znorm(jqs))
+        g_true = _true_dists(zraw, zqs, np.asarray(gp))
+        _, p, ach = knn_batch_tiered(index, jqs, Tier.epsilon(eps), k=k,
+                                     round_size=ROUND)
+        _guarantee(raw, qs, p, ach, g_true, eps)
+
+    @hypothesis.given(
+        rounds=st.integers(1, 6),
+        qseed=st.integers(0, 10 ** 6),
+    )
+    @hypothesis.settings(max_examples=10, deadline=None)
+    def test_budget_certificate_randomized(rounds, qseed):
+        raw, index, k = _RAND_RAW, _RAND_INDEX, 4
+        qs = np.random.default_rng(qseed).standard_normal(
+            (3, LENGTH)).cumsum(axis=1).astype(np.float32)
+        jqs = jnp.asarray(qs)
+        _, gp = exact_knn_batch(index, jqs, k=k, round_size=ROUND)
+        zraw = np.asarray(znorm(jnp.asarray(raw)))
+        zqs = np.asarray(znorm(jqs))
+        g_true = _true_dists(zraw, zqs, np.asarray(gp))
+        _, p, ach = knn_batch_tiered(index, jqs, Tier.budget(rounds), k=k,
+                                     round_size=ROUND)
+        ach = np.asarray(ach)
+        t_true = _true_dists(zraw, zqs, np.asarray(p))
+        assert np.all(t_true <= (1.0 + ach[:, None]) * g_true * SLACK)
+
+    # Shared across examples (hypothesis bodies must not rebuild indexes
+    # per example; the guarantee must hold for ANY query against them).
+    _RAND_RAW = _make_raw(n=900, rng=np.random.default_rng(5))
+    _RAND_INDEX = build_index(jnp.asarray(_RAND_RAW), segments=8)
