@@ -1,0 +1,184 @@
+"""Cold-tier benchmark: bytes-read-per-query accounting + parity matrix.
+
+The claim under measurement is the ParIS+ pruning story carried to disk:
+once a store is demoted to the cold tier (SAX summaries and the bucket
+table hot, raw series on disk in leaf order behind the pointer-index
+catalog), an exact query touches only the byte ranges its surviving
+buckets name — a small fraction of the raw file — instead of scanning
+it. Legs:
+
+  demote        — one major demotion of the ingested store: leaf-order
+                  permute + spill + catalog + manifest commit (the
+                  write-side cost of moving the base to disk),
+  cold_query    — warm exact k-NN per-query latency over the demoted
+                  store, LRU block cache budgeted at 1/8 of the raw
+                  bytes (the store-exceeds-RAM operating point),
+  mem_query     — the same queries over an all-in-memory from-scratch
+                  index (the baseline the cold path must stay bit-exact
+                  against),
+  bytes/query   — the accounting leg: a budget-0 cache counts every
+                  byte pulled from disk with zero reuse between
+                  accesses, so ``bytes_read / Q`` is a strict upper
+                  bound on what one query touches.  The figure that
+                  gates is ``bytes_read_ratio`` = bytes-per-query over
+                  the full raw file size: machine-independent (a pure
+                  pruning property of engine + data), committed in
+                  ``BENCH_coldtier.json``, and checked in CI via
+                  ``check_regression.py --max-bytes-read-ratio`` — the
+                  acceptance bar is >= 10x below a full scan.
+
+Parity matrix: the same query batch is answered at cache budgets 0
+(re-read everything), raw/8 (constant eviction) and unlimited, and every
+answer — distances AND positions — must be bit-identical to the
+in-memory index's. This is the ``--strict-parity`` verdict CI gates on:
+the cache may only decide what is re-read, never what is returned.
+
+    PYTHONPATH=src:. python benchmarks/bench_coldtier.py [--tiny]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import dataset
+from repro.core import (
+    BlockCache, MutableIndex, build_index, exact_knn_batch,
+)
+
+K = 8
+ROUND_SIZE = 512
+BLOCK_ROWS = 8
+LENGTH = 256
+
+
+def run(tiny: bool = False):
+    n = 10_000 if tiny else 40_000
+    n_queries = 16 if tiny else 32
+    data = dataset(n, LENGTH)
+    rng = np.random.default_rng(13)
+    qs = jnp.asarray(
+        rng.standard_normal((n_queries, LENGTH)).cumsum(axis=1), jnp.float32)
+    full_scan_bytes = n * LENGTH * 4
+
+    workdir = tempfile.mkdtemp(prefix="paris_bench_cold_")
+    try:
+        m = MutableIndex(series_length=LENGTH, workdir=workdir,
+                         cold_cache=BlockCache(budget_bytes=0,
+                                               block_rows=BLOCK_ROWS))
+        m.append(data)
+        m.compact(tier="minor")
+        t0 = time.perf_counter()
+        m.demote()
+        demote_s = time.perf_counter() - t0
+        shard = m.snapshot().cold[0]
+
+        ref = build_index(jnp.asarray(data))
+        want_d, want_p = exact_knn_batch(ref, qs, k=K,
+                                         round_size=ROUND_SIZE)
+        want_d, want_p = np.asarray(want_d), np.asarray(want_p)
+
+        def _cold_batch():
+            d, p = m.exact_knn_batch(qs, k=K, round_size=ROUND_SIZE)
+            jax.block_until_ready((d, p))
+            return np.asarray(d), np.asarray(p)
+
+        # --- parity matrix: budgets {0, raw/8, unlimited}, same bits ---
+        results = []
+        budgets = [0, full_scan_bytes // 8, None]
+        for budget in budgets:
+            shard.reader.cache = BlockCache(budget_bytes=budget,
+                                            block_rows=BLOCK_ROWS)
+            got_d, got_p = _cold_batch()
+            ok = (np.array_equal(want_d, got_d)
+                  and np.array_equal(want_p, got_p))
+            results.append(dict(
+                name=f"parity@budget={budget}", parity=bool(ok)))
+
+        # --- bytes-read accounting: budget 0 = strict per-access count --
+        shard.reader.cache = BlockCache(budget_bytes=0,
+                                        block_rows=BLOCK_ROWS)
+        _cold_batch()
+        acct = shard.reader.cache.stats()
+        bytes_per_query = acct["bytes_read"] / n_queries
+        ratio = bytes_per_query / full_scan_bytes
+
+        # --- latency legs (warm) at the budgeted operating point --------
+        shard.reader.cache = BlockCache(budget_bytes=full_scan_bytes // 8,
+                                        block_rows=BLOCK_ROWS)
+        _cold_batch()  # warm the compiled engine + prime the cache
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            _cold_batch()
+        cold_us = (time.perf_counter() - t0) / (reps * n_queries) * 1e6
+
+        def _mem_batch():
+            d, p = exact_knn_batch(ref, qs, k=K, round_size=ROUND_SIZE)
+            jax.block_until_ready((d, p))
+
+        _mem_batch()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            _mem_batch()
+        mem_us = (time.perf_counter() - t0) / (reps * n_queries) * 1e6
+
+        rows = [
+            ("cold_demote",
+             demote_s * 1e6,
+             f"n={n} leaf-order spill + catalog + manifest"),
+            ("cold_query",
+             cold_us,
+             f"n={n} k={K} budget=raw/8 "
+             f"{cold_us / max(mem_us, 1e-9):.2f}x mem"),
+            ("cold_mem_query", mem_us, f"n={n} k={K} all-in-memory"),
+            ("cold_bytes_per_query",
+             0.0,
+             f"{bytes_per_query:.0f}B of {full_scan_bytes}B "
+             f"(ratio {ratio:.4f}, {1 / max(ratio, 1e-9):.0f}x below "
+             f"full scan) parity={all(e['parity'] for e in results)}"),
+        ]
+        report = dict(
+            n=n, n_queries=n_queries, k=K, round_size=ROUND_SIZE,
+            block_rows=BLOCK_ROWS,
+            results=results,
+            bytes_per_query=bytes_per_query,
+            full_scan_bytes_per_query=float(full_scan_bytes),
+            bytes_read_ratio=ratio,
+            demote_s=demote_s,
+            cold_query_us=cold_us,
+            mem_query_us=mem_us,
+        )
+        return rows, report
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", "--quick", action="store_true", dest="tiny")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the scalar report (the committed "
+                         "BENCH_coldtier.json baseline)")
+    args = ap.parse_args()
+    rows, report = run(tiny=args.tiny)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+    if not all(e["parity"] for e in report["results"]):
+        raise SystemExit("cold-tier parity violated")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,10 @@ exits nonzero when:
     fused-view repack work more than ``--max-pack-amplification`` x one
     from-scratch pack (the O(delta) refresh witness), or a worst
     query-under-ingest latency more than ``--max-ingest-spike`` x the
-    idle average (see :func:`check_ingest_ratios`).
+    idle average (see :func:`check_ingest_ratios`), or
+  * the cold-tier scalar report (when present) shows queries reading
+    more than ``--max-bytes-read-ratio`` of the raw file per query
+    (see :func:`check_coldtier_ratios`).
 
 Normalization: committed baselines are recorded on one machine and
 checked on another, so raw ratios confound hardware speed with real
@@ -107,6 +110,33 @@ def check_ingest_ratios(
     return problems
 
 
+def check_coldtier_ratios(
+    report: dict,
+    *,
+    max_bytes_read_ratio: float = 0.1,
+) -> list:
+    """Machine-independent gate over the cold-tier scalar report.
+
+    ``bytes_read_ratio`` is bytes pulled from disk per query (budget-0
+    cache: every access counted, zero reuse) over the raw file size — a
+    pure pruning property of engine + data, independent of runner speed.
+    The default bar (0.1 = queries touch >= 10x less than a full scan)
+    is the cold tier's reason to exist: if the pointer index or the
+    engine's early exit regresses, queries degenerate toward scanning
+    the raw file and this trips long before latency gates would.
+    """
+    problems = []
+    ratio = report.get("bytes_read_ratio")
+    if ratio and ratio > max_bytes_read_ratio:
+        problems.append(
+            f"cold-tier bytes-read ratio {ratio:.4f} exceeds "
+            f"{max_bytes_read_ratio} ({report.get('bytes_per_query', 0):.0f}"
+            f"B/query vs {report.get('full_scan_bytes_per_query', 0):.0f}B "
+            "full scan): queries are reading far more of the raw file "
+            "than their surviving buckets name")
+    return problems
+
+
 def compare(
     current: dict,
     baseline: dict,
@@ -179,6 +209,10 @@ def main() -> None:
                     help="max packed-view rows repacked across all swaps "
                          "over one from-scratch pack of the final store "
                          "(default 3.0; incremental ~1, scratch ~builds)")
+    ap.add_argument("--max-bytes-read-ratio", type=float, default=0.1,
+                    help="max cold-tier bytes-read-per-query over the "
+                         "full raw file size (default 0.1 — queries must "
+                         "touch >= 10x less than a full scan)")
     args = ap.parse_args()
     with open(args.report) as f:
         current = json.load(f)
@@ -193,6 +227,10 @@ def main() -> None:
             ingest, max_durability_tax=args.max_durability_tax,
             max_ingest_spike=args.max_ingest_spike,
             max_pack_amplification=args.max_pack_amplification)
+    coldtier = current.get("reports", {}).get("coldtier")
+    if coldtier is not None:
+        problems += check_coldtier_ratios(
+            coldtier, max_bytes_read_ratio=args.max_bytes_read_ratio)
     for p in problems:
         print(f"BENCH-REGRESSION: {p}", file=sys.stderr)
     if problems:

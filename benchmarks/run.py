@@ -34,9 +34,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_batch_query, bench_build, bench_classifier,
-                            bench_ingest, bench_knn_topk, bench_lower_bound,
-                            bench_pruning, bench_query, bench_router_faults,
-                            bench_search_batcher, bench_tiers, roofline_table)
+                            bench_coldtier, bench_ingest, bench_knn_topk,
+                            bench_lower_bound, bench_pruning, bench_query,
+                            bench_router_faults, bench_search_batcher,
+                            bench_tiers, roofline_table)
     from benchmarks.common import emit
 
     # Each registry entry returns (rows, parity): parity is the bench's own
@@ -67,6 +68,15 @@ def main() -> None:
         reports["ingest"] = report
         return rows, all(e["parity"] for e in report["results"])
 
+    def _coldtier(quick):
+        rows, report = bench_coldtier.run(tiny=quick)
+        # Keep the scalar report: check_regression's machine-independent
+        # bytes-read-ratio gate (--max-bytes-read-ratio) reads it from
+        # the JSON artifact. Parity here is the cache-budget matrix —
+        # identical bits at budgets {0, raw/8, unlimited}.
+        reports["coldtier"] = report
+        return rows, all(e["parity"] for e in report["results"])
+
     benches = {
         "lower_bound":
             lambda quick: (bench_lower_bound.run(quick=quick), None),
@@ -78,6 +88,7 @@ def main() -> None:
         "search_batcher": lambda quick: bench_search_batcher.run(tiny=quick),
         "router_faults": lambda quick: bench_router_faults.run(tiny=quick),
         "ingest": _ingest,
+        "coldtier": _coldtier,
         "pruning": lambda quick: (bench_pruning.run(quick=quick), None),
         "classifier": lambda quick: (bench_classifier.run(quick=quick), None),
         "roofline": lambda quick: (roofline_table.run(quick=quick), None),

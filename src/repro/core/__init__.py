@@ -30,6 +30,15 @@ from repro.core.search import (
 from repro.core.build_pipeline import (
     BuildStats, PipelineBuilder, bulk_load_chunk, merge_runs,
 )
+from repro.core.block_cache import BlockCache, ColdReader
+from repro.core.coldtier import (
+    ColdShard,
+    cold_exact_knn_batch,
+    cold_exact_search_batch,
+    cold_knn_batch_tiered,
+    load_cold_shard,
+    make_cold_batch_engine,
+)
 from repro.core.datagen import SeriesSource, random_walk
 from repro.core.ingest import (
     CompactionPolicy,
@@ -49,6 +58,9 @@ __all__ = [
     "exact_search_batch_packed", "exact_search_single", "make_batch_engine",
     "merge_top_lists", "nb_exact_search", "pack_components",
     "BuildStats", "PipelineBuilder", "bulk_load_chunk", "merge_runs",
+    "BlockCache", "ColdReader", "ColdShard", "cold_exact_knn_batch",
+    "cold_exact_search_batch", "cold_knn_batch_tiered", "load_cold_shard",
+    "make_cold_batch_engine",
     "SeriesSource", "random_walk",
     "CompactionPolicy", "CompactionResult", "DeltaShard", "IngestPipeline",
     "MutableIndex", "build_delta_shard",

@@ -49,8 +49,18 @@ import numpy as np
 
 MANIFEST = "MANIFEST.json"
 MANIFEST_TMP = MANIFEST + ".tmp"
-MANIFEST_FORMAT = 1
+# Format 2 (this repo's cold tier) adds the ``cold`` component list; v1
+# stores (no cold tier) are still read — see read_manifest.
+MANIFEST_FORMAT = 2
+_READABLE_FORMATS = (1, 2)
 _COMPONENT_FILES = ("keys.npy", "sax.npy", "pos.npy", "raw.npy")
+
+# The cold tier's pointer-index catalog (written by ``core.coldtier``)
+# lives next to the manifest. The constants and the dir scan live HERE so
+# gc_orphans can honor catalog references without importing coldtier
+# (coldtier imports this module's spill/fsync helpers).
+COLD_CATALOG = "COLD_CATALOG.json"
+COLD_CATALOG_TMP = COLD_CATALOG + ".tmp"
 
 Fault = Optional[Callable[[str], None]]
 
@@ -134,13 +144,18 @@ class Manifest:
     base: Optional[ComponentRef]
     runs: Tuple[ComponentRef, ...]
     deltas: Tuple[ComponentRef, ...]
+    # Cold-tier components (format 2): demoted epochs whose raw series
+    # stay on disk. They own the LOWEST file offsets; a live base (if
+    # any) starts where the cold tier ends (its ComponentRef.base).
+    cold: Tuple[ComponentRef, ...] = ()
 
     @property
     def num_series(self) -> int:
-        """Total series across base + runs + deltas."""
+        """Total series across cold + base + runs + deltas."""
         n = self.base.num_series if self.base else 0
-        return n + sum(r.num_series for r in self.runs) + sum(
-            d.num_series for d in self.deltas)
+        return (n + sum(c.num_series for c in self.cold)
+                + sum(r.num_series for r in self.runs)
+                + sum(d.num_series for d in self.deltas))
 
 
 def write_manifest(workdir: str, man: Manifest, fault: Fault = None) -> None:
@@ -161,6 +176,7 @@ def write_manifest(workdir: str, man: Manifest, fault: Fault = None) -> None:
         base=man.base.to_json() if man.base else None,
         runs=[r.to_json() for r in man.runs],
         deltas=[d.to_json() for d in man.deltas],
+        cold=[c.to_json() for c in man.cold],
     )
     tmp = os.path.join(workdir, MANIFEST_TMP)
     _fire(fault, f"commit:tmp:v{man.version}")
@@ -181,11 +197,16 @@ def read_manifest(workdir: str) -> Optional[Manifest]:
         return None
     with open(path) as f:
         doc = json.load(f)
-    if doc.get("format") != MANIFEST_FORMAT:
+    if doc.get("format") not in _READABLE_FORMATS:
         raise ValueError(
             f"unsupported manifest format {doc.get('format')!r} in "
             f"{workdir}")
+    # Backward-compatible v1 read: pre-cold-tier stores carry no "cold"
+    # list; they open as all-hot stores (and commit as format 2 from the
+    # next manifest write on).
     return Manifest(
+        cold=tuple(ComponentRef.from_json(c)
+                   for c in doc.get("cold", ())),
         version=int(doc["version"]),
         next_epoch=int(doc["next_epoch"]),
         series_length=int(doc["series_length"]),
@@ -242,11 +263,20 @@ def spill_component(
                         num_series=int(len(keys)))
 
 
-def load_component(workdir: str, ref: ComponentRef) -> tuple:
-    """(keys, sax, pos_local, raw) host arrays of one committed component."""
+def load_component(workdir: str, ref: ComponentRef,
+                   mmap_mode: Optional[str] = None) -> tuple:
+    """(keys, sax, pos_local, raw) host arrays of one committed component.
+
+    ``mmap_mode="r"`` maps the arrays instead of reading them eagerly —
+    the raw matrix (by far the component's bulk) then enters memory one
+    page at a time as it is consumed, so recovering a large store
+    (``MutableIndex.recover``) never double-buffers every raw series
+    through a host copy before the device upload.
+    """
     d = os.path.join(workdir, ref.dir)
     keys, sax, pos, raw = (
-        np.load(os.path.join(d, f)) for f in _COMPONENT_FILES)
+        np.load(os.path.join(d, f), mmap_mode=mmap_mode)
+        for f in _COMPONENT_FILES)
     with open(os.path.join(d, "meta.json")) as f:
         meta = json.load(f)
     if meta["num_series"] != ref.num_series or meta["base"] != ref.base:
@@ -256,21 +286,46 @@ def load_component(workdir: str, ref: ComponentRef) -> tuple:
     return keys, sax, pos, raw
 
 
+def catalog_dirs(workdir: str) -> set:
+    """Epoch dirs the cold-tier pointer-index catalog references.
+
+    A minimal read of ``COLD_CATALOG.json`` (full read/write lives in
+    ``core.coldtier``): just the referenced dir names, tolerant of a
+    missing file (no cold tier yet). GC must treat these as live even
+    when the manifest does not reference them — the demotion protocol
+    commits the catalog BEFORE the manifest, so in the crash window
+    between the two commits the new cold epoch is referenced only here
+    (recovery reconciles the catalog back to the manifest, after which
+    the dir really is an orphan).
+    """
+    path = os.path.join(workdir, COLD_CATALOG)
+    if not os.path.exists(path):
+        return set()
+    with open(path) as f:
+        doc = json.load(f)
+    return set(doc.get("epochs", {}))
+
+
 def gc_orphans(workdir: str, man: Manifest, fault: Fault = None) -> list:
-    """Remove epoch dirs the manifest does not reference (+ stale tmp).
+    """Remove epoch dirs neither the manifest nor the cold catalog
+    references (+ stale tmp files).
 
     Orphans are the residue of interrupted spills and interrupted GCs;
     they are never loaded, so removal is safe at any time the manifest is
-    current. Returns the removed names (for logging/tests).
+    current. A catalog-referenced dir is NEVER swept here, whatever the
+    manifest says — see :func:`catalog_dirs`. Returns the removed names
+    (for logging/tests).
     """
     live = {r.dir for r in man.runs} | {d.dir for d in man.deltas}
+    live |= {c.dir for c in man.cold}
+    live |= catalog_dirs(workdir)
     if man.base:
         live.add(man.base.dir)
     removed = []
     for entry in sorted(os.listdir(workdir)):
         path = os.path.join(workdir, entry)
-        if entry == MANIFEST_TMP:
-            _fire(fault, "gc:manifest-tmp")
+        if entry in (MANIFEST_TMP, COLD_CATALOG_TMP):
+            _fire(fault, f"gc:{entry}")
             os.remove(path)
             removed.append(entry)
         elif (os.path.isdir(path) and entry.startswith("e")

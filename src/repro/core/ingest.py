@@ -88,7 +88,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import durable, isax
+from repro.core import coldtier, durable, isax
+from repro.core.block_cache import BlockCache
 from repro.core.build_pipeline import (
     _host_refine_key, bulk_load_chunk, merge_runs,
 )
@@ -132,14 +133,18 @@ class DeltaShard:
 class Snapshot:
     """An immutable, complete view of the mutable index at one instant.
 
-    The three tiers in ascending file-offset order: ``base`` covers
-    ``[0, base.num_series)``, ``runs`` (minor-compaction output) cover the
-    next contiguous ranges, ``deltas`` (raw appends) the newest ranges at
-    the tail — runs are always older, therefore lower, than every live
-    delta. ``components()`` lists (index, offset) pairs in that order —
-    the partition every reader fans out over (or packs into one fused
-    sweep). ``base_keys`` rides along so compaction never recomputes the
-    base run's keys.
+    The tiers in ascending file-offset order: ``cold`` (demoted epochs —
+    raw on disk, summaries hot; see ``core.coldtier``) owns the lowest
+    offsets ``[0, base_offset)``, ``base`` covers ``[base_offset,
+    base_offset + base.num_series)``, ``runs`` (minor-compaction output)
+    cover the next contiguous ranges, ``deltas`` (raw appends) the newest
+    ranges at the tail — runs are always older, therefore lower, than
+    every live delta. ``components()`` lists the IN-MEMORY tiers as
+    (index, offset) pairs in that order — the partition the hot fan-out
+    (or the fused packed sweep) covers; readers serve ``cold`` through
+    its own disk-backed engines and merge, exactly like another shard.
+    ``base_keys`` rides along so compaction never recomputes the base
+    run's keys.
     """
 
     base: ParISIndex
@@ -147,19 +152,22 @@ class Snapshot:
     runs: Tuple[DeltaShard, ...] = ()
     deltas: Tuple[DeltaShard, ...] = ()
     version: int = 0
+    cold: Tuple[coldtier.ColdShard, ...] = ()  # ascending, from offset 0
+    base_offset: int = 0  # where the hot base starts (== total cold)
 
     @property
     def num_series(self) -> int:
-        """Total series visible in this snapshot."""
-        return (self.base.num_series
+        """Total series visible in this snapshot (all tiers)."""
+        return (sum(c.num_series for c in self.cold)
+                + self.base.num_series
                 + sum(r.num_series for r in self.runs)
                 + sum(d.num_series for d in self.deltas))
 
     def components(self) -> list:
-        """(index, file offset) pairs in ascending offset order."""
+        """In-memory (index, file offset) pairs, ascending offset order."""
         out = []
         if self.base.num_series:
-            out.append((self.base, 0))
+            out.append((self.base, self.base_offset))
         out.extend((r.index, r.base) for r in self.runs)
         out.extend((d.index, d.base) for d in self.deltas)
         return out
@@ -187,12 +195,20 @@ class CompactionPolicy:
     ``leveled=False`` restores the PR-4 behavior: the delta trigger folds
     EVERYTHING into the base (one unbounded merge) — kept as the
     benchmark baseline the leveled scheme is measured against.
+
+    ``demote_major=True`` turns every major fold into a DEMOTION on a
+    durable store: the merged base+runs component lands in the cold tier
+    (SAX + bucket table hot, raw series on disk behind the block cache —
+    see ``core.coldtier``) instead of a new in-memory base. This is how
+    the store exceeds RAM: the oldest, largest tier stops costing raw
+    bytes of host memory while staying bit-exact to query.
     """
 
     max_deltas: int = 4
     max_delta_series: Optional[int] = None
     major_ratio: float = 0.5
     leveled: bool = True
+    demote_major: bool = False
 
     def __post_init__(self):
         if not self.major_ratio > 0:
@@ -235,6 +251,7 @@ class CompactionResult:
     snapshot: Snapshot  # the published post-compaction snapshot
     merge_time: float  # seconds spent merging (unlocked, concurrent)
     stall_time: float  # seconds writers were blocked by the publish swap
+    cold: Optional[coldtier.ColdShard] = None  # the demoted epoch, if any
 
     @property
     def retired(self) -> Tuple[DeltaShard, ...]:
@@ -524,6 +541,7 @@ class MutableIndex:
         workdir: Optional[str] = None,
         fault: durable.Fault = None,
         pack_block: int = 128,
+        cold_cache: Optional[BlockCache] = None,
     ):
         if base is None:
             if series_length is None:
@@ -539,6 +557,8 @@ class MutableIndex:
         base_keys = _host_refine_key(
             np.asarray(base.sax), refine_bits, base.cardinality)
         self._snapshot = Snapshot(base, base_keys)
+        self._cold_cache = (cold_cache if cold_cache is not None
+                            else BlockCache())
         self._init_runtime()
         self.workdir = workdir
         self._fault = fault
@@ -574,6 +594,7 @@ class MutableIndex:
         self._stats = dict(
             appends=0, appended_series=0, convert_time=0.0,
             compactions=0, compacted_series=0,
+            demotions=0, demoted_series=0,
             merge_time=0.0, stall_time_max=0.0,
             spills=0, spill_time=0.0, group_commits=0,
             spill_queue_depth_max=0,
@@ -615,6 +636,8 @@ class MutableIndex:
             base=self._base_ref,
             runs=tuple(ref(r) for r in snap.runs),
             deltas=tuple(ref(d) for d in snap.deltas),
+            cold=tuple(durable.ComponentRef(c.dir, c.base, c.num_series)
+                       for c in snap.cold),
         )
 
     def _spill_shard(
@@ -630,6 +653,40 @@ class MutableIndex:
             self._stats["spills"] += 1
             self._stats["spill_time"] += dt
 
+    def _spill_cold(
+        self, name: str, keys: np.ndarray, merged: ParISIndex, offset: int
+    ) -> coldtier.ColdShard:
+        """Spill ``merged`` as a cold epoch and commit its catalog entry.
+
+        Steps 1-2 of the demotion protocol: raw rows are PERMUTED TO
+        LEAF ORDER on the way out (each bucket becomes one contiguous
+        byte range — the pointer index's invariant), then the catalog
+        entry commits atomically. The manifest has NOT moved yet: a
+        crash after this leaves a catalog entry recovery prunes, never
+        a visible state change.
+        """
+        t0 = time.perf_counter()
+        pos_local = np.asarray(merged.pos)
+        raw_leaf = np.asarray(merged.raw)[pos_local]
+        ref = coldtier.spill_cold_component(
+            self.workdir, name, keys, np.asarray(merged.sax), pos_local,
+            raw_leaf, base=offset, series_length=self.series_length,
+            fault=self._fault)
+        entry = coldtier.epoch_entry(
+            self.workdir, name, base=offset,
+            num_series=merged.num_series,
+            series_length=self.series_length,
+            bucket_offsets=merged.bucket_offsets)
+        coldtier.catalog_add(self.workdir, name, entry, self._fault)
+        shard = coldtier.load_cold_shard(
+            self.workdir, ref, cache=self._cold_cache,
+            segments=self.segments, cardinality=self.cardinality)
+        dt = time.perf_counter() - t0
+        with self._mutate:
+            self._stats["spills"] += 1
+            self._stats["spill_time"] += dt
+        return shard
+
     @classmethod
     def recover(
         cls,
@@ -638,15 +695,25 @@ class MutableIndex:
         impl: str = "auto",
         fault: durable.Fault = None,
         pack_block: int = 128,
+        cold_cache: Optional[BlockCache] = None,
     ) -> "MutableIndex":
         """Reopen a durable store at its last committed manifest.
 
         The reloaded snapshot is bit-exact: every array round-trips
         through ``.npy`` losslessly and bucket offsets / engines are
         rebuilt deterministically, so search answers equal a from-scratch
-        build over every acknowledged append. Orphan ``e{N}`` dirs (an
-        interrupted spill or GC) are swept; the store then resumes normal
-        durable operation from ``next_epoch``.
+        build over every acknowledged append. Hot components load their
+        raw series through ``mmap_mode="r"`` (streamed to the device
+        without an eager host copy); cold epochs load only their
+        summaries — the raw matrix stays on disk behind ``cold_cache``
+        (a fresh unlimited :class:`~repro.core.block_cache.BlockCache`
+        by default), so reopening a mostly-cold store never pulls its
+        raw bytes into RAM. The pointer-index catalog is reconciled
+        against the manifest (pruning the entry of a demotion that
+        crashed between its catalog and manifest commits); orphan
+        ``e{N}`` dirs (an interrupted spill, GC, or that pruned epoch)
+        are then swept, and the store resumes normal durable operation
+        from ``next_epoch``.
         """
         man = durable.read_manifest(workdir)
         if man is None:
@@ -662,9 +729,11 @@ class MutableIndex:
         self._fault = fault
         self._next_epoch = man.next_epoch
         self._base_ref = man.base
+        self._cold_cache = (cold_cache if cold_cache is not None
+                            else BlockCache())
         if man.base is not None:
             base_keys, sax, pos, raw = durable.load_component(
-                workdir, man.base)
+                workdir, man.base, mmap_mode="r")
             base = assemble_index(sax, pos, jnp.asarray(raw),
                                   man.segments, man.cardinality)
         else:
@@ -673,19 +742,33 @@ class MutableIndex:
             base_keys = np.zeros((0,), np.uint64)
 
         def shard(ref: durable.ComponentRef) -> DeltaShard:
-            keys, sax, pos, raw = durable.load_component(workdir, ref)
+            keys, sax, pos, raw = durable.load_component(
+                workdir, ref, mmap_mode="r")
             return DeltaShard(
                 index=assemble_index(sax, pos, jnp.asarray(raw),
                                      man.segments, man.cardinality),
                 keys=keys, base=ref.base, dir=ref.dir)
 
+        cold = tuple(
+            coldtier.load_cold_shard(
+                workdir, ref, cache=self._cold_cache,
+                segments=man.segments, cardinality=man.cardinality)
+            for ref in man.cold)
+        base_offset = (man.base.base if man.base is not None
+                       else (cold[-1].base + cold[-1].num_series
+                             if cold else 0))
         self._snapshot = Snapshot(
             base, base_keys,
             tuple(shard(r) for r in man.runs),
             tuple(shard(d) for d in man.deltas),
             man.version,
+            cold=cold, base_offset=base_offset,
         )
         self._init_runtime()
+        # Reconcile BEFORE the orphan sweep: a pruned (manifest-less)
+        # catalog entry stops protecting its dir, so the sweep can then
+        # reclaim the half-committed demotion.
+        coldtier.reconcile_catalog(workdir, man, cold, fault)
         durable.gc_orphans(workdir, man, fault)
         return self
 
@@ -865,6 +948,7 @@ class MutableIndex:
         self,
         tier: str = "full",
         on_before_publish: Optional[Callable[[], None]] = None,
+        demote: bool = False,
     ) -> Optional[CompactionResult]:
         """Fold one tier; linear merges only, bounded by the tier's size.
 
@@ -885,24 +969,45 @@ class MutableIndex:
         commits before the swap, and the retired components' dirs are
         GC'd only after. Returns None when the tier has nothing to fold.
 
+        ``demote=True`` (major/full, durable stores only) sends the
+        merged component to the COLD tier instead of a new in-memory
+        base: the merge spills in leaf-order raw layout
+        (``core.coldtier``), the pointer-index catalog commits, THEN the
+        manifest commits, and the published snapshot carries an empty
+        base above the new cold epoch. Every crash point of that
+        protocol recovers to a committed state (swept in
+        ``tests/test_coldtier.py``). A demotion is allowed to fold a
+        lone base (nothing due in the runs/deltas) — that is how an
+        idle store is pushed below RAM.
+
         ``on_before_publish`` is a test hook that runs after the merge but
         before the swap — the window where "mid-compaction" is observable.
         """
         if tier not in ("minor", "major", "full"):
             raise ValueError(f"unknown compaction tier {tier!r}")
+        if demote:
+            if tier == "minor":
+                raise ValueError("demotion folds the base: use tier="
+                                 "'major' or 'full'")
+            if not self.durable:
+                raise ValueError(
+                    "demotion requires a durable store (workdir): the "
+                    "cold tier reads raw series from disk")
         with self._compact:
             snap = self._snapshot
             fold_runs = snap.runs if tier in ("major", "full") else ()
             fold_deltas = snap.deltas if tier in ("minor", "full") else ()
             with_base = tier in ("major", "full")
-            if not fold_runs and not fold_deltas:
+            if not fold_runs and not fold_deltas and not (
+                    demote and snap.base.num_series):
                 return None
             t0 = time.perf_counter()
             parts = []
             if with_base and snap.base.num_series:
                 parts.append((snap.base_keys,
                               [np.asarray(snap.base.sax),
-                               np.asarray(snap.base.pos)]))
+                               np.asarray(snap.base.pos)
+                               + np.int32(snap.base_offset)]))
             shards = list(fold_runs) + list(fold_deltas)
             for s in shards:
                 parts.append((s.keys,
@@ -910,29 +1015,33 @@ class MutableIndex:
                                np.asarray(s.index.pos)
                                + np.int32(s.base)]))
             keys, (sax_sorted, pos_sorted) = merge_runs(parts)
-            offset = 0 if with_base else shards[0].base
+            offset = snap.base_offset if with_base else shards[0].base
             raws = ([snap.base.raw] if with_base and snap.base.num_series
                     else []) + [s.index.raw for s in shards]
             raw = jnp.concatenate(raws) if len(raws) > 1 else raws[0]
             merged = assemble_index(
                 sax_sorted, pos_sorted - np.int32(offset), raw,
                 self.segments, self.cardinality)
-            merged_shard = None
+            cold_shard = None
             name = None
             if self.durable:
                 with self._ticket_lock:
                     name = self._alloc_epoch()
                 # Spill OUTSIDE the commit lock: the dir is an orphan
-                # until a manifest references it, so appends keep
-                # committing.
-                self._spill_shard(name, keys, merged, offset)
+                # until a manifest (or, for a demotion, the catalog)
+                # references it, so appends keep committing.
+                if demote:
+                    cold_shard = self._spill_cold(name, keys, merged,
+                                                  offset)
+                else:
+                    self._spill_shard(name, keys, merged, offset)
             merge_time = time.perf_counter() - t0
             if on_before_publish is not None:
                 on_before_publish()
             t1 = time.perf_counter()
             result, old_base_dir = self._publish_compaction(
                 tier, snap, merged, keys, name, len(fold_deltas),
-                fold_runs, fold_deltas, merge_time, t1)
+                fold_runs, fold_deltas, merge_time, t1, cold_shard)
             if self.durable:
                 # GC after the commit made the retirees unreferenced; a
                 # crash mid-GC leaves orphans the next recovery sweeps.
@@ -946,7 +1055,7 @@ class MutableIndex:
 
     def _publish_compaction(
         self, tier, snap, merged, keys, name, n_deltas_folded,
-        fold_runs, fold_deltas, merge_time, t1,
+        fold_runs, fold_deltas, merge_time, t1, cold_shard=None,
     ) -> tuple:
         """Swap in the post-fold snapshot (and commit it, when durable).
 
@@ -955,6 +1064,8 @@ class MutableIndex:
         first ``n_deltas_folded`` deltas of the *current* snapshot are
         exactly the ones merged; everything after arrived during the
         merge and survives. Runs cannot change during a merge at all.
+        A demotion (``cold_shard``) publishes an EMPTY base directly
+        above the new cold epoch.
         """
         old_base_dir = None
         locks = [self._commit] if self.durable else []
@@ -969,21 +1080,38 @@ class MutableIndex:
                     new_snap = Snapshot(
                         snap.base, snap.base_keys,
                         cur.runs + (new_run,),
-                        cur.deltas[n_deltas_folded:], cur.version + 1)
+                        cur.deltas[n_deltas_folded:], cur.version + 1,
+                        cold=cur.cold, base_offset=cur.base_offset)
                     new_base = None
+                elif cold_shard is not None:
+                    new_run = None
+                    new_base = empty_index(
+                        self.series_length, self.segments,
+                        self.cardinality)
+                    new_snap = Snapshot(
+                        new_base, np.zeros((0,), np.uint64), (),
+                        cur.deltas[n_deltas_folded:], cur.version + 1,
+                        cold=cur.cold + (cold_shard,),
+                        base_offset=cold_shard.base
+                        + cold_shard.num_series)
                 else:
                     new_run = None
                     new_base = merged
                     new_snap = Snapshot(
                         merged, keys, (),
-                        cur.deltas[n_deltas_folded:], cur.version + 1)
+                        cur.deltas[n_deltas_folded:], cur.version + 1,
+                        cold=cur.cold, base_offset=cur.base_offset)
                 if self.durable:
                     if tier != "minor":
                         old_base_dir = (
                             self._base_ref.dir if self._base_ref else None)
-                        self._base_ref = (durable.ComponentRef(
-                            name, 0, merged.num_series)
-                            if merged.num_series else None)
+                        if cold_shard is not None:
+                            self._base_ref = None
+                        else:
+                            self._base_ref = (durable.ComponentRef(
+                                name, new_snap.base_offset,
+                                merged.num_series)
+                                if merged.num_series else None)
                     durable.write_manifest(
                         self.workdir, self._manifest_for(new_snap),
                         self._fault)
@@ -993,6 +1121,9 @@ class MutableIndex:
                 s["compactions"] += 1
                 s["compacted_series"] += int(
                     sum(x.num_series for x in fold_runs + fold_deltas))
+                if cold_shard is not None:
+                    s["demotions"] += 1
+                    s["demoted_series"] += cold_shard.num_series
                 s["merge_time"] += merge_time
                 s["stall_time_max"] = max(s["stall_time_max"], stall)
         finally:
@@ -1002,6 +1133,7 @@ class MutableIndex:
             tier=tier, base=new_base, run=new_run,
             retired_runs=fold_runs, retired_deltas=fold_deltas,
             snapshot=new_snap, merge_time=merge_time, stall_time=stall,
+            cold=cold_shard,
         ), old_base_dir
 
     def maybe_compact(
@@ -1011,7 +1143,21 @@ class MutableIndex:
         tier = policy.plan(self._snapshot)
         if tier is None:
             return None
-        return self.compact(tier=tier)
+        return self.compact(
+            tier=tier,
+            demote=(policy.demote_major and self.durable
+                    and tier in ("major", "full")))
+
+    def demote(self) -> Optional[CompactionResult]:
+        """Fold base + runs and push the result to the cold tier.
+
+        ``compact(tier="major", demote=True)``: after it, the store's
+        oldest tier costs no raw-series RAM — queries read raw rows on
+        demand through the block cache, bit-exact (see
+        ``core.coldtier``). Returns None only when there is nothing to
+        demote (empty base AND empty run tier).
+        """
+        return self.compact(tier="major", demote=True)
 
     # ------------------------------------------------------------- search
     def _packed_view(self, snap: Snapshot):
@@ -1064,13 +1210,23 @@ class MutableIndex:
             **tier_kw)
 
     @staticmethod
-    def _use_fused(fused, comps: list, sort: bool) -> bool:
+    def _use_fused(fused, comps: list, sort: bool,
+                   has_cold: bool = False) -> bool:
+        if not isinstance(fused, bool) and fused != "auto":
+            raise ValueError(f"fused must be bool or 'auto', got {fused!r}")
+        if has_cold:
+            # The packed buffers are host-RAM-resident by construction —
+            # pulling the cold raw in would defeat the tier. Cold
+            # snapshots always answer per-component + merge.
+            if fused is True:
+                raise ValueError(
+                    "fused search is unavailable over a cold tier: the "
+                    "packed view would materialize the on-disk raw")
+            return False
         if not sort:  # the ADS+-style serial scan has no packed variant
             return False
         if isinstance(fused, bool):
             return fused
-        if fused != "auto":
-            raise ValueError(f"fused must be bool or 'auto', got {fused!r}")
         return len(comps) >= 2
 
     def exact_knn_batch(
@@ -1091,11 +1247,12 @@ class MutableIndex:
         snap = self._snapshot
         qs = jnp.asarray(queries, jnp.float32)
         comps = snap.components()
-        if not comps:
+        if not comps and not snap.cold:
             nq = qs.shape[0]
             return (np.full((nq, k), np.float32(np.inf)),
                     np.full((nq, k), _NO_POS, np.int32))
-        if self._use_fused(fused, comps, kw.get("sort", True)):
+        if self._use_fused(fused, comps, kw.get("sort", True),
+                           bool(snap.cold)):
             # Same kwarg surface as core.exact_knn_batch: an unknown key
             # must fail here exactly like the per-component path would —
             # never silently change behavior with the component count.
@@ -1124,6 +1281,15 @@ class MutableIndex:
                              (top_d, top_p, reads, updates, rounds))
             return np.asarray(top_d), np.asarray(top_p)
         ds, ps = [], []
+        # Cold shards first: they own the lowest file offsets, and
+        # merge_top_lists resolves distance ties toward the earlier
+        # partition — which must be the lower position.
+        for shard in snap.cold:
+            d, p = coldtier.cold_exact_knn_batch(shard, qs, k=k, **kw)
+            p = np.asarray(p)
+            ds.append(np.asarray(d))
+            ps.append(np.where(p >= 0, p + shard.base, _NO_POS)
+                      .astype(p.dtype))
         for index, off in comps:
             d, p = exact_knn_batch(index, qs, k=k, **kw)
             p = np.asarray(p)
@@ -1160,7 +1326,7 @@ class MutableIndex:
                 raise ValueError(f"got {len(tiers)} tiers for {nq} queries")
         snap = self._snapshot
         comps = snap.components()
-        if not comps:  # empty store: nothing missed, certified exact
+        if not comps and not snap.cold:  # empty store: certified exact
             return (np.full((nq, k), np.float32(np.inf)),
                     np.full((nq, k), _NO_POS, np.int32),
                     np.zeros((nq,), np.float64))
@@ -1169,7 +1335,7 @@ class MutableIndex:
                 qs, k=k, fused=fused, round_size=round_size,
                 select=select, impl=impl)
             return np.asarray(d), np.asarray(p), np.zeros((nq,), np.float64)
-        if self._use_fused(fused, comps, True):
+        if self._use_fused(fused, comps, True, bool(snap.cold)):
             packed = self._packed_view(snap)
             k_eff = min(k, packed.num_series)
             eps_f, budget = tier_arrays(tiers)
@@ -1188,6 +1354,15 @@ class MutableIndex:
                     achieved_epsilon(ach_sq))
         ds, ps = [], []
         ach = np.zeros((nq,), np.float64)
+        for shard in snap.cold:  # lowest offsets first (tie stability)
+            d, p, a = coldtier.cold_knn_batch_tiered(
+                shard, qs, tiers, k=k, round_size=round_size,
+                select=select, impl=impl)
+            p = np.asarray(p)
+            ds.append(np.asarray(d))
+            ps.append(np.where(p >= 0, p + shard.base, _NO_POS)
+                      .astype(p.dtype))
+            ach = np.maximum(ach, np.asarray(a))
         for index, off in comps:
             d, p, a = knn_batch_tiered(
                 index, qs, tiers, k=k, round_size=round_size,
@@ -1213,22 +1388,27 @@ class MutableIndex:
         qs = jnp.asarray(queries, jnp.float32)
         comps = snap.components()
         nq = qs.shape[0]
-        if not comps:
+        if not comps and not snap.cold:
             z = np.zeros((nq,), np.int32)
             return SearchResult(
                 np.full((nq,), np.float32(np.inf)),
                 np.full((nq,), _NO_POS, np.int32), z, z, np.int32(0))
-        if self._use_fused(fused, comps, cfg.sort):
+        if self._use_fused(fused, comps, cfg.sort, bool(snap.cold)):
             packed = self._packed_view(snap)
             top_d, top_p, reads, updates, rounds = self._fused_engine_call(
                 packed, qs, k=1, round_size=cfg.round_size,
                 select=cfg.select, impl=cfg.impl)
             return SearchResult(top_d[:, 0], top_p[:, 0], reads, updates,
                                 rounds)
-        parts = [exact_search_batch(index, qs, cfg) for index, _ in comps]
+        pairs = [(shard.base,
+                  coldtier.cold_exact_search_batch(shard, qs, cfg))
+                 for shard in snap.cold]
+        pairs += [(off, exact_search_batch(index, qs, cfg))
+                  for index, off in comps]
+        parts = [r for _, r in pairs]
         best_d = np.full((nq,), np.inf, np.float32)
         best_p = np.full((nq,), _NO_POS, np.int64)
-        for (index, off), r in zip(comps, parts):
+        for off, r in pairs:
             d = np.asarray(r.dist_sq)
             p = np.asarray(r.position).astype(np.int64) + off
             better = (d < best_d) | ((d == best_d) & (p < best_p))
@@ -1252,10 +1432,13 @@ class MutableIndex:
             num_series=snap.num_series,
             num_deltas=len(snap.deltas),
             num_runs=len(snap.runs),
+            num_cold=len(snap.cold),
+            cold_series=sum(c.num_series for c in snap.cold),
             base_series=snap.base.num_series,
             version=snap.version,
             durable=self.durable,
             spill_queue_depth=len(self._spill_queue),
+            cold_cache=self._cold_cache.stats(),
         )
         return s
 

@@ -267,6 +267,25 @@ def _query_paa(index: ParISIndex, query: jax.Array) -> tuple:
     return q, isax.paa(q, index.segments)
 
 
+def bucket_window_start(bucket_offsets: jax.Array, keys: jax.Array,
+                        leaf_cap: int, num_series: int) -> jax.Array:
+    """Start row of each query's ``leaf_cap`` seed window, in leaf order.
+
+    The window is centered on the query's root bucket (an empty or small
+    bucket degrades gracefully to its leaf-order neighbors) and clamped
+    to the array. This is THE definition of where approximate search
+    looks: :func:`approx_search`/:func:`approx_search_batch` (in-memory)
+    and the cold tier's seed (``core.coldtier``, which reads the same
+    window as one contiguous disk range) must use it unchanged —
+    bit-exactness of the cold path's approx-seeded engines depends on
+    the window math having exactly one home.
+    """
+    starts = bucket_offsets[keys]
+    ends = bucket_offsets[keys + 1]
+    pad = jnp.maximum(leaf_cap - (ends - starts), 0) // 2
+    return jnp.clip(starts - pad, 0, num_series - leaf_cap)
+
+
 def approx_search(
     index: ParISIndex, query: jax.Array, leaf_cap: int = 256
 ) -> tuple:
@@ -284,10 +303,8 @@ def approx_search(
     q, qp = _query_paa(index, query)
     qsax = isax.sax_from_paa(qp, index.cardinality)
     key = isax.root_key(qsax, index.cardinality)
-    start, end = index.bucket(key)
-    # Center the window on the bucket; clamp to the array.
-    pad = jnp.maximum(leaf_cap - (end - start), 0) // 2
-    s = jnp.clip(start - pad, 0, index.num_series - leaf_cap)
+    s = bucket_window_start(
+        index.bucket_offsets, key, leaf_cap, index.num_series)
     window = jax.lax.dynamic_slice_in_dim(index.pos, s, leaf_cap)
     raws = jnp.take(index.raw, window, axis=0)
     d = ops.euclid_sq(q, raws)
@@ -308,10 +325,8 @@ def approx_search_batch(
     qps = isax.paa(qs, index.segments)
     qsax = isax.sax_from_paa(qps, index.cardinality)
     keys = isax.root_key(qsax, index.cardinality)
-    starts = index.bucket_offsets[keys]
-    ends = index.bucket_offsets[keys + 1]
-    pad = jnp.maximum(leaf_cap - (ends - starts), 0) // 2
-    s = jnp.clip(starts - pad, 0, index.num_series - leaf_cap)
+    s = bucket_window_start(
+        index.bucket_offsets, keys, leaf_cap, index.num_series)
 
     def one(q, si):
         window = jax.lax.dynamic_slice_in_dim(index.pos, si, leaf_cap)
@@ -1379,6 +1394,7 @@ def make_batch_engine(
     select: str = "topk",
     impl: str = "auto",
     min_bucket: int = 1,
+    engine_for=None,
 ):
     """Build a reusable, shape-stable batch engine over one index.
 
@@ -1404,11 +1420,19 @@ def make_batch_engine(
 
     The returned callable exposes ``engine.bucket(qn)`` — the padded batch
     shape a Q-query call compiles at (callers use it for pad accounting).
+
+    ``engine_for`` swaps the per-index jitted-engine factory: the default
+    :func:`_engine_for` serves in-memory :class:`ParISIndex` objects; the
+    cold tier passes its own factory (``core.coldtier``) so a disk-backed
+    shard rides the identical wrapper — same padding, tier, and sentinel
+    protocol — over its callback-gather engines.
     """
     if k is not None and k < 1:
         raise ValueError(f"k must be None (1-NN mode) or >= 1, got {k}")
+    if engine_for is None:
+        engine_for = _engine_for
     k_eff = 1 if k is None else min(k, index.num_series)
-    fn = _engine_for(
+    fn = engine_for(
         index, (k_eff, round_size, leaf_cap, sort, select, impl, "approx")
     )
     tier_statics = (
@@ -1445,7 +1469,7 @@ def make_batch_engine(
                     [eps_f, jnp.ones((b - qn,), jnp.float32)])
                 budget = jnp.concatenate(
                     [budget, jnp.zeros((b - qn,), jnp.int32)])
-            fnt = _engine_for(index, tier_statics)
+            fnt = engine_for(index, tier_statics)
             top_d, top_p, reads, updates, rounds, ach_sq = fnt(
                 qs, eps_f, budget)
             top_d, top_p, ach_sq = top_d[:qn], top_p[:qn], ach_sq[:qn]

@@ -117,15 +117,19 @@ with the writer count (``spill_queue_depth`` / ``group_commits`` in
 ``stats()``)::
 
     workdir/
-      MANIFEST.json          {format, version, next_epoch, series_length,
-                              segments, cardinality, refine_bits,
+      MANIFEST.json          {format: 2, version, next_epoch,
+                              series_length, segments, cardinality,
+                              refine_bits,
                               base: {dir, base, num_series} | null,
                               runs: [{dir, base, num_series}, ...],
-                              deltas: [...]}   <- tmp + atomic rename
+                              deltas: [...],
+                              cold: [...]}     <- tmp + atomic rename
+      COLD_CATALOG.json      the cold tier's pointer index (below)
       e{N}/                  one immutable component (epoch) each:
         keys.npy sax.npy pos.npy   the builder's epoch-shard format
         raw.npy                    znormed raw, component file order
         meta.json                  {num_series, base, series_length}
+        (cold epochs: raw_leaf.npy, LEAF order, replaces raw.npy)
 
     spill e{N} -> commit manifest -> publish snapshot -> GC retired dirs
 
@@ -133,7 +137,50 @@ A crash at any point leaves either the old manifest (plus orphan dirs an
 interrupted spill/GC left behind) or the new one with every referenced
 dir complete; ``MutableIndex.recover(workdir)`` reloads the committed
 snapshot bit-exactly and sweeps the orphans (property-tested with
-randomized kill points in tests/test_durability.py).
+randomized kill points in tests/test_durability.py). Format-1 manifests
+(pre-cold-tier stores) read back unchanged.
+
+Storage tiers (core/coldtier.py, core/block_cache.py): a snapshot's
+components span four tiers by age — *delta* (freshly appended, RAM),
+*run* (minor-folded deltas, RAM), *base* (major-folded, RAM), *cold*
+(demoted, raw on disk). ``MutableIndex.demote()`` (or
+``CompactionPolicy(demote_major=True)``) turns a major fold into a
+demotion: the merged base+runs component spills with its raw matrix
+PERMUTED TO LEAF ORDER — so each iSAX root bucket is one contiguous
+byte range — while its SAX summaries, positions and bucket table stay
+hot in RAM (a few bytes per series). This is how the store exceeds
+host memory: billions of series per host, raw paged on demand.
+
+The pointer-index catalog maps ``bucket key -> (epoch, row_offset,
+run_length)`` (+ per-epoch ``data_offset``/``row_bytes``, so ranges
+resolve to exact byte spans) for every cold epoch, maintained
+INCREMENTALLY — a demotion adds one epoch's entries, GC removes them,
+never a full rebuild. Demotion commit protocol::
+
+    spill cold e{N} -> commit COLD_CATALOG -> commit MANIFEST
+        -> publish snapshot -> GC retired hot dirs
+
+The catalog commits FIRST: from that instant ``gc_orphans`` treats the
+epoch as referenced (it honors both the manifest and the catalog), so
+the crash window between the two commits strands nothing — recovery
+reconciles the catalog against the manifest, prunes the unconfirmed
+entry, and the next sweep reclaims the dir.
+
+Cold queries run the SAME engine core through a disk-backed
+``EngineView``: per-round candidate gathers cross into a lazy
+``np.memmap`` reader behind an LRU block cache (configurable byte
+budget; budget 0 = re-read every access, None = unlimited), and the
+approx seed reads its leaf window as ONE contiguous range. Answers are
+bit-exact vs the all-in-memory engine at ANY cache budget — the cache
+only decides what is re-read, never what is returned — including the
+Tier epsilon/budget paths and router fan-out (a ColdShard is a
+routable shard; see ``ShardedSearchRouter._register``). The cache's
+``bytes_read`` counter (bytes actually pulled from disk) over the
+query count is the bytes-read-per-query accounting:
+``benchmarks/bench_coldtier.py`` reports it against the full-scan
+baseline and CI gates the ratio (``check_regression.py
+--max-bytes-read-ratio``) — the ParIS+ claim, "queries touch only the
+ranges their surviving buckets name," held machine-independently.
 
 Fault model (serving/health.py, serving/faults.py; chaos-tested in
 tests/test_chaos.py)::

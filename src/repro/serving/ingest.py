@@ -179,6 +179,7 @@ class IngestingRouter:
         self._base_sids: List[int] = []
         self._runs: Dict[int, Tuple[object, int]] = {}  # id(run) -> (run, sid)
         self._deltas: Dict[int, Tuple[object, int]] = {}
+        self._cold: Dict[int, Tuple[object, int]] = {}  # id(shard) -> (.., sid)
         self._daemon_lock = threading.Lock()
         self._compaction_failures = 0
         self._last_compaction_error: Optional[str] = None
@@ -203,15 +204,25 @@ class IngestingRouter:
             snap = self.mutable.snapshot()
             want_runs = {id(r): r for r in snap.runs}
             want_deltas = {id(d): d for d in snap.deltas}
+            want_cold = {id(c): c for c in snap.cold}
             retire: List[int] = []
             for key in [k for k in self._runs if k not in want_runs]:
                 retire.append(self._runs.pop(key)[1])
             for key in [k for k in self._deltas if k not in want_deltas]:
                 retire.append(self._deltas.pop(key)[1])
+            for key in [k for k in self._cold if k not in want_cold]:
+                retire.append(self._cold.pop(key)[1])
             new_runs = [r for k, r in want_runs.items()
                         if k not in self._runs]
             new_deltas = [d for k, d in want_deltas.items()
                           if k not in self._deltas]
+            # A demotion publishes a new cold shard (and a fresh empty
+            # base): the cold shard attaches like any other component —
+            # the router builds it a disk-backed engine (ColdShard
+            # dispatch in ``_register``) over the same file range the
+            # retired base shards covered.
+            new_cold = [c for k, c in want_cold.items()
+                        if k not in self._cold]
             base_changed = snap.base is not self._base_obj
             base_pairs: List[Tuple[ParISIndex, int]] = []
             if base_changed:
@@ -219,22 +230,28 @@ class IngestingRouter:
                 if snap.base.num_series:
                     shards = min(self.num_base_shards, snap.base.num_series)
                     sharded = build_sharded_index(snap.base, shards)
-                    base_pairs = list(zip(sharded.shards, sharded.offsets))
+                    base_pairs = [(ix, off + snap.base_offset)
+                                  for ix, off in zip(sharded.shards,
+                                                     sharded.offsets)]
             add = (base_pairs
                    + [(r.index, r.base) for r in new_runs]
-                   + [(d.index, d.base) for d in new_deltas])
+                   + [(d.index, d.base) for d in new_deltas]
+                   + [(c, c.base) for c in new_cold])
             if not retire and not add:
                 return
             sids = self.router.swap_shards(retire, add)
             nb = len(base_pairs)
             nr = len(new_runs)
+            nd = len(new_deltas)
             if base_changed:
                 self._base_obj = snap.base
                 self._base_sids = sids[:nb]
             for r, sid in zip(new_runs, sids[nb:nb + nr]):
                 self._runs[id(r)] = (r, sid)
-            for d, sid in zip(new_deltas, sids[nb + nr:]):
+            for d, sid in zip(new_deltas, sids[nb + nr:nb + nr + nd]):
                 self._deltas[id(d)] = (d, sid)
+            for c, sid in zip(new_cold, sids[nb + nr + nd:]):
+                self._cold[id(c)] = (c, sid)
 
     # -------------------------------------------------------------- ingest
     def append(self, batch) -> int:
@@ -254,7 +271,8 @@ class IngestingRouter:
         return len(batch)
 
     # ---------------------------------------------------------- compaction
-    def compact_now(self, tier: str = "full") -> Optional[CompactionResult]:
+    def compact_now(self, tier: str = "full",
+                    demote: bool = False) -> Optional[CompactionResult]:
         """Run one tier fold (if it has anything) and rewire the router.
 
         The merge runs without holding the service lock — appends and
@@ -262,8 +280,11 @@ class IngestingRouter:
         minor fold swaps the folded delta shards for the new run shard
         (the base shards never move); a major/full fold swaps the base
         shards + folded run/delta shards for the resharded new base.
+        ``demote=True`` (durable stores) sends the major/full fold to
+        the COLD tier instead — the retired base shards' file range is
+        re-covered by one disk-backed ColdShard replica group.
         """
-        res = self.mutable.compact(tier=tier)
+        res = self.mutable.compact(tier=tier, demote=demote)
         if res is None:
             return None
         if self._injector is not None:
@@ -288,7 +309,11 @@ class IngestingRouter:
                 if self.policy is not None:
                     tier = self.policy.plan(self.mutable.snapshot())
                     if tier is not None:
-                        self.compact_now(tier=tier)
+                        self.compact_now(
+                            tier=tier,
+                            demote=(self.policy.demote_major
+                                    and self.mutable.durable
+                                    and tier in ("major", "full")))
                 streak = 0
                 wait = tick
             except Exception as e:  # noqa: BLE001 — daemon must survive

@@ -97,6 +97,7 @@ from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core.coldtier import ColdShard, make_cold_batch_engine
 from repro.core.index import (
     ParISIndex, ShardedIndex, build_sharded_index,
 )
@@ -491,9 +492,34 @@ class ShardedSearchRouter:
         for shard, off in zip(self.sharded.shards, self.sharded.offsets):
             self._register(shard, off)
 
-    def _register(self, index: ParISIndex, offset: int) -> int:
+    def _cold_engine(self, shard: ColdShard):
+        """The knob-matched batch engine for a cold shard.
+
+        Mirrors ``SearchRequestBatcher``'s own ``engine=None`` mapping
+        (k=None reads the 1-NN knobs from ``cfg``) so a ColdShard
+        replica group answers under exactly the knobs an in-memory
+        shard's would — same wrapper, cold engine factory underneath.
+        """
+        kb = self._knobs
+        if kb["k"] is None:
+            cfg = kb["cfg"]
+            return make_cold_batch_engine(
+                shard, k=None, round_size=cfg.round_size,
+                leaf_cap=cfg.leaf_cap, sort=cfg.sort, select=cfg.select,
+                impl=cfg.impl, min_bucket=kb["min_bucket"])
+        return make_cold_batch_engine(
+            shard, k=kb["k"], round_size=kb["round_size"],
+            leaf_cap=kb["leaf_cap"], select=kb["select"],
+            impl=kb["impl"], min_bucket=kb["min_bucket"])
+
+    def _register(self, index, offset: int) -> int:
         """Create a shard's replica group (caller holds the write lock or
         __init__).
+
+        ``index`` is a :class:`ParISIndex` or a cold-tier
+        :class:`~repro.core.coldtier.ColdShard` — a cold shard's
+        replicas share one prebuilt disk-backed engine (and therefore
+        one block cache) instead of the batcher's in-memory default.
 
         The entry list is REPLACED, never mutated in place: lock-free
         readers (``poll``/``drain`` snapshot the reference) must always
@@ -502,13 +528,16 @@ class ShardedSearchRouter:
         """
         sid = self._next_sid
         self._next_sid += 1
+        engine = (self._cold_engine(index)
+                  if isinstance(index, ColdShard) else None)
         reps = []
         for rid in range(self.replicas):
             hook = None
             if self._injector is not None:
                 hook = functools.partial(self._injector.on_flush, sid, rid)
             b = SearchRequestBatcher(
-                index, inline_flush=False, fault_hook=hook, **self._knobs)
+                index, inline_flush=False, fault_hook=hook, engine=engine,
+                **self._knobs)
             reps.append(_Replica(
                 rid, b, ReplicaHealth(**self._health_knobs)))
             if self._started:

@@ -1,0 +1,395 @@
+"""Disk-native cold tier: pointer index, block cache, demotion, recovery.
+
+The tentpole property: a store whose base has been DEMOTED to the cold
+tier — SAX summaries and the bucket table hot, raw series on disk behind
+the pointer-index catalog and an LRU block cache — answers every search
+path bit-exactly vs the all-in-memory engine, at ANY cache budget,
+through mid-ingest snapshots, crash-recovery, and router fan-out.
+"""
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    BlockCache, MutableIndex, build_index, exact_knn_batch,
+)
+from repro.core import coldtier, durable, isax
+from repro.core.durable import FaultError, fail_at
+from repro.core.search import (
+    SearchConfig, Tier, exact_search_batch, knn_batch_tiered,
+    make_batch_engine,
+)
+
+RNG = np.random.default_rng(7)
+LENGTH = 64
+ROUND = 128
+RAW = RNG.standard_normal((420, LENGTH)).cumsum(axis=1).astype(np.float32)
+QUERIES = jnp.asarray(
+    RNG.standard_normal((4, LENGTH)).cumsum(axis=1), jnp.float32)
+
+
+@pytest.fixture()
+def workdir(tmp_path):
+    return str(tmp_path / "store")
+
+
+def _spill_from_index(workdir, idx, name="e0", base=0):
+    """Spill ``idx`` as one cold epoch (what a demotion writes)."""
+    pos = np.asarray(idx.pos)
+    keys = np.asarray(isax.root_key(idx.sax, idx.cardinality))
+    raw_leaf = np.asarray(idx.raw)[pos]
+    ref = coldtier.spill_cold_component(
+        workdir, name, keys, np.asarray(idx.sax), pos, raw_leaf,
+        base=base, series_length=idx.series_length, fault=None)
+    entry = coldtier.epoch_entry(
+        workdir, name, base=base, num_series=idx.num_series,
+        series_length=idx.series_length,
+        bucket_offsets=np.asarray(idx.bucket_offsets))
+    coldtier.catalog_add(workdir, name, entry, None)
+    return ref, entry
+
+
+def _cold_shard(workdir, idx, cache=None, name="e0"):
+    ref, _ = _spill_from_index(workdir, idx, name=name)
+    return coldtier.load_cold_shard(
+        workdir, ref, cache=cache or BlockCache(),
+        segments=idx.segments, cardinality=idx.cardinality)
+
+
+# ------------------------------------------------------ pointer index
+def test_pointer_index_decodes_every_bucket(workdir):
+    """Catalog property: each bucket's (offset, length) names exactly the
+    positions ``ParISIndex.bucket(key)`` does, and its byte range decodes
+    to those very series."""
+    idx = build_index(jnp.asarray(RAW[:300]))
+    ref, entry = _spill_from_index(workdir, idx)
+    pos = np.asarray(idx.pos)
+    raw = np.asarray(idx.raw)
+    off = np.asarray(idx.bucket_offsets)
+    nonempty = np.flatnonzero(np.diff(off))
+    assert set(entry["buckets"]) == {str(int(key)) for key in nonempty}
+    path = os.path.join(workdir, "e0", coldtier.COLD_RAW)
+    with open(path, "rb") as f:
+        blob = f.read()
+    for key in nonempty:
+        s, e = int(off[key]), int(off[key + 1])
+        row_off, run_len = entry["buckets"][str(int(key))]
+        assert (row_off, run_len) == (s, e - s)
+        byte_off, byte_len = coldtier.byte_range(entry, int(key))
+        got = np.frombuffer(
+            blob[byte_off: byte_off + byte_len], np.float32
+        ).reshape(run_len, LENGTH)
+        # leaf-order rows s:e are the bucket's series, in pos order
+        np.testing.assert_array_equal(got, raw[pos[s:e]])
+
+
+def test_byte_range_empty_bucket_is_none(workdir):
+    idx = build_index(jnp.asarray(RAW[:100]))
+    _, entry = _spill_from_index(workdir, idx)
+    off = np.asarray(idx.bucket_offsets)
+    empty = np.flatnonzero(np.diff(off) == 0)
+    assert empty.size  # 100 series over 2^16 roots: most are empty
+    assert coldtier.byte_range(entry, int(empty[0])) is None
+
+
+def test_catalog_is_incremental(workdir):
+    idxa = build_index(jnp.asarray(RAW[:120]))
+    idxb = build_index(jnp.asarray(RAW[120:250]))
+    _spill_from_index(workdir, idxa, name="e0", base=0)
+    cat1 = coldtier.read_catalog(workdir)
+    _spill_from_index(workdir, idxb, name="e1", base=120)
+    cat2 = coldtier.read_catalog(workdir)
+    assert set(cat1["epochs"]) == {"e0"}
+    assert set(cat2["epochs"]) == {"e0", "e1"}
+    assert cat2["epochs"]["e0"] == cat1["epochs"]["e0"]  # untouched
+
+
+# ----------------------------------------------------- engine parity
+def test_cold_shard_bit_exact_vs_memory(workdir):
+    idx = build_index(jnp.asarray(RAW[:350]))
+    shard = _cold_shard(workdir, idx)
+    want_d, want_p = exact_knn_batch(idx, QUERIES, k=5, round_size=ROUND)
+    got_d, got_p = coldtier.cold_exact_knn_batch(
+        shard, QUERIES, k=5, round_size=ROUND)
+    np.testing.assert_array_equal(np.asarray(want_d), np.asarray(got_d))
+    np.testing.assert_array_equal(np.asarray(want_p), np.asarray(got_p))
+    # the batch-engine wrapper (what the router's batchers call)
+    eng_m = make_batch_engine(idx, k=3, round_size=ROUND)
+    eng_c = coldtier.make_cold_batch_engine(shard, k=3, round_size=ROUND)
+    for a, b in zip(eng_m(QUERIES), eng_c(QUERIES)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cold_tiers_keep_their_guarantees(workdir):
+    idx = build_index(jnp.asarray(RAW[:350]))
+    shard = _cold_shard(workdir, idx)
+    for tier in (Tier.epsilon(0.2), Tier.budget(1)):
+        wd_, wp_, wach = knn_batch_tiered(
+            idx, QUERIES, tier, k=3, round_size=ROUND)
+        gd, gp, gach = coldtier.cold_knn_batch_tiered(
+            shard, QUERIES, tier, k=3, round_size=ROUND)
+        np.testing.assert_array_equal(np.asarray(wd_), np.asarray(gd))
+        np.testing.assert_array_equal(np.asarray(wp_), np.asarray(gp))
+        np.testing.assert_array_equal(np.asarray(wach), np.asarray(gach))
+
+
+def test_cache_budget_never_changes_answers(workdir):
+    """Budget 0 (re-read everything), tiny (constant eviction) and None
+    (all-resident) return identical bits; only the counters differ."""
+    idx = build_index(jnp.asarray(RAW[:350]))
+    shard = _cold_shard(workdir, idx, cache=BlockCache(block_rows=8))
+    want = coldtier.cold_exact_knn_batch(
+        shard, QUERIES, k=4, round_size=ROUND)
+    want = tuple(np.asarray(x) for x in want)
+    raw_bytes = shard.reader.total_bytes
+    for budget in (0, 2048, None):
+        shard.reader.cache = BlockCache(budget_bytes=budget, block_rows=8)
+        got = coldtier.cold_exact_knn_batch(
+            shard, QUERIES, k=4, round_size=ROUND)
+        got = tuple(np.asarray(x) for x in got)  # forces the callbacks
+        np.testing.assert_array_equal(want[0], got[0])
+        np.testing.assert_array_equal(want[1], got[1])
+        st = shard.reader.cache.stats()
+        assert st["misses"] > 0 and st["bytes_read"] > 0
+        if budget == 0:
+            assert st["cached_bytes"] == 0 and st["cached_blocks"] == 0
+        elif budget is not None:
+            assert 0 < st["cached_bytes"] <= budget < raw_bytes
+            assert st["evictions"] > 0
+
+
+def test_unlimited_cache_stops_rereading(workdir):
+    idx = build_index(jnp.asarray(RAW[:300]))
+    shard = _cold_shard(workdir, idx)
+    first = coldtier.cold_exact_knn_batch(shard, QUERIES, k=2,
+                                          round_size=ROUND)
+    jax.block_until_ready(first)
+    bytes_after_first = shard.reader.cache.stats()["bytes_read"]
+    assert bytes_after_first > 0
+    again = coldtier.cold_exact_knn_batch(shard, QUERIES, k=2,
+                                          round_size=ROUND)
+    jax.block_until_ready(again)
+    st = shard.reader.cache.stats()
+    assert st["bytes_read"] == bytes_after_first  # all hits, zero re-reads
+    assert st["hits"] > 0
+
+
+# -------------------------------------------------- demotion lifecycle
+def _assert_parity(m, n, k=4):
+    ref = build_index(jnp.asarray(RAW[:n]))
+    want_d, want_p = exact_knn_batch(ref, QUERIES, k=k, round_size=ROUND)
+    got_d, got_p = m.exact_knn_batch(QUERIES, k=k, round_size=ROUND)
+    np.testing.assert_array_equal(np.asarray(want_p), np.asarray(got_p))
+    np.testing.assert_array_equal(np.asarray(want_d), np.asarray(got_d))
+
+
+def test_demotion_is_bit_exact_mid_ingest(workdir):
+    m = MutableIndex(series_length=LENGTH, workdir=workdir)
+    m.append(RAW[:150])
+    m.append(RAW[150:260])
+    m.compact(tier="minor")
+    res = m.demote()
+    assert res.cold is not None
+    snap = m.snapshot()
+    assert len(snap.cold) == 1 and snap.base.num_series == 0
+    assert snap.base_offset == 260 and snap.num_series == 260
+    _assert_parity(m, 260)
+    # ingest continues on top of the cold tier: mixed cold + delta
+    m.append(RAW[260:330])
+    _assert_parity(m, 330)
+    r = m.exact_search_batch(QUERIES, SearchConfig(round_size=ROUND))
+    ref = build_index(jnp.asarray(RAW[:330]))
+    rr = exact_search_batch(ref, QUERIES, SearchConfig(round_size=ROUND))
+    np.testing.assert_array_equal(
+        np.asarray(r.dist_sq), np.asarray(rr.dist_sq))
+    np.testing.assert_array_equal(
+        np.asarray(r.position), np.asarray(rr.position))
+    # epsilon certificate survives the cold + delta composition
+    d, p, ach = m.knn_batch_tiered(QUERIES, Tier.epsilon(0.1), k=3,
+                                   round_size=ROUND)
+    wd_, _ = exact_knn_batch(ref, QUERIES, k=3, round_size=ROUND)
+    assert np.all(np.asarray(ach) <= 0.1 + 1e-6)
+    assert np.all(np.sqrt(np.asarray(d))
+                  <= 1.1 * np.sqrt(np.asarray(wd_)) * (1 + 1e-5))
+    st = m.stats()
+    assert st["demotions"] == 1 and st["cold_series"] == 260
+    assert st["num_cold"] == 1
+
+
+def test_demoted_store_recovers_and_stacks_epochs(workdir):
+    m = MutableIndex(series_length=LENGTH, workdir=workdir)
+    m.append(RAW[:200])
+    m.compact(tier="minor")
+    m.demote()
+    m.append(RAW[200:290])
+    m.compact(tier="minor")
+    r = MutableIndex.recover(workdir)
+    snap = r.snapshot()
+    assert len(snap.cold) == 1 and snap.base_offset == 200
+    assert r.num_series == 290
+    _assert_parity(r, 290)
+    # a second demotion stacks a second cold epoch after the first
+    r.demote()
+    snap2 = r.snapshot()
+    assert len(snap2.cold) == 2 and snap2.base_offset == 290
+    assert [c.base for c in snap2.cold] == [0, 200]
+    _assert_parity(r, 290)
+    # and THAT recovers too (two catalog epochs, contiguous from 0)
+    r2 = MutableIndex.recover(workdir)
+    assert len(r2.snapshot().cold) == 2
+    _assert_parity(r2, 290)
+    cat = coldtier.read_catalog(workdir)
+    man = durable.read_manifest(workdir)
+    assert set(cat["epochs"]) == {c.dir for c in man.cold}
+
+
+def test_fused_search_refuses_cold(workdir):
+    m = MutableIndex(series_length=LENGTH, workdir=workdir)
+    m.append(RAW[:120])
+    m.compact(tier="minor")
+    m.demote()
+    with pytest.raises(ValueError, match="fused"):
+        m.exact_knn_batch(QUERIES, k=2, fused=True)
+    # "auto" silently takes the per-component path instead
+    _assert_parity(m, 120, k=2)
+
+
+def test_demote_requires_durability_and_a_major_tier(tmp_path):
+    m = MutableIndex(series_length=LENGTH)
+    m.append(RAW[:50])
+    with pytest.raises(ValueError, match="durable"):
+        m.demote()
+    md = MutableIndex(series_length=LENGTH, workdir=str(tmp_path / "s"))
+    md.append(RAW[:50])
+    with pytest.raises(ValueError, match="major"):
+        md.compact(tier="minor", demote=True)
+
+
+# ------------------------------------------------------ crash injection
+def _run_killable_demoting(workdir, crash_at):
+    """A fixed op sequence with two demotions under a fault hook."""
+    hook = fail_at(crash_at)
+    acked = 0
+    boundaries = {0}
+    try:
+        m = MutableIndex(series_length=LENGTH, workdir=workdir,
+                         fault=hook)
+        for sz in (60, 50):
+            boundaries.add(acked + sz)
+            m.append(RAW[acked: acked + sz])
+            acked += sz
+        m.compact(tier="minor")
+        m.demote()
+        boundaries.add(acked + 40)
+        m.append(RAW[acked: acked + 40])
+        acked += 40
+        m.compact(tier="minor")
+        m.demote()
+    except FaultError:
+        pass
+    return acked, boundaries
+
+
+@pytest.mark.parametrize("crash_at", range(0, 64, 4))
+def test_kill_and_recover_across_demotions(workdir, crash_at):
+    """spill cold -> catalog -> manifest -> publish -> GC survives a kill
+    anywhere: recovery lands on an acknowledged op boundary, bit-exact,
+    with catalog and manifest reconciled and zero disk residue."""
+    acked, boundaries = _run_killable_demoting(workdir, crash_at)
+    man = durable.read_manifest(workdir)
+    if man is None:
+        assert acked == 0
+        return
+    r = MutableIndex.recover(workdir)
+    n = r.num_series
+    assert n >= acked and n in boundaries, (n, acked)
+    if n:
+        _assert_parity(r, n)
+    # reconciliation: catalog epochs == manifest cold refs, exactly
+    man = durable.read_manifest(workdir)
+    cat = coldtier.read_catalog(workdir)
+    assert set(cat["epochs"]) == {c.dir for c in man.cold}
+    # zero residue: every e{N} dir is referenced by the manifest
+    live = {c.dir for c in man.runs + man.deltas + man.cold}
+    if man.base:
+        live.add(man.base.dir)
+    on_disk = {d for d in os.listdir(workdir) if d.startswith("e")}
+    assert on_disk == live
+    # the recovered store keeps working durably
+    r.append(RAW[n: n + 10])
+    assert MutableIndex.recover(workdir).num_series == n + 10
+
+
+def test_gc_honors_the_catalog(workdir):
+    """An epoch referenced ONLY by the catalog (the crash window between
+    the catalog and manifest commits) is protected from gc_orphans;
+    pruning the entry releases it."""
+    m = MutableIndex(series_length=LENGTH, workdir=workdir)
+    m.append(RAW[:80])
+    m.compact(tier="minor")
+    m.demote()
+    cold_dir = m.snapshot().cold[0].dir
+    man = durable.read_manifest(workdir)
+    # make the dir catalog-only: rewrite the manifest without it
+    durable.write_manifest(
+        workdir, dataclasses.replace(
+            man, version=man.version + 1, cold=()), None)
+    man2 = durable.read_manifest(workdir)
+    durable.gc_orphans(workdir, man2, None)
+    assert os.path.isdir(os.path.join(workdir, cold_dir))  # protected
+    pruned, _ = coldtier.reconcile_catalog(workdir, man2, (), None)
+    assert pruned == [cold_dir]
+    durable.gc_orphans(workdir, man2, None)
+    assert not os.path.exists(os.path.join(workdir, cold_dir))  # released
+
+
+def test_format1_manifest_reads_back(workdir):
+    """A pre-cold-tier (format 1) store opens unchanged under format 2."""
+    m = MutableIndex(series_length=LENGTH, workdir=workdir)
+    m.append(RAW[:90])
+    m.compact(tier="minor")
+    path = os.path.join(workdir, durable.MANIFEST)
+    with open(path) as f:
+        doc = json.load(f)
+    doc["format"] = 1
+    doc.pop("cold", None)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    r = MutableIndex.recover(workdir)
+    assert r.num_series == 90 and not r.snapshot().cold
+    _assert_parity(r, 90)
+
+
+# -------------------------------------------------------- router fan-out
+def test_router_routes_cold_shards(workdir):
+    from repro.serving.ingest import IngestingRouter
+
+    ir = IngestingRouter(None, 2, series_length=LENGTH, workdir=workdir,
+                         k=3, round_size=ROUND)
+    ir.start()
+    try:
+        ir.append(RAW[:180])
+        ir.compact_now(tier="minor")
+        ir.compact_now(tier="major", demote=True)
+        ir.append(RAW[180:260])
+        ref = build_index(jnp.asarray(RAW[:260]))
+        want_d, want_p = exact_knn_batch(ref, QUERIES, k=3,
+                                         round_size=ROUND)
+        for i in range(QUERIES.shape[0]):
+            d, p = ir.submit(QUERIES[i]).result(timeout=120)
+            np.testing.assert_array_equal(
+                np.asarray(d), np.asarray(want_d[i]))
+            np.testing.assert_array_equal(
+                np.asarray(p), np.asarray(want_p[i]))
+        d, p, ach = ir.submit(
+            QUERIES[0], tier=Tier.epsilon(0.1)).result(timeout=120)
+        assert float(ach) <= 0.1 + 1e-6
+    finally:
+        ir.stop()
