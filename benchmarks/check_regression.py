@@ -21,7 +21,15 @@ exits nonzero when:
     idle average (see :func:`check_ingest_ratios`), or
   * the cold-tier scalar report (when present) shows queries reading
     more than ``--max-bytes-read-ratio`` of the raw file per query
-    (see :func:`check_coldtier_ratios`).
+    (see :func:`check_coldtier_ratios`), or
+  * with ``--contract``, the report's ``reports["contract"]`` section
+    (a ``run.py --only contract`` run) violates the committed
+    per-backend performance references
+    (``benchmarks.perf_contract.REFERENCES``): a missing or
+    unreferenced cell, cost-model drift, or a cell outside its
+    tolerance band after the same suite-median normalization. With
+    ``--contract`` the ``--baseline`` diff becomes optional — the
+    perf-contract CI job gates references only.
 
 Normalization: committed baselines are recorded on one machine and
 checked on another, so raw ratios confound hardware speed with real
@@ -180,12 +188,37 @@ def compare(
     return problems
 
 
+def check_contract(report: dict) -> list:
+    """Gate ``reports["contract"]`` against the committed references.
+
+    Thin wrapper over :func:`benchmarks.perf_contract.check` (the
+    references and the band logic live next to the measurement code);
+    a report that was produced without the contract bench fails loudly
+    — a dropped ``--only contract`` leg must not read as a pass.
+    """
+    import os
+    import sys as _sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for p in (root, os.path.join(root, "src")):
+        if p not in _sys.path:
+            _sys.path.insert(0, p)
+    from benchmarks import perf_contract
+
+    contract = report.get("reports", {}).get("contract")
+    if contract is None:
+        return ["--contract given but the report has no contract section "
+                "(run.py --only contract writes reports['contract'])"]
+    return [f"perf contract: {p}" for p in perf_contract.check(contract)]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--report", required=True,
                     help="fresh run.py --json report")
-    ap.add_argument("--baseline", required=True,
-                    help="committed baseline report (e.g. BENCH_tiny.json)")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline report (e.g. BENCH_tiny.json); "
+                         "optional when --contract is given")
     ap.add_argument("--threshold", type=float, default=2.0,
                     help="max allowed normalized slowdown (default 2.0)")
     ap.add_argument("--min-us", type=float, default=500.0,
@@ -213,14 +246,28 @@ def main() -> None:
                     help="max cold-tier bytes-read-per-query over the "
                          "full raw file size (default 0.1 — queries must "
                          "touch >= 10x less than a full scan)")
+    ap.add_argument("--contract", action="store_true",
+                    help="gate the report's contract section against the "
+                         "committed per-backend performance references")
     args = ap.parse_args()
+    if args.baseline is None and not args.contract:
+        ap.error("--baseline is required unless --contract is given")
     with open(args.report) as f:
         current = json.load(f)
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    problems = compare(current, baseline, threshold=args.threshold,
-                       min_us=args.min_us, absolute=args.absolute,
-                       exclude=tuple(args.exclude))
+    problems = []
+    baseline = None
+    if args.baseline is not None:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        problems += compare(current, baseline, threshold=args.threshold,
+                            min_us=args.min_us, absolute=args.absolute,
+                            exclude=tuple(args.exclude))
+    elif current.get("failures"):
+        # No baseline diff, but a crashed/parity-broken run still gates.
+        problems += [f"current run failure: {f}"
+                     for f in current["failures"]]
+    if args.contract:
+        problems += check_contract(current)
     ingest = current.get("reports", {}).get("ingest")
     if ingest is not None:
         problems += check_ingest_ratios(
@@ -235,9 +282,17 @@ def main() -> None:
         print(f"BENCH-REGRESSION: {p}", file=sys.stderr)
     if problems:
         raise SystemExit(1)
-    n = len(set(load_rows(current)) & set(load_rows(baseline)))
-    print(f"# bench-regression gate: {n} shared rows within "
-          f"{args.threshold}x of baseline, no parity breaks")
+    parts = []
+    if baseline is not None:
+        n = len(set(load_rows(current)) & set(load_rows(baseline)))
+        parts.append(f"{n} shared rows within {args.threshold}x of "
+                     "baseline")
+    if args.contract:
+        cells = len(current.get("reports", {})
+                    .get("contract", {}).get("entries", []))
+        parts.append(f"{cells} contract cells within band")
+    print(f"# bench-regression gate: {', '.join(parts)}, "
+          "no parity breaks")
 
 
 if __name__ == "__main__":

@@ -5,7 +5,10 @@ for the paper mapping). ``--quick``/``--tiny`` shrinks datasets for
 CI-speed runs. ``--json PATH`` additionally writes the rows (plus any
 failures) as a JSON report — the artifact CI uploads — and
 ``--strict-parity`` turns any ``parity=False`` row or crashed bench into
-a non-zero exit: the benchmark-parity gate.
+a non-zero exit: the benchmark-parity gate. ``--retune`` skips the
+benches and instead re-runs the kernel block-shape autotuner over the
+canonical grid on this backend, printing the committed-vs-measured diff
+and rewriting ``TUNING.json``.
 """
 
 from __future__ import annotations
@@ -14,6 +17,42 @@ import argparse
 import json
 import sys
 import time
+
+
+def retune_table() -> None:
+    """``--retune``: autotune the canonical grid, diff, rewrite TUNING.json.
+
+    Runs the block-shape search (``repro.core.tuning.retune``) for every
+    registered kernel's canonical (Q, N) cells on the CURRENT backend,
+    prints each cell as committed-vs-measured (so the diff reviews like
+    a table even before git does), and writes the merged table back to
+    the committed path. Other backends' rows are preserved — re-tuning
+    on a TPU never touches the cpu rows CI validates.
+    """
+    import jax
+
+    from repro.core import tuning
+
+    path = tuning.default_table_path()
+    table, diffs = tuning.retune()
+    print(f"# retuned {len(diffs)} cells on backend="
+          f"{jax.default_backend()}", file=sys.stderr)
+    print("key,committed,measured,us_per_call,default_us_per_call")
+    for d in sorted(diffs, key=lambda d: d["key"]):
+        old, new = d["old"], d["new"]
+        knobs = sorted(k for k in new if k in
+                       tuning.KERNELS[tuning.parse_key(d["key"])[0]].defaults)
+
+        def fmt(e):
+            return ("-" if e is None else
+                    " ".join(f"{k}={e[k]}" for k in knobs))
+
+        mark = "" if (old and all(old.get(k) == new[k] for k in knobs)) \
+            else "  <- changed"
+        print(f"{d['key']},{fmt(old)},{fmt(new)},{new['us_per_call']},"
+              f"{new['default_us_per_call']}{mark}")
+    table.save(path)
+    print(f"# wrote {path}", file=sys.stderr)
 
 
 def main() -> None:
@@ -31,13 +70,23 @@ def main() -> None:
     ap.add_argument("--strict-parity", action="store_true",
                     help="exit non-zero if any bench crashes or reports "
                          "parity=False (the CI gate)")
+    ap.add_argument("--retune", action="store_true",
+                    help="re-run the kernel block-shape autotuner over the "
+                         "canonical grid on THIS backend, print the "
+                         "committed-vs-measured diff table, and rewrite "
+                         "TUNING.json (commit the result); skips the "
+                         "benches")
     args = ap.parse_args()
+
+    if args.retune:
+        retune_table()
+        return
 
     from benchmarks import (bench_batch_query, bench_build, bench_classifier,
                             bench_coldtier, bench_ingest, bench_knn_topk,
                             bench_lower_bound, bench_pruning, bench_query,
                             bench_router_faults, bench_search_batcher,
-                            bench_tiers, roofline_table)
+                            bench_tiers, perf_contract, roofline_table)
     from benchmarks.common import emit
 
     # Each registry entry returns (rows, parity): parity is the bench's own
@@ -77,6 +126,14 @@ def main() -> None:
         reports["coldtier"] = report
         return rows, all(e["parity"] for e in report["results"])
 
+    def _contract(quick):
+        rows, report = perf_contract.run(tiny=quick)
+        # check_regression --contract gates this against the committed
+        # per-backend references (perf_contract.REFERENCES) with
+        # suite-median normalization; no parity concept here.
+        reports["contract"] = report
+        return rows, None
+
     benches = {
         "lower_bound":
             lambda quick: (bench_lower_bound.run(quick=quick), None),
@@ -89,6 +146,7 @@ def main() -> None:
         "router_faults": lambda quick: bench_router_faults.run(tiny=quick),
         "ingest": _ingest,
         "coldtier": _coldtier,
+        "contract": _contract,
         "pruning": lambda quick: (bench_pruning.run(quick=quick), None),
         "classifier": lambda quick: (bench_classifier.run(quick=quick), None),
         "roofline": lambda quick: (roofline_table.run(quick=quick), None),

@@ -1,88 +1,23 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Thin CLI shim over ``repro.launch.hillclimb`` (the reusable driver).
 
-"""§Perf hillclimb driver: run tagged optimization variants of the three
-chosen cells and print before/after roofline terms.
-
-Cells (chosen per the assignment's criteria from the baseline table):
-  * olmoe-1b-7b/train_4k   — most collective-bound (coll 249s vs compute
-    2.8s: the global MoE dispatch all-reduces (E,C,d) buffers every layer).
-  * granite-34b/train_4k   — worst dense roofline fraction (compute 8.0s vs
-    memory 217.7s) + peak 16.6 GiB > v5e HBM.
-  * paris/search           — the paper's own technique on the pod.
-
-Each variant is one hypothesis -> change -> re-lower -> re-analyze cycle;
-EXPERIMENTS.md §Perf records the full log with napkin math.
+Everything that used to live here — the variant table, the roofline
+printer, the search loop the autotuner now reuses — moved to
+``src/repro/launch/hillclimb.py`` so it can be imported without side
+effects. This shim only exists so ``python experiments/hillclimb.py``
+keeps working from a checkout: path setup and the XLA device-count flag
+happen inside the ``__main__`` guard (never at import time), before
+anything imports jax.
 """
 
-import json
-import sys
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-from repro.launch.dryrun import run_cell  # noqa: E402
-
-OUT = os.path.join(os.path.dirname(__file__), "dryrun")
-
-
-def show(rec, label):
-    if rec["status"] != "ok":
-        print(f"  {label}: ERROR {rec['error'][:160]}")
-        return
-    r = rec["roofline"]
-    print(f"  {label}: compute={r['compute_s']:.3f}s mem={r['memory_s']:.3f}s"
-          f" coll={r['collective_s']:.3f}s dom={r['dominant']}"
-          f" peak={rec['memory']['peak_estimate_bytes'] / 2**30:.2f}GiB"
-          f" ratio={rec.get('model_flops_ratio')}")
-
-
-VARIANTS = [
-    # --- olmoe train: kill the dispatch all-reduce ---
-    ("olmoe-1b-7b", "train_4k", "opt1_local_dispatch",
-     dict(overrides={"moe_dispatch": "local"})),
-    ("olmoe-1b-7b", "train_4k", "opt2_local_plus_dense_attn",
-     dict(overrides={"moe_dispatch": "local",
-                     "attn_dense_threshold": 4096})),
-    ("olmoe-1b-7b", "train_4k", "opt3_local_dense_mb4",
-     dict(overrides={"moe_dispatch": "local",
-                     "attn_dense_threshold": 4096},
-          build_kwargs=dict(microbatch_tokens_per_device=16384))),
-    # --- granite train: dense attention + sequence-parallel activations ---
-    ("granite-34b", "train_4k", "opt1_dense_attn",
-     dict(overrides={"attn_dense_threshold": 4096})),
-    ("granite-34b", "train_4k", "opt2_dense_attn_seqshard",
-     dict(overrides={"attn_dense_threshold": 4096},
-          build_kwargs=dict(logical_overrides={"seq": "model"},
-                            microbatch_tokens_per_device=65536))),
-    ("granite-34b", "train_4k", "opt3_dense_seqshard_mb2",
-     dict(overrides={"attn_dense_threshold": 4096},
-          build_kwargs=dict(logical_overrides={"seq": "model"},
-                            microbatch_tokens_per_device=32768))),
-    ("granite-34b", "train_4k", "opt4_dense_seqshard_mb4",
-     dict(overrides={"attn_dense_threshold": 4096},
-          build_kwargs=dict(logical_overrides={"seq": "model"},
-                            microbatch_tokens_per_device=16384))),
-    # --- paris search: round sizing + query batching ---
-    ("paris", "search", "opt1_round16k",
-     dict(build_kwargs=dict(round_size=16384))),
-    ("paris", "search", "opt2_batch16",
-     dict(build_kwargs=dict(batch_queries=16))),
-    ("paris", "search", "opt3_batch16_topk",
-     dict(build_kwargs=dict(batch_queries=16, select="topk"))),
-]
-
-
-def main():
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    for arch, shape, tag, kw in VARIANTS:
-        if only and only not in f"{arch}/{shape}/{tag}":
-            continue
-        print(f"== {arch}/{shape} :: {tag}")
-        base = json.load(open(os.path.join(
-            OUT, f"single__{arch}__{shape}.json")))
-        show(base, "baseline")
-        rec = run_cell(arch, shape, "single", OUT, tag=tag, **kw)
-        show(rec, tag)
-
-
 if __name__ == "__main__":
+    import os
+    import sys
+
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+
+    from repro.launch.hillclimb import main
+
     main()

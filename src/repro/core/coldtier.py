@@ -327,7 +327,8 @@ def load_cold_shard(workdir: str, ref: ComponentRef, *, cache: BlockCache,
 
 
 # --------------------------------------------------------------- engines
-def _cold_view(shard: ColdShard, *, leaf_cap: int, init: str) -> EngineView:
+def _cold_view(shard: ColdShard, *, leaf_cap: int, init: str,
+               blocks=None) -> EngineView:
     """Cold-shard hooks for the ONE engine core.
 
     Identical to ``core.search._index_view`` except where the raw matrix
@@ -336,14 +337,18 @@ def _cold_view(shard: ColdShard, *, leaf_cap: int, init: str) -> EngineView:
     callback, and the approx seed reads its leaf window as one
     contiguous range — same :func:`~repro.core.search.
     bucket_window_start` window, same distance/argmin math, so the
-    seeded BSF is bit-identical to the in-memory path's.
+    seeded BSF is bit-identical to the in-memory path's. ``blocks`` is
+    the optional explicit (block_q, block_n) kernel override; ``None``
+    members resolve through the tuning table.
     """
     bpp = isax.padded_breakpoints(shard.cardinality)
     m = shard.num_series
+    block_q, block_n = blocks or (None, None)
 
     def lower_bounds(qps, impl):
         return ops.lower_bound_sq_batch(
-            qps, shard.sax, bpp, shard.series_length, impl=impl)
+            qps, shard.sax, bpp, shard.series_length, impl=impl,
+            block_q=block_q, block_n=block_n)
 
     def gather_raw(pos):
         # Same clip semantics as the in-memory take(..., mode="clip"):
@@ -403,11 +408,13 @@ def _cold_engine_for(shard: ColdShard, statics: tuple):
         return fn
     k, round_size, leaf_cap, sort, select, impl, init = statics[:7]
     tiered = len(statics) > 7 and statics[7]
+    blocks = statics[8] if len(statics) > 8 else None
 
     if tiered:
         @jax.jit
         def fn(queries, eps_factor_sq, budget_rounds):
-            view = _cold_view(shard, leaf_cap=leaf_cap, init=init)
+            view = _cold_view(shard, leaf_cap=leaf_cap, init=init,
+                              blocks=blocks)
             return _engine_core(
                 view, queries, k=k, round_size=round_size, sort=sort,
                 select=select, impl=impl, eps_factor_sq=eps_factor_sq,
@@ -415,7 +422,8 @@ def _cold_engine_for(shard: ColdShard, statics: tuple):
     else:
         @jax.jit
         def fn(queries):
-            view = _cold_view(shard, leaf_cap=leaf_cap, init=init)
+            view = _cold_view(shard, leaf_cap=leaf_cap, init=init,
+                              blocks=blocks)
             return _engine_core(
                 view, queries, k=k, round_size=round_size, sort=sort,
                 select=select, impl=impl)

@@ -88,7 +88,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import coldtier, durable, isax
+from repro.core import coldtier, durable, isax, tuning
 from repro.core.block_cache import BlockCache
 from repro.core.build_pipeline import (
     _host_refine_key, bulk_load_chunk, merge_runs,
@@ -502,6 +502,21 @@ class _SpillTicket:
         self.t0 = t0
 
 
+def _resolve_pack_block(pack_block: Optional[int], num_series: int) -> int:
+    """Pick the packed view's block_n: explicit value, else tuning table.
+
+    The packed multi-component buffer's block size is a layout decision
+    fixed for the store's lifetime (appends extend the buffer in block
+    units), so it is resolved once at construction — from the committed
+    tuning table's ``lb_multi`` entry for the starting size, falling
+    back to the registry default (128) on a miss.
+    """
+    if pack_block is not None:
+        return pack_block
+    return tuning.resolve_blocks(
+        "lb_multi", q=8, n=max(num_series, 1))["block_n"]
+
+
 class MutableIndex:
     """A growing exact-search index: leveled tiers, snapshot-swapped.
 
@@ -540,7 +555,7 @@ class MutableIndex:
         impl: str = "auto",
         workdir: Optional[str] = None,
         fault: durable.Fault = None,
-        pack_block: int = 128,
+        pack_block: Optional[int] = None,
         cold_cache: Optional[BlockCache] = None,
     ):
         if base is None:
@@ -553,7 +568,7 @@ class MutableIndex:
         self.series_length = base.series_length
         self.refine_bits = refine_bits
         self.impl = impl
-        self.pack_block = pack_block
+        self.pack_block = _resolve_pack_block(pack_block, base.num_series)
         base_keys = _host_refine_key(
             np.asarray(base.sax), refine_bits, base.cardinality)
         self._snapshot = Snapshot(base, base_keys)
@@ -694,7 +709,7 @@ class MutableIndex:
         *,
         impl: str = "auto",
         fault: durable.Fault = None,
-        pack_block: int = 128,
+        pack_block: Optional[int] = None,
         cold_cache: Optional[BlockCache] = None,
     ) -> "MutableIndex":
         """Reopen a durable store at its last committed manifest.
@@ -724,7 +739,7 @@ class MutableIndex:
         self.series_length = man.series_length
         self.refine_bits = man.refine_bits
         self.impl = impl
-        self.pack_block = pack_block
+        self.pack_block = _resolve_pack_block(pack_block, 0)
         self.workdir = workdir
         self._fault = fault
         self._next_epoch = man.next_epoch

@@ -117,7 +117,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import isax
+from repro.core import isax, tuning
 from repro.core.index import ParISIndex
 from repro.kernels import ops
 
@@ -449,14 +449,22 @@ class EngineView:
 
 
 def _index_view(
-    index: ParISIndex, *, leaf_cap: int, init: str
+    index: ParISIndex, *, leaf_cap: int, init: str,
+    blocks: Optional[tuple] = None,
 ) -> EngineView:
-    """Single-index hooks: identity positions + approx-seeded BSF."""
+    """Single-index hooks: identity positions + approx-seeded BSF.
+
+    ``blocks`` is an optional ``(block_q, block_n)`` override for the
+    lower-bound kernel; ``None`` (or ``None`` members) resolve through
+    the tuning table inside ``ops`` — see ``repro.core.tuning``.
+    """
     bpp = isax.padded_breakpoints(index.cardinality)
+    block_q, block_n = blocks or (None, None)
 
     def lower_bounds(qps, impl):
         return ops.lower_bound_sq_batch(
-            qps, index.sax, bpp, index.series_length, impl=impl
+            qps, index.sax, bpp, index.series_length, impl=impl,
+            block_q=block_q, block_n=block_n,
         )
 
     if init == "approx":
@@ -890,18 +898,28 @@ def pack_one_component(ix, off: int, block: int) -> tuple:
     return sax, gp, bl
 
 
-def pack_components(components, block: int = 128) -> PackedComponents:
+def pack_components(
+    components, block: Optional[int] = None
+) -> PackedComponents:
     """Pack (index, file offset) components for the fused multi-sweep.
 
     ``components`` must come in ascending offset order and cover
     contiguous, adjacent file ranges starting at 0 — exactly what
     ``core.ingest.Snapshot.components()`` yields. Zero-series components
-    are skipped.
+    are skipped. ``block=None`` resolves the packed layout's ``block_n``
+    through the tuning table (``lb_multi`` entry for the store's total
+    size; registry default 128 on a miss) — the block is a *layout*
+    choice baked into the buffer, so it is picked here, once, not at
+    query time.
     """
     comps = [(ix, off) for ix, off in components if ix.num_series]
     if not comps:
         raise ValueError("pack_components needs at least one nonempty "
                          "component")
+    if block is None:
+        total = sum(ix.num_series for ix, _ in comps)
+        block = tuning.resolve_blocks(
+            "lb_multi", q=8, n=max(total, 1))["block_n"]
     expect = 0
     for ix, off in comps:
         if off != expect:
@@ -1309,6 +1327,10 @@ def _engine_for(index: ParISIndex, statics: tuple):
     arguments and returns the 6-tuple with the achieved factor. Tier
     parameters being traced is the point: ONE compiled tiered engine per
     (index, shape) serves every epsilon and budget in mixed batches.
+    A ninth element — ``(..., init, tiered, (block_q, block_n))`` —
+    carries an explicit kernel block-shape override (None members resolve
+    through the tuning table); it is part of the cache key, so two block
+    shapes compile two engines.
     """
     cache = getattr(index, "_engines", None)
     if cache is None:
@@ -1321,11 +1343,13 @@ def _engine_for(index: ParISIndex, statics: tuple):
         return fn
     k, round_size, leaf_cap, sort, select, impl, init = statics[:7]
     tiered = len(statics) > 7 and statics[7]
+    blocks = statics[8] if len(statics) > 8 else None
 
     if tiered:
         @jax.jit
         def fn(queries, eps_factor_sq, budget_rounds):
-            view = _index_view(index, leaf_cap=leaf_cap, init=init)
+            view = _index_view(
+                index, leaf_cap=leaf_cap, init=init, blocks=blocks)
             return _engine_core(
                 view,
                 queries,
@@ -1340,7 +1364,8 @@ def _engine_for(index: ParISIndex, statics: tuple):
     else:
         @jax.jit
         def fn(queries):
-            view = _index_view(index, leaf_cap=leaf_cap, init=init)
+            view = _index_view(
+                index, leaf_cap=leaf_cap, init=init, blocks=blocks)
             return _engine_core(
                 view,
                 queries,
@@ -1395,6 +1420,8 @@ def make_batch_engine(
     impl: str = "auto",
     min_bucket: int = 1,
     engine_for=None,
+    block_q: Optional[int] = None,
+    block_n: Optional[int] = None,
 ):
     """Build a reusable, shape-stable batch engine over one index.
 
@@ -1426,17 +1453,33 @@ def make_batch_engine(
     cold tier passes its own factory (``core.coldtier``) so a disk-backed
     shard rides the identical wrapper — same padding, tier, and sentinel
     protocol — over its callback-gather engines.
+
+    ``block_q``/``block_n`` override the lower-bound kernel's block
+    shapes for this engine; left ``None`` they resolve through the
+    committed tuning table (``repro.core.tuning`` / ``TUNING.json``)
+    inside ``ops`` at trace time, falling back to the registry defaults
+    on a miss. Either way the answer is bit-exact — block shapes only
+    re-tile the same math (tests/test_tuning.py pins the parity).
     """
     if k is not None and k < 1:
         raise ValueError(f"k must be None (1-NN mode) or >= 1, got {k}")
     if engine_for is None:
         engine_for = _engine_for
     k_eff = 1 if k is None else min(k, index.num_series)
+    # Explicit block overrides extend the statics key (the compiled-engine
+    # cache must distinguish block shapes); the historical 7/8-tuple keys
+    # stay untouched when no override is given, so table-resolved and
+    # pre-tuning callers share the same cached engines.
+    extras = (() if block_q is None and block_n is None
+              else (False, (block_q, block_n)))
     fn = engine_for(
-        index, (k_eff, round_size, leaf_cap, sort, select, impl, "approx")
+        index,
+        (k_eff, round_size, leaf_cap, sort, select, impl, "approx")
+        + extras,
     )
     tier_statics = (
-        k_eff, round_size, leaf_cap, sort, select, impl, "approx", True)
+        k_eff, round_size, leaf_cap, sort, select, impl, "approx", True,
+    ) + ((extras[1],) if extras else ())
 
     def bucket(qn: int) -> int:
         return pow2_bucket(qn, min_bucket)

@@ -1,0 +1,528 @@
+"""Kernel block-shape autotuner + the committed ``TUNING.json`` table.
+
+Every Pallas kernel in the stack carries block-shape knobs (``block_q``,
+``block_n``, ``block_b``) whose defaults were chosen on paper, not
+hardware. This module is the full knob-to-gate vertical:
+
+  * a **registry** (:data:`KERNELS`) of every tunable kernel: its knobs,
+    today's defaults (the fallback when nothing is tuned), the candidate
+    lattice the search walks, and the canonical (Q, N) shapes the
+    committed table must cover (the CI drift gate);
+  * an **autotuner** (:func:`autotune` / :func:`retune`) that hillclimbs
+    the lattice with measured timings on whatever backend is present —
+    the reference path on CPU in CI, the compiled Pallas kernels on
+    TPU/GPU — reusing :func:`repro.launch.hillclimb.coordinate_descent`
+    with a relative ``min_gain`` threshold so timer noise cannot drag a
+    winner off the defaults;
+  * a **committed table** (``TUNING.json`` at the repo root,
+    :class:`TuningTable`) keyed like the per-index jit cache — kernel,
+    backend, dtype, and pow2-bucketed (Q, N) — holding each search's
+    winner;
+  * **resolution** (:func:`resolve_blocks`): ``kernels/ops.py`` and
+    ``core.search.make_batch_engine`` call through here, so explicit
+    kwargs win, a table hit supplies the tuned shape, and a miss falls
+    back to the registry default. Block shapes only re-tile the same
+    per-element math, so answers are bit-exact by construction whichever
+    way resolution goes (property-tested in ``tests/test_tuning.py``).
+
+The module imports no jax at load time: the CI drift gate
+(``python -m repro.core.tuning --validate``) runs on the table and the
+registry alone, and jax is only pulled in when something actually
+measures a kernel or asks for the current backend.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.launch.hillclimb import coordinate_descent
+
+TABLE_VERSION = 1
+
+#: Environment override for the table location (tests, foreign checkouts).
+TABLE_ENV = "REPRO_TUNING_PATH"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One tunable kernel: knobs, defaults, search lattice, committed grid.
+
+    ``defaults`` are today's hand-picked block shapes — the fallback for
+    every table miss, so adding a kernel here changes nothing until it is
+    tuned. ``candidates`` bound the autotuner's lattice per knob (every
+    committed value must come from it — the drift gate rejects strays).
+    ``canonical`` is the (Q, N) grid ``retune`` measures and the grid the
+    committed table must cover for the kernel to count as tuned.
+    """
+
+    name: str
+    defaults: Dict[str, int]
+    candidates: Dict[str, Tuple[int, ...]]
+    canonical: Tuple[Tuple[int, int], ...]
+
+
+#: The registered tunable kernels. Names are the stable half of every
+#: table key; ops.py resolves through them (see module docstring).
+KERNELS: Dict[str, KernelSpec] = {
+    "lb_single": KernelSpec(
+        name="lb_single",
+        defaults={"block_n": 1024},
+        candidates={"block_n": (256, 512, 1024, 2048, 4096, 8192)},
+        canonical=((1, 65536),),
+    ),
+    "lb_batch": KernelSpec(
+        name="lb_batch",
+        defaults={"block_q": 8, "block_n": 1024},
+        candidates={
+            "block_q": (1, 2, 4, 8, 16, 32, 64),
+            "block_n": (256, 512, 1024, 2048, 4096, 8192),
+        },
+        canonical=((8, 65536), (64, 65536)),
+    ),
+    "lb_multi": KernelSpec(
+        name="lb_multi",
+        defaults={"block_q": 8, "block_n": 128},
+        candidates={
+            "block_q": (1, 2, 4, 8, 16, 32, 64),
+            "block_n": (128, 256, 512, 1024),
+        },
+        canonical=((8, 65536),),
+    ),
+    "euclid": KernelSpec(
+        name="euclid",
+        defaults={"block_b": 256},
+        candidates={"block_b": (64, 128, 256, 512, 1024)},
+        canonical=((1, 4096),),
+    ),
+    "paa_isax": KernelSpec(
+        name="paa_isax",
+        defaults={"block_b": 256},
+        candidates={"block_b": (64, 128, 256, 512, 1024)},
+        canonical=((1, 16384),),
+    ),
+}
+
+#: Non-knob bookkeeping fields an entry may carry besides its block params.
+_META_FIELDS = ("us_per_call", "default_us_per_call", "impl", "evals")
+
+
+def _pow2(n: int, lo: int = 1) -> int:
+    """Smallest power of two >= max(n, lo) — the jit-cache bucket rule."""
+    return 1 << (max(int(n), lo) - 1).bit_length()
+
+
+def make_key(kernel: str, backend: str, dtype: str, q: int, n: int) -> str:
+    """Table key: ``kernel|backend|dtype|q{bucket}|n{bucket}``.
+
+    (Q, N) are pow2-bucketed exactly like batch shapes in the per-index
+    jit cache, so one tuned entry serves every call that would share a
+    compiled engine.
+    """
+    return f"{kernel}|{backend}|{dtype}|q{_pow2(q)}|n{_pow2(n)}"
+
+
+def parse_key(key: str) -> Tuple[str, str, str, int, int]:
+    """Inverse of :func:`make_key`; raises ``ValueError`` on malformed keys."""
+    parts = key.split("|")
+    if len(parts) != 5:
+        raise ValueError(f"tuning key {key!r}: want 5 '|' fields")
+    kernel, backend, dtype, qs, ns = parts
+    if not (qs.startswith("q") and ns.startswith("n")):
+        raise ValueError(f"tuning key {key!r}: want q<bucket>|n<bucket>")
+    q, n = int(qs[1:]), int(ns[1:])
+    if q != _pow2(q) or n != _pow2(n):
+        raise ValueError(f"tuning key {key!r}: buckets must be powers of 2")
+    return kernel, backend, dtype, q, n
+
+
+def default_table_path() -> str:
+    """Committed ``TUNING.json`` at the repo root (env-overridable)."""
+    env = os.environ.get(TABLE_ENV)
+    if env:
+        return env
+    here = os.path.abspath(__file__)
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(here))))
+    return os.path.join(root, "TUNING.json")
+
+
+class TuningTable:
+    """The committed block-shape table: key -> winner entry.
+
+    An entry holds the tuned knob values for its kernel plus bookkeeping
+    (``us_per_call`` measured at tune time, ``default_us_per_call`` for
+    the same shape at the registry defaults, ``impl``, ``evals``). The
+    table is plain JSON so diffs review like code — re-tuning on new
+    hardware is a normal PR.
+    """
+
+    def __init__(self, entries: Optional[Dict[str, dict]] = None,
+                 version: int = TABLE_VERSION):
+        self.version = version
+        self.entries: Dict[str, dict] = dict(entries or {})
+
+    @classmethod
+    def load(cls, path: str) -> "TuningTable":
+        """Read a table from ``path`` (raises ``OSError`` if missing)."""
+        with open(path) as f:
+            doc = json.load(f)
+        return cls(doc.get("entries", {}), doc.get("version", 0))
+
+    def save(self, path: str) -> None:
+        """Write the table with sorted keys (stable, reviewable diffs)."""
+        doc = {"version": self.version,
+               "entries": {k: self.entries[k] for k in sorted(self.entries)}}
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    def lookup(self, kernel: str, backend: str, dtype: str,
+               q: int, n: int) -> Optional[dict]:
+        """Exact-bucket entry or None (a miss — caller falls back)."""
+        return self.entries.get(make_key(kernel, backend, dtype, q, n))
+
+
+_TABLE: Optional[TuningTable] = None
+_TABLE_LOADED = False
+
+
+def get_table() -> TuningTable:
+    """The process-global table, lazily loaded from :func:`default_table_path`.
+
+    A missing or unreadable file degrades to an empty table (every lookup
+    misses, every kernel runs at registry defaults) — a fresh checkout
+    without ``TUNING.json`` behaves exactly like the pre-tuning code.
+    """
+    global _TABLE, _TABLE_LOADED
+    if not _TABLE_LOADED:
+        try:
+            _TABLE = TuningTable.load(default_table_path())
+        except (OSError, ValueError):
+            _TABLE = TuningTable()
+        _TABLE_LOADED = True
+    return _TABLE
+
+
+def set_table(table: Optional[TuningTable]) -> None:
+    """Install ``table`` as the process-global table (None -> lazy reload).
+
+    Test hook and retune hook; engines already compiled keep the shapes
+    they resolved at trace time (same lifetime rule as the jit caches).
+    """
+    global _TABLE, _TABLE_LOADED
+    _TABLE = table
+    _TABLE_LOADED = table is not None
+
+
+def _current_backend() -> str:
+    import jax
+
+    return jax.default_backend()
+
+
+def resolve_blocks(kernel: str, *, q: int, n: int, dtype: str = "f32",
+                   backend: Optional[str] = None, **overrides) -> Dict[str, int]:
+    """Resolve a kernel's block shapes: explicit kwargs > table > defaults.
+
+    ``overrides`` are the caller's explicit block kwargs; ``None`` values
+    mean "not specified" and fall through to the tuning table (keyed on
+    the current backend unless ``backend`` is given), then to the
+    registry defaults. Returns a dict with every knob of the kernel
+    populated. Resolution never changes answers — block shapes only
+    re-tile the identical per-element computation.
+    """
+    spec = KERNELS[kernel]
+    out = dict(spec.defaults)
+    entry = get_table().lookup(
+        kernel, backend or _current_backend(), dtype, q, n)
+    if entry:
+        out.update({k: int(entry[k]) for k in spec.defaults if k in entry})
+    for name, value in overrides.items():
+        if name not in spec.defaults:
+            raise ValueError(
+                f"{kernel} has no tunable {name!r}; knobs: "
+                f"{sorted(spec.defaults)}")
+        if value is not None:
+            out[name] = int(value)
+    return out
+
+
+# ------------------------------------------------------------- measurement
+def _timeit_us(fn: Callable, *args, repeats: int = 3,
+               warmup: int = 1) -> float:
+    """Median wall-time per call in us (blocks on jax outputs)."""
+    import time
+
+    import jax
+    import numpy as np
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) * 1e6
+
+
+def measure_kernel(kernel: str, *, q: int, n: int,
+                   params: Optional[Dict[str, int]] = None,
+                   impl: str = "auto", length: int = 256, segments: int = 16,
+                   repeats: int = 3, warmup: int = 1, seed: int = 0) -> float:
+    """Time one registered kernel at (Q, N) with the given block params.
+
+    Builds synthetic inputs of the production dtypes, jits the op with
+    the candidate block shapes baked static, and returns median us/call.
+    ``impl="auto"`` times exactly what production resolves to on this
+    backend (reference on CPU — where block shapes are dead knobs and the
+    hillclimb's ``min_gain`` keeps winners at the defaults — compiled
+    Pallas on TPU). The perf-contract suite reuses this same measurement
+    so contracts and tuning never disagree about what was timed.
+    """
+    import functools
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import isax
+    from repro.kernels import ops
+
+    p = dict(KERNELS[kernel].defaults)
+    p.update(params or {})
+    rng = np.random.default_rng(seed)
+    bpp = isax.padded_breakpoints()
+    card = bpp.shape[0] - 1
+
+    if kernel in ("lb_single", "lb_batch", "lb_multi"):
+        sax = jnp.asarray(
+            rng.integers(0, card, size=(n, segments)), jnp.uint8)
+        qp = jnp.asarray(
+            rng.standard_normal((max(q, 1), segments)), jnp.float32)
+        if kernel == "lb_single":
+            fn = functools.partial(
+                ops.lower_bound_sq, qp[0], sax, bpp, length,
+                impl=impl, block_n=p["block_n"])
+        elif kernel == "lb_batch":
+            fn = functools.partial(
+                ops.lower_bound_sq_batch, qp, sax, bpp, length,
+                impl=impl, block_q=p["block_q"], block_n=p["block_n"])
+        else:
+            bn = p["block_n"]
+            n_pad = -(-n // bn) * bn
+            sax_p = jnp.concatenate(
+                [sax, jnp.zeros((n_pad - n, segments), jnp.uint8)])
+            lens = np.full(n_pad // bn, bn, np.int32)
+            if n % bn:
+                lens[-1] = n % bn
+            fn = functools.partial(
+                ops.lower_bound_sq_multi, qp, sax_p, bpp, length,
+                jnp.asarray(lens), impl=impl,
+                block_q=p["block_q"], block_n=bn)
+    elif kernel == "euclid":
+        data = jnp.asarray(
+            rng.standard_normal((n, length)), jnp.float32)
+        qv = jnp.asarray(rng.standard_normal(length), jnp.float32)
+        fn = functools.partial(
+            ops.euclid_sq, qv, data, impl=impl, block_b=p["block_b"])
+    elif kernel == "paa_isax":
+        data = jnp.asarray(
+            rng.standard_normal((n, length)), jnp.float32)
+        fn = functools.partial(
+            ops.paa_isax, data, isax.gaussian_breakpoints(), segments,
+            impl=impl, block_b=p["block_b"])
+    else:
+        raise ValueError(f"unknown kernel {kernel!r}")
+
+    import jax
+
+    jitted = jax.jit(fn)
+    return _timeit_us(jitted, repeats=repeats, warmup=warmup)
+
+
+# --------------------------------------------------------------- autotuner
+@dataclasses.dataclass
+class TuneResult:
+    """One autotune outcome: the table key, its entry, and search stats."""
+
+    key: str
+    params: Dict[str, int]
+    us_per_call: float
+    default_us_per_call: float
+    evals: int
+
+    def entry(self, impl: str) -> dict:
+        """The JSON entry this result commits into the table."""
+        e = dict(self.params)
+        e.update(us_per_call=round(self.us_per_call, 2),
+                 default_us_per_call=round(self.default_us_per_call, 2),
+                 impl=impl, evals=self.evals)
+        return e
+
+
+def autotune(kernel: str, *, q: int, n: int, dtype: str = "f32",
+             backend: Optional[str] = None, impl: str = "auto",
+             timer: Optional[Callable[[Dict[str, int]], float]] = None,
+             min_gain: float = 0.03, repeats: int = 3, warmup: int = 1,
+             max_steps: int = 64) -> TuneResult:
+    """Search one kernel's block-shape lattice at one (Q, N) cell.
+
+    Coordinate-descent from the registry defaults: each knob steps to a
+    lattice neighbor only when the measured time improves by more than
+    ``min_gain`` relative — on backends where a knob is dead (CPU
+    reference path) the search provably stays at the defaults. ``timer``
+    (params -> us) is injectable; the default measures the real op via
+    :func:`measure_kernel` on the current backend. The result's key is
+    bucketed, so committing it serves every call shape in the bucket.
+    """
+    spec = KERNELS[kernel]
+    if timer is None:
+        def timer(params: Dict[str, int]) -> float:
+            return measure_kernel(
+                kernel, q=q, n=n, params=params, impl=impl,
+                repeats=repeats, warmup=warmup)
+    best_params, best_us, history = coordinate_descent(
+        timer, dict(spec.defaults), spec.candidates,
+        min_gain=min_gain, max_steps=max_steps)
+    return TuneResult(
+        key=make_key(kernel, backend or _current_backend(), dtype, q, n),
+        params=best_params,
+        us_per_call=float(best_us),
+        default_us_per_call=float(history[0][1]),
+        evals=len(history),
+    )
+
+
+def retune(*, kernels: Optional[Sequence[str]] = None, impl: str = "auto",
+           backend: Optional[str] = None,
+           table: Optional[TuningTable] = None,
+           timer_for: Optional[Callable[..., Callable]] = None,
+           min_gain: float = 0.03, repeats: int = 3,
+           warmup: int = 1) -> Tuple[TuningTable, List[dict]]:
+    """Re-run the search over every registered kernel's canonical grid.
+
+    Updates (a copy of) the committed table with this backend's winners
+    and returns ``(table, diffs)`` where each diff row carries the key,
+    the previously committed entry (None for a fresh cell), and the new
+    one — ``benchmarks/run.py --retune`` prints these as the
+    committed-vs-measured table and writes the result back out.
+    ``timer_for(kernel, q=, n=)`` optionally supplies a stub timer per
+    cell (tests); by default the real measurement runs.
+    """
+    if table is None:
+        try:
+            table = TuningTable.load(default_table_path())
+        except (OSError, ValueError):
+            table = TuningTable()
+    diffs: List[dict] = []
+    for name in kernels or sorted(KERNELS):
+        spec = KERNELS[name]
+        for q, n in spec.canonical:
+            timer = timer_for(name, q=q, n=n) if timer_for else None
+            res = autotune(
+                name, q=q, n=n, backend=backend, impl=impl, timer=timer,
+                min_gain=min_gain, repeats=repeats, warmup=warmup)
+            new = res.entry(impl)
+            diffs.append(dict(key=res.key,
+                              old=table.entries.get(res.key), new=new))
+            table.entries[res.key] = new
+    return table, diffs
+
+
+# --------------------------------------------------------------- validation
+def validate(table: TuningTable,
+             registry: Optional[Dict[str, KernelSpec]] = None) -> List[str]:
+    """Schema + staleness check of a table against the kernel registry.
+
+    Returns problem strings; empty means the table is valid AND fresh:
+    every key parses, names a registered kernel, carries every knob with
+    a value from that kernel's candidate lattice and a positive measured
+    time — and every registered kernel's canonical (Q, N) grid is covered
+    by at least one backend's entry (a kernel or canonical shape added to
+    the registry without re-tuning makes the committed table stale).
+    """
+    registry = KERNELS if registry is None else registry
+    problems: List[str] = []
+    if table.version != TABLE_VERSION:
+        problems.append(
+            f"table version {table.version} != expected {TABLE_VERSION}")
+    covered = set()
+    for key, entry in table.entries.items():
+        try:
+            kernel, backend, dtype, q, n = parse_key(key)
+        except ValueError as e:
+            problems.append(str(e))
+            continue
+        spec = registry.get(kernel)
+        if spec is None:
+            problems.append(
+                f"{key}: kernel {kernel!r} is not in the registry "
+                "(stale entry — drop it or register the kernel)")
+            continue
+        if not isinstance(entry, dict):
+            problems.append(f"{key}: entry must be an object")
+            continue
+        for knob, lattice in spec.candidates.items():
+            if knob not in entry:
+                problems.append(f"{key}: missing knob {knob!r}")
+            elif entry[knob] not in lattice:
+                problems.append(
+                    f"{key}: {knob}={entry[knob]} not in the candidate "
+                    f"lattice {lattice} (stale vs the registry)")
+        unknown = set(entry) - set(spec.candidates) - set(_META_FIELDS)
+        if unknown:
+            problems.append(f"{key}: unknown fields {sorted(unknown)}")
+        us = entry.get("us_per_call")
+        if not isinstance(us, (int, float)) or us <= 0:
+            problems.append(f"{key}: us_per_call must be a positive number")
+        covered.add((kernel, q, n))
+    for name, spec in registry.items():
+        for q, n in spec.canonical:
+            if (name, _pow2(q), _pow2(n)) not in covered:
+                problems.append(
+                    f"stale table: no entry covers registered kernel "
+                    f"{name!r} at canonical (q={q}, n={n}) on any backend "
+                    "— run benchmarks/run.py --retune and commit the "
+                    "result")
+    return problems
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    """CLI: ``python -m repro.core.tuning --validate`` (the CI drift gate)."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--table", default=None,
+                    help="table path (default: committed TUNING.json)")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema + registry-staleness check (CI gate)")
+    ap.add_argument("--show", action="store_true",
+                    help="print the table entries")
+    args = ap.parse_args(argv)
+    path = args.table or default_table_path()
+    try:
+        table = TuningTable.load(path)
+    except OSError as e:
+        print(f"TUNING-GATE: cannot read {path}: {e}", file=sys.stderr)
+        raise SystemExit(1)
+    except ValueError as e:
+        print(f"TUNING-GATE: {path} is not valid JSON: {e}",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if args.show:
+        for key in sorted(table.entries):
+            print(f"{key}: {table.entries[key]}")
+    problems = validate(table)
+    for p in problems:
+        print(f"TUNING-GATE: {p}", file=sys.stderr)
+    if problems:
+        raise SystemExit(1)
+    print(f"# tuning table ok: {len(table.entries)} entries cover "
+          f"{len(KERNELS)} registered kernels")
+
+
+if __name__ == "__main__":
+    main()
